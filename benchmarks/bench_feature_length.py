@@ -1,0 +1,62 @@
+"""Paper Fig. 5: execution time vs input/output feature length (SAG, Reddit).
+
+(a) sweep input length at fixed out=128: Combination time ~ linear in
+    in_len, Aggregation time CONSTANT (combine-first: independent of in_len);
+(b) sweep output length at fixed in=602: both phases ~ linear in out_len.
+
+Sweet spots: the paper sees power-of-2 dips on V100; the TPU analogue is
+128-multiple MXU tile alignment, reported as pad waste (out_len/128 ceil).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_graph, emit, timeit
+from repro.core.phases import aggregate, aggregate_cost, combine_cost
+from repro.graph.datasets import make_synthetic_graph
+
+
+def _combine_time(g, x, w):
+    f = jax.jit(lambda xx: xx @ w)
+    return timeit(f, x)
+
+
+def _aggregate_time(g, h):
+    f = jax.jit(lambda hh: aggregate(g, hh, op="mean"))
+    return timeit(f, h)
+
+
+def run():
+    spec = bench_graph("reddit", max_vertices=4096)
+    g = make_synthetic_graph(spec)
+    key = jax.random.PRNGKey(0)
+
+    # (a) input length sweep, out fixed at 128 (combine first)
+    for in_len in (64, 128, 250, 256, 512, 602, 1024):
+        x = jax.random.normal(key, (g.num_vertices, in_len))
+        w = jax.random.normal(key, (in_len, 128)) * 0.05
+        t_comb = _combine_time(g, x, w)
+        t_agg = _aggregate_time(g, x @ w)
+        emit(f"fig5a/in_{in_len}", t_comb + t_agg,
+             comb_us=round(t_comb, 1), agg_us=round(t_agg, 1),
+             agg_analytic_bytes=aggregate_cost(g, 128)["bytes"],
+             mxu_pad_waste=round(128 * -(-in_len // 128) / in_len - 1, 3))
+
+    # (b) output length sweep, in fixed at 602
+    x = jax.random.normal(key, (g.num_vertices, 602))
+    for out_len in (16, 64, 100, 128, 256, 512):
+        w = jax.random.normal(key, (602, out_len)) * 0.05
+        t_comb = _combine_time(g, x, w)
+        t_agg = _aggregate_time(g, x @ w)
+        emit(f"fig5b/out_{out_len}", t_comb + t_agg,
+             comb_us=round(t_comb, 1), agg_us=round(t_agg, 1),
+             agg_analytic_bytes=aggregate_cost(g, out_len)["bytes"],
+             comb_analytic_flops=combine_cost(g.num_vertices,
+                                              (602, out_len))["flops"],
+             mxu_pad_waste=round(128 * -(-out_len // 128) / out_len - 1, 3))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Beyond-paper: Pallas kernel benchmarks (interpret-mode correctness +
+modeled TPU utilization) and the fused-dataflow guideline (paper §5.1-3).
+
+Interpret-mode timing is meaningless for TPU perf; what we measure:
+  * XLA path wall-clock for fused vs unfused dataflow (the HBM-traffic
+    effect is visible even on CPU),
+  * analytic VMEM footprint + MXU-alignment of the kernel tilings,
+  * numerics of the Pallas kernels at benchmark shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, emit, timeit
+from repro.core.characterize import VMEM_BYTES
+from repro.core.dataflow import block_graph, fused_gcn_layer, suggest_tile_m
+from repro.core.phases import phase_ordered_layer
+from repro.graph.datasets import make_features, make_synthetic_graph
+from repro.kernels import ops
+from repro.kernels.ref import seg_agg_ref
+
+
+def run():
+    spec = bench_graph("reddit", max_vertices=4096, max_feature=256)
+    g = make_synthetic_graph(spec)
+    x = make_features(spec)
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * 0.05
+
+    # fused vs unfused dataflow (XLA backend)
+    tile_m = suggest_tile_m(256, 128, g.num_edges / g.num_vertices)
+    bg = block_graph(g, min(tile_m, 512))
+    fused = jax.jit(lambda xx: fused_gcn_layer(
+        bg, xx, w, None, agg_op="mean", in_deg=g.in_deg))
+    unfused = jax.jit(lambda xx: phase_ordered_layer(
+        g, xx, [(w, None)], order="combine_first", agg_op="mean",
+        activation="none"))
+    t_f = timeit(fused, x)
+    t_u = timeit(unfused, x)
+    err = float(jnp.abs(fused(x) - unfused(x)).max())
+    emit("kernels/fused_dataflow", t_f,
+         unfused_us=round(t_u, 1), speedup=round(t_u / t_f, 2),
+         max_err=f"{err:.1e}", tile_m=bg.tile_m)
+
+    # VMEM budgets of the kernel tilings (structural roofline inputs)
+    for (fi, fo, tm, te) in [(602, 128, 128, 512), (256, 128, 256, 512)]:
+        vmem = (fi * fo + tm * fi + tm * fo + te * fi) * 4
+        emit(f"kernels/fused_vmem_f{fi}", 0.0,
+             vmem_bytes=vmem, vmem_frac=round(vmem / VMEM_BYTES, 3),
+             mxu_aligned=bool(fo % 128 == 0 and tm % 8 == 0))
+
+    # Pallas numerics at benchmark shapes (interpret mode)
+    rng = np.random.default_rng(0)
+    nb, emax, f, tm = 2, 512, 128, 128
+    rows = jnp.asarray(rng.standard_normal((nb, emax, f)), jnp.float32)
+    seg = jnp.asarray(np.sort(rng.integers(0, tm, (nb, emax))), jnp.int32)
+    mask = jnp.ones((nb, emax), jnp.float32)
+    out = ops.seg_agg_pregrouped(rows, seg, mask, tile_m=tm)
+    gseg = (seg + jnp.arange(nb)[:, None] * tm).reshape(-1)
+    ref = seg_agg_ref(rows.reshape(-1, f), gseg, mask.reshape(-1), nb * tm)
+    emit("kernels/seg_agg_numerics", 0.0,
+         max_err=f"{float(jnp.abs(out - ref).max()):.1e}",
+         mxu_reduction=True)
+
+
+if __name__ == "__main__":
+    run()

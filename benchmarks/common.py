@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: timing, CSV emission, scaled datasets.
+
+CPU wall-times here are CORRECTNESS-SHAPED, not TPU predictions: they verify
+relative effects the paper reports (breakdown shares, ordering speedups,
+linear scaling).  TPU-roofline numbers come from the dry-run artifacts
+(benchmarks/roofline.py), never from CPU timing.
+
+Datasets are scaled-down replicas (same degree distribution, same
+feature-length RATIOS) sized so the full suite runs in minutes on CPU; the
+analytic tables additionally report the paper's full-size numbers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.config import GRAPHS, GraphSpec, reduced_graph
+
+ROWS: List[Dict] = []
+
+
+def emit(name: str, us_per_call: float, **derived):
+    row = {"name": name, "us_per_call": round(us_per_call, 2)}
+    row.update(derived)
+    ROWS.append(row)
+    extras = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{row['us_per_call']},{extras}")
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of jitted fn; blocks on result leaves."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def bench_graph(name: str, max_vertices: int = 8192,
+                max_feature: int = 100000) -> GraphSpec:
+    """Scaled dataset preserving |E|/|V| and feature length (unless capped)."""
+    return reduced_graph(GRAPHS[name], max_vertices, max_feature)

@@ -1,0 +1,52 @@
+"""Roofline table from dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch x shape x mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, roofline fraction, and
+fits-HBM.  This is a REPORTER -- it never touches jax devices, so it runs
+inside the normal benchmark process.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run():
+    if not DRYRUN_DIR.exists():
+        emit("roofline/missing", 0.0,
+             note="run `python -m repro.launch.dryrun` first")
+        return
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except Exception:  # noqa: BLE001
+            continue
+    for r in recs:
+        if r.get("status") != "ok":
+            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                 tag=r.get("tag", "baseline"), status="ERROR",
+                 error=r.get("error", "")[:80])
+            continue
+        rl = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             rl["compute_s"] * 1e6,
+             tag=r.get("tag", "baseline"),
+             compute_s=f"{rl['compute_s']:.4f}",
+             memory_s=f"{rl['memory_s']:.4f}",
+             collective_s=f"{rl['collective_s']:.4f}",
+             dominant=rl["dominant"],
+             useful_ratio=round(rl["useful_ratio"], 3),
+             roofline_fraction=round(rl["roofline_fraction"], 4),
+             peak_gib=round(r.get("peak_bytes_per_device", 0) / 2 ** 30, 2),
+             fits_16g=r.get("fits_16g"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived...`` CSV rows (benchmarks/common.emit).
+
+  bench_breakdown       Fig. 1  execution-time breakdown
+  bench_agg_vs_pgr      Fig. 2  Aggregation vs PageRank + reorder guideline
+  bench_phase_metrics   Fig. 2(f,g)/Table 3  hybrid execution patterns
+  bench_ordering        Table 4 phase-ordering impact (+distributed halo)
+  bench_feature_length  Fig. 5  input/output length sweeps
+  bench_kernels         beyond-paper: Pallas kernels + fused dataflow
+  roofline              deliverable (g): dry-run roofline table
+
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_agg_vs_pgr, bench_breakdown,
+                            bench_feature_length, bench_kernels,
+                            bench_ordering, bench_phase_metrics, roofline)
+    modules = {
+        "bench_breakdown": bench_breakdown,
+        "bench_agg_vs_pgr": bench_agg_vs_pgr,
+        "bench_phase_metrics": bench_phase_metrics,
+        "bench_ordering": bench_ordering,
+        "bench_feature_length": bench_feature_length,
+        "bench_kernels": bench_kernels,
+        "roofline": roofline,
+    }
+    selected = sys.argv[1:] or list(modules)
+    failures = 0
+    for name in selected:
+        print(f"# === {name} ===")
+        try:
+            modules[name].run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: the paper's workload end-to-end in ~a minute on CPU.
+
+Builds synthetic Cora, trains a 2-layer GCN with the phase-ordering
+scheduler in `auto` mode, prints the per-phase characterization (paper
+Table 3/4 views), and evaluates accuracy.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CORA, reduced_graph
+from repro.core.scheduler import reduction_ratios
+from repro.graph.datasets import make_features, make_labels, \
+    make_synthetic_graph
+from repro.models.gcn import make_paper_model
+
+
+def main():
+    spec = reduced_graph(CORA, max_vertices=1024, max_feature=256)
+    g = make_synthetic_graph(spec)
+    x = make_features(spec)
+    y = make_labels(spec)
+    # plant a learnable signal (synthetic labels are otherwise random)
+    x = x.at[:, :spec.num_classes].add(
+        4.0 * jax.nn.one_hot(y, spec.num_classes))
+
+    model = make_paper_model("gcn", spec)
+    params = model.init(jax.random.PRNGKey(0))
+
+    print("== phase characterization (first conv layer) ==")
+    costs = model.layer_costs(g)
+    print(f" chosen ordering : {costs['order']}")
+    print(f" aggregation     : {costs['aggregation']['bytes']:,} bytes, "
+          f"AI={costs['aggregation']['arithmetic_intensity']:.3f}")
+    print(f" combination     : {costs['combination']['bytes']:,} bytes, "
+          f"AI={costs['combination']['arithmetic_intensity']:.1f}")
+    r = reduction_ratios(g, spec.feature_len, 128)
+    print(f" ordering wins   : {r['data_access_reduction']:.2f}x fewer "
+          f"aggregation bytes (paper Table 4: 4.75x on Reddit)")
+
+    print("\n== training ==")
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p: model.loss_fn(p, g, x, y)))
+    lr = 0.2
+    for step in range(120):
+        loss, grads = loss_grad(params)
+        params = jax.tree.map(lambda a, b: a - lr * b, params, grads)
+        if step % 20 == 0:
+            print(f" step {step:3d}  loss {float(loss):.4f}")
+
+    logits = model.apply(params, g, x)
+    acc = float((jnp.argmax(logits, -1) == y).mean())
+    print(f"\nfinal accuracy: {acc:.3f} "
+          f"(chance {1 / spec.num_classes:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""End-to-end training driver: train a ~100M-param LM with the full runtime
+(pipeline, AdamW+cosine, async checkpointing, fault-tolerant trainer).
+
+Default invocation trains a granite-family ~100M model for a few hundred
+steps on synthetic Zipf tokens:
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+
+CPU throughput note: ~100M params at batch 8 x seq 256 is ~2-6 s/step on a
+laptop-class CPU; use --preset tiny for a smoke run.  Any assigned arch is
+selectable: ``--arch gemma2-9b --preset smoke`` trains that family's
+reduced config.
+
+Resumability: re-running the same command continues from the newest
+checkpoint (kill it mid-run and restart to see).
+"""
+
+import argparse
+import dataclasses
+import importlib
+import logging
+
+import jax
+
+from repro.config import (AttentionConfig, LMConfig, OptimizerConfig,
+                          ShapeSpec, TrainConfig)
+from repro.data.pipeline import TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models.transformer import init_lm
+from repro.optim.optimizer import make_train_state
+from repro.train.trainer import Trainer
+
+MODULES = {
+    "kimi-k2-1t-a32b": "kimi_k2", "arctic-480b": "arctic_480b",
+    "deepseek-67b": "deepseek_67b", "gemma2-9b": "gemma2_9b",
+    "gemma-7b": "gemma_7b", "granite-3-8b": "granite_3_8b",
+    "jamba-1.5-large-398b": "jamba_1_5_large", "internvl2-1b": "internvl2_1b",
+    "mamba2-2.7b": "mamba2_2_7b",
+}
+
+
+def model_100m() -> LMConfig:
+    """granite-family ~100M: 12L d=640 10H kv=2 ffn 1792 vocab 32768."""
+    return LMConfig(
+        name="granite-100m", family="dense", num_layers=12, d_model=640,
+        d_ff=1792, vocab_size=32768,
+        attention=AttentionConfig(num_heads=10, num_kv_heads=2, head_dim=64),
+        mlp_activation="swiglu", tie_embeddings=True, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-100m",
+                    help="granite-100m | any assigned arch id (reduced)")
+    ap.add_argument("--preset", default="full", choices=["full", "tiny",
+                                                         "smoke"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    if args.arch == "granite-100m":
+        cfg = model_100m()
+    else:
+        mod = importlib.import_module(f"repro.configs.{MODULES[args.arch]}")
+        cfg = dataclasses.replace(mod.reduced(), dtype="float32")
+    if args.preset == "tiny":
+        cfg = dataclasses.replace(cfg, num_layers=4, d_model=256, d_ff=704,
+                                  vocab_size=8192)
+    elif args.preset == "smoke":
+        args.steps, args.batch, args.seq = min(args.steps, 5), 2, 32
+
+    n = cfg.param_count()
+    print(f"arch={cfg.name}  params={n/1e6:.1f}M  steps={args.steps}  "
+          f"batch={args.batch}x{args.seq}")
+
+    shape = ShapeSpec("train_cli", args.seq, args.batch, "train")
+    opt = OptimizerConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                          total_steps=args.steps)
+    tc = TrainConfig(model=cfg.name, steps=args.steps, optimizer=opt,
+                     checkpoint_dir=args.ckpt_dir, checkpoint_every=50,
+                     log_every=10)
+    pipeline = TokenPipeline(cfg, shape, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+    make_state = lambda: make_train_state(  # noqa: E731
+        init_lm(cfg, jax.random.PRNGKey(0)), opt)
+
+    trainer = Trainer(tc, make_state=make_state, step_fn=step_fn,
+                      pipeline=pipeline)
+    result = trainer.run()
+    hist = result["history"]
+    print(f"\ndone: loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {args.steps} steps; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

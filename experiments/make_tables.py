@@ -1,0 +1,93 @@
+"""Generate EXPERIMENTS.md markdown tables from dry-run artifacts."""
+
+import json
+import sys
+from pathlib import Path
+
+DIR = Path(__file__).parent / "dryrun"
+ORDER = ["kimi-k2-1t-a32b", "arctic-480b", "deepseek-67b", "gemma2-9b",
+         "gemma-7b", "granite-3-8b", "jamba-1.5-large-398b", "internvl2-1b",
+         "seamless-m4t-medium", "mamba2-2.7b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def load(tag="baseline"):
+    recs = {}
+    for p in DIR.glob("*.json"):
+        r = json.loads(p.read_text())
+        if r.get("tag", "baseline") != tag:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def roofline_table(mesh="single", tag="baseline"):
+    recs = load(tag)
+    print(f"\n### Roofline — {mesh}-pod ({tag})\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "HLO flops/dev | model flops/dev | useful | roofline frac | "
+          "peak GiB | fits 16G |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ORDER:
+        for shape in SHAPES:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                print(f"| {arch} | {shape} | — | — | — | SKIP | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} | {shape} | ERROR: "
+                      f"{r.get('error','')[:60]} ||||||||||")
+                continue
+            rl = r["roofline"]
+            print(f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} | "
+                  f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+                  f"**{rl['dominant']}** | {rl['flops']:.2e} | "
+                  f"{rl['model_flops']:.2e} | {rl['useful_ratio']:.2f} | "
+                  f"{rl['roofline_fraction']:.4f} | "
+                  f"{r['peak_bytes_per_device']/2**30:.1f} | "
+                  f"{'Y' if r['fits_16g'] else 'N'} |")
+
+
+def dryrun_table(tag="baseline"):
+    recs = load(tag)
+    print("\n### Dry-run matrix (compile status, both meshes)\n")
+    print("| arch | shape | single-pod | multi-pod | bytes/dev (multi) | "
+          "collective bytes/dev (multi) | dominant collective |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ORDER:
+        for shape in SHAPES:
+            s = recs.get((arch, shape, "single"))
+            m = recs.get((arch, shape, "multi"))
+            if s is None and m is None:
+                print(f"| {arch} | {shape} | SKIP | SKIP | | | |")
+                continue
+
+            def st(r):
+                if r is None:
+                    return "—"
+                return "ok" if r["status"] == "ok" else "ERR"
+            extra = ["", "", ""]
+            if m and m["status"] == "ok":
+                coll = m["collective"]
+                dom = max((k for k in coll if k != "total"),
+                          key=lambda k: coll[k])
+                extra = [f"{m['peak_bytes_per_device']/2**30:.1f} GiB",
+                         f"{coll['total']:.2e}",
+                         f"{dom} ({coll[dom]:.1e})"]
+            print(f"| {arch} | {shape} | {st(s)} | {st(m)} | {extra[0]} | "
+                  f"{extra[1]} | {extra[2]} |")
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    dryrun_table(tag)
+    roofline_table("single", tag)
+    roofline_table("multi", tag)

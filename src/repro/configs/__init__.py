@@ -1,0 +1,22 @@
+"""Assigned-architecture registry: importing this package registers all archs.
+
+Each module defines the EXACT published config from the assignment table plus
+a ``reduced()`` smoke-test variant (same family, tiny dims).
+"""
+
+from repro.configs import (arctic_480b, deepseek_67b, gemma2_9b, gemma_7b,
+                           granite_3_8b, internvl2_1b, jamba_1_5_large,
+                           kimi_k2, mamba2_2_7b, seamless_m4t_medium)
+
+ASSIGNED_ARCHS = (
+    "kimi-k2-1t-a32b",
+    "arctic-480b",
+    "deepseek-67b",
+    "gemma2-9b",
+    "gemma-7b",
+    "granite-3-8b",
+    "jamba-1.5-large-398b",
+    "internvl2-1b",
+    "seamless-m4t-medium",
+    "mamba2-2.7b",
+)

@@ -1,0 +1,4 @@
+# The paper's primary contribution: phase-split execution of GCNs
+# (Aggregation vs Combination), the phase-ordering scheduler (Table 4),
+# tiled inter-phase dataflow (F5), and the characterization machinery.
+from repro.core import characterize, dataflow, gcn_layers, phases, scheduler

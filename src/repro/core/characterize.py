@@ -1,0 +1,259 @@
+"""Characterization machinery: paper metrics + roofline terms from compiled HLO.
+
+The paper's V100 counters (L2 hit rate, occupancy, IPC...) do not exist here;
+the architecture-neutral quantities behind them do.  This module derives:
+
+  * per-phase FLOPs / bytes / arithmetic intensity  (Table 3),
+  * bound classification against a machine balance point,
+  * HLO-level cost extraction (``cost_analysis``) for any jitted step,
+  * collective-byte extraction by parsing lowered HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute),
+  * the three roofline terms for TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+    ~50 GB/s/link ICI), per DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW_PER_LINK = 50e9        # bytes/s per link
+ICI_LINKS = 4                 # v5e: 4 ICI links per chip (2D torus: +-x, +-y)
+VMEM_BYTES = 128 * 1024 * 1024
+MXU_DIM = 128
+
+#: machine balance: FLOPs per byte at which compute and HBM time are equal
+MACHINE_BALANCE = PEAK_FLOPS_BF16 / HBM_BW  # ~240 flop/byte
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(tok_dtype: str, tok_dims: str) -> int:
+    if tok_dims.strip() == "":
+        n = 1
+    else:
+        n = int(np.prod([int(d) for d in tok_dims.split(",") if d]))
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in lowered/compiled HLO text.
+
+    Returns {op_name: bytes, ..., "total": bytes}.  Counts the bytes each
+    collective *moves in* (operand side), matching the roofline convention of
+    DESIGN.md §7.  Start ops (``all-gather-start``) are counted; matching
+    ``-done`` ops are skipped to avoid double counting, as are fusion-internal
+    mentions of collectives inside metadata strings.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    count: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # HLO instruction lines look like:  %name = TYPE[dims] op-name(operands...)
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        opname = m.group(2)
+        base = None
+        for c in _COLLECTIVE_OPS:
+            if opname == c or opname == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # operand shapes: everything inside the call parens
+        call = s[s.index(opname + "(") + len(opname) + 1:]
+        depth, end = 1, 0
+        for i, ch in enumerate(call):
+            depth += (ch == "(") - (ch == ")")
+            if depth == 0:
+                end = i
+                break
+        operands = call[:end]
+        b = sum(shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(operands))
+        out[base] += b
+        count[base] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVE_OPS)
+    out["counts"] = dict(count)  # type: ignore[assignment]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compiled-step cost extraction
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepCost:
+    flops: float
+    hbm_bytes: float
+    collective: Dict[str, int] = field(default_factory=dict)
+    peak_memory_per_device: Optional[float] = None
+    output_bytes: Optional[float] = None
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1.0, self.hbm_bytes)
+
+
+def cost_from_compiled(compiled, lowered=None) -> StepCost:
+    """Extract FLOPs/bytes from ``compiled.cost_analysis()`` + HLO collectives."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byt = float(ca.get("bytes accessed", 0.0))
+    coll = {}
+    try:
+        coll = collective_bytes(compiled.as_text())
+    except Exception:
+        if lowered is not None:
+            coll = collective_bytes(lowered.as_text())
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(getattr(ma, "temp_size_in_bytes", 0) +
+                     getattr(ma, "argument_size_in_bytes", 0) +
+                     getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return StepCost(flops=flops, hbm_bytes=byt, collective=coll,
+                    peak_memory_per_device=peak)
+
+
+def cost_of(fn, *args, static_argnums=(), **jit_kw) -> StepCost:
+    """Lower+compile ``fn(*args)`` (abstract -- args may be ShapeDtypeStructs)."""
+    lowered = jax.jit(fn, static_argnums=static_argnums, **jit_kw).lower(*args)
+    compiled = lowered.compile()
+    return cost_from_compiled(compiled, lowered)
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    chips: int
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound on step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound step time (the score we hillclimb).
+
+        Uses MODEL_FLOPS (6ND, already per-device here) when available so
+        redundant compiled compute (remat, dispatch overhead) counts
+        against us, per the brief.
+        """
+        useful = self.model_flops or self.flops
+        ideal = useful / PEAK_FLOPS_BF16
+        return ideal / max(self.step_time_s, 1e-30)
+
+    @property
+    def mfu(self) -> float:
+        return self.roofline_fraction
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": (self.model_flops / self.flops) if self.flops else 0,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(cost: StepCost, chips: int, model_flops: float = 0.0) -> Roofline:
+    """Three-term roofline per DESIGN.md §7.
+
+    Conventions (verified empirically on this backend, see EXPERIMENTS.md
+    §Dry-run methodology): the compiled module is the PER-DEVICE SPMD
+    program, so ``cost`` carries per-device FLOPs/bytes/collective-bytes
+    (trip-count-aware, via core.hlo_cost).  Terms are therefore per-device
+    quantities over per-chip peaks; ``model_flops`` is the GLOBAL 6ND number
+    and is divided by ``chips`` for the useful-compute comparison.
+    """
+    flops = cost.flops
+    byt = cost.hbm_bytes
+    coll = float(cost.collective.get("total", 0))
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=byt / HBM_BW,
+        collective_s=coll / (ICI_LINKS * ICI_BW_PER_LINK),
+        chips=chips, flops=flops, hbm_bytes=byt, collective_bytes=coll,
+        model_flops=model_flops / max(chips, 1))
+
+
+# ---------------------------------------------------------------------------
+# Paper Table 3: hybrid execution pattern report
+# ---------------------------------------------------------------------------
+
+
+#: V100 fp32 balance (15.7 TFLOP/s / 900 GB/s) -- the PAPER's classification
+#: point.  v5e bf16 balance is ~240: a GEMM that is compute-bound on V100
+#: (AI ~50) is memory-bound on v5e unless batched/fused wider -- a real
+#: hardware-adaptation finding, reported alongside (DESIGN.md §2).
+V100_BALANCE = 15.7e12 / 900e9
+
+
+def phase_report(agg_cost: dict, comb_cost: dict) -> Dict[str, Any]:
+    """Classify each phase against machine balance (Table 3 reproduction)."""
+    def classify(c):
+        ai = c["arithmetic_intensity"]
+        return {
+            "arithmetic_intensity": ai,
+            # paper-faithful classification (V100 balance)
+            "bound": "memory" if ai < V100_BALANCE else "compute",
+            # TPU v5e adaptation
+            "bound_v5e": "memory" if ai < MACHINE_BALANCE else "compute",
+            "bytes": c["bytes"], "flops": c["flops"],
+            # paper's "DRAM bytes per operation"
+            "bytes_per_op": c["bytes"] / max(1, c["flops"]),
+        }
+    return {"aggregation": classify(agg_cost),
+            "combination": classify(comb_cost),
+            "machine_balance_v100": V100_BALANCE,
+            "machine_balance_v5e": MACHINE_BALANCE}

@@ -1,0 +1,136 @@
+"""Inter-phase dataflow execution at adaptive granularity (paper F5, §5.1-3).
+
+The paper: "a vertex is able to start the execution in Combination phase after
+this vertex completes its aggregation ... the implementation of GCNs on GPU
+misses this inter-phase dataflow", causing the aggregated intermediate to make
+a full HBM round-trip and phase-level barriers to serialize memory-bound and
+compute-bound work.
+
+This module provides the *tiled* executor: destination vertices are processed
+in blocks of ``tile_m`` rows; each block is aggregated and immediately
+combined while the next block's edges stream in.  Two backends:
+
+  * ``xla``    -- lax.scan over vertex blocks; XLA keeps the per-block
+    aggregate in registers/cache rather than a (V, F) HBM intermediate.
+  * ``pallas`` -- the fused gather->reduce->GEMM kernel
+    (kernels/fused_agg_combine.py) where the block accumulator lives in VMEM
+    and the weight tile is VMEM-resident across all blocks.
+
+Granularity (``tile_m``) is the paper's "adaptive execution granularity":
+large tiles amortize the weight-tile reuse (compute efficiency), small tiles
+shrink the working set and expose pipeline overlap.  ``suggest_tile_m`` picks
+the largest tile whose working set fits VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.characterize import VMEM_BYTES
+from repro.graph.structure import Graph
+
+
+class BlockedGraph(NamedTuple):
+    """Edges regrouped by destination block with per-block static capacity.
+
+    src:   (nblocks, emax) int32 global source ids (padded).
+    dstl:  (nblocks, emax) int32 destination row LOCAL to the block.
+    mask:  (nblocks, emax) f32.
+    tile_m: rows per block; num_vertices: real vertex count.
+    """
+
+    src: jnp.ndarray
+    dstl: jnp.ndarray
+    mask: jnp.ndarray
+    tile_m: int
+    num_vertices: int
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def emax(self) -> int:
+        return int(self.src.shape[1])
+
+
+def block_graph(g: Graph, tile_m: int) -> BlockedGraph:
+    """Host-side regroup of a destination-sorted graph into row blocks."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    v = g.num_vertices
+    nblocks = -(-v // tile_m)
+    blk = dst // tile_m
+    counts = np.bincount(blk, minlength=nblocks)
+    emax = max(8, int(-(-counts.max() // 8) * 8))
+    bs = np.zeros((nblocks, emax), np.int32)
+    bd = np.zeros((nblocks, emax), np.int32)
+    bm = np.zeros((nblocks, emax), np.float32)
+    # edges are dst-sorted, so each block is one contiguous slice
+    starts = np.zeros(nblocks + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for b in range(nblocks):
+        lo, hi = starts[b], starts[b + 1]
+        e = hi - lo
+        bs[b, :e] = src[lo:hi]
+        bd[b, :e] = dst[lo:hi] - b * tile_m
+        bm[b, :e] = 1.0
+    return BlockedGraph(jnp.asarray(bs), jnp.asarray(bd), jnp.asarray(bm),
+                        tile_m, v)
+
+
+def suggest_tile_m(in_len: int, out_len: int, avg_deg: float,
+                   dtype_bytes: int = 4, vmem_budget: int = VMEM_BYTES // 2
+                   ) -> int:
+    """Largest MXU-aligned tile whose fused working set fits the VMEM budget.
+
+    Working set per block: W (in*out) + accumulator (m*in) + output (m*out)
+    + gathered rows stream (avg_deg*m*in, double-buffered factor 2).
+    """
+    w = in_len * out_len * dtype_bytes
+    per_row = (in_len + out_len + 2 * avg_deg * in_len) * dtype_bytes
+    m = max(8, int((vmem_budget - w) / max(per_row, 1)))
+    return int(max(8, min(4096, (m // 8) * 8)))
+
+
+def fused_gcn_layer(bg: BlockedGraph, x: jnp.ndarray, w: jnp.ndarray,
+                    bias: Optional[jnp.ndarray] = None, *, agg_op: str = "mean",
+                    in_deg: Optional[jnp.ndarray] = None,
+                    impl: str = "xla") -> jnp.ndarray:
+    """Aggregate-then-combine per vertex block; intermediate never spans V.
+
+    Semantics: combine(aggregate(x))  == aggregate_first with single matmul;
+    by linearity identical to combine_first, so this is a pure execution-
+    granularity change (the paper's point).
+
+    x: (V, F_in) padded to block multiple internally.  w: (F_in, F_out).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.fused_agg_combine(bg.src, bg.dstl, bg.mask, x, w,
+                                     tile_m=bg.tile_m)
+    else:
+        def body(carry, blk):
+            src, dstl, mask = blk
+            rows = jnp.take(x, src, axis=0) * mask[:, None]      # gather
+            agg = jax.ops.segment_sum(rows, dstl, num_segments=bg.tile_m)
+            out_blk = agg @ w                                     # fuse: GEMM now
+            return carry, out_blk
+        _, blocks = jax.lax.scan(body, 0, (bg.src, bg.dstl, bg.mask))
+        out = blocks.reshape(bg.nblocks * bg.tile_m, w.shape[1])
+
+    out = out[: bg.num_vertices]
+    # self contribution + mean normalization (linear, applied post-GEMM)
+    if agg_op == "mean":
+        assert in_deg is not None
+        out = (out + x[: bg.num_vertices] @ w) / (
+            in_deg.astype(out.dtype) + 1.0)[:, None]
+    elif agg_op == "sum_self":
+        out = out + x[: bg.num_vertices] @ w
+    if bias is not None:
+        out = out + bias
+    return out

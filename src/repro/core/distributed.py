@@ -1,0 +1,168 @@
+"""Distributed GCN execution: vertex-partitioned aggregation via shard_map.
+
+The paper profiles a single GPU; this module is the cluster-scale story its
+Table 4 implies (DESIGN.md §8.5): with a 1-D destination partition the
+Aggregation phase's remote traffic is one feature row per cut edge, so
+running Combination first shrinks the COLLECTIVE term by in_len/out_len --
+the multi-chip restatement of the paper's 4.7x.
+
+Two interchangeable aggregation strategies (both exact):
+
+  * ``allgather``  -- one all-gather of the full feature matrix per layer,
+    then purely local gather+segment-reduce.  Simple; wire bytes V*F.
+  * ``ring``       -- P-1 ``collective_permute`` steps around the data-axis
+    ring; at each step every device reduces the contributions of the block
+    it currently holds while the next block is in flight.  Same total wire
+    bytes, but O(V/P * F) resident and compute/comm OVERLAPPED -- the
+    distributed-optimization trick the brief asks for, expressed in
+    jax-native collectives.
+
+Both run under shard_map on the ``data`` axis; per-shard edge lists come
+from graph.partition (edge-balanced, padded static shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.graph.partition import PartitionedGraph
+
+
+def pad_features(x: jnp.ndarray, block: int, num_shards: int) -> jnp.ndarray:
+    """Pad vertex features to num_shards*block rows (partition layout)."""
+    total = block * num_shards
+    v = x.shape[0]
+    return jnp.pad(x, ((0, total - v), (0, 0)))
+
+
+def _require_uniform(pg: PartitionedGraph) -> None:
+    """The shard_map strategies lay out rows as p*block + local; that needs
+    the UNIFORM partition (partition_1d(..., edge_balanced=False)).  The
+    edge-balanced variant feeds the analytic load model instead."""
+    starts = np.asarray(pg.vtx_start)
+    expect = np.arange(pg.num_shards) * pg.block_size
+    expect = np.minimum(expect, pg.num_vertices)
+    if not np.array_equal(starts, expect):
+        raise ValueError(
+            "distributed aggregation requires a uniform partition; build "
+            "with partition_1d(g, P, edge_balanced=False)")
+
+
+def _local_agg(x_full, src, dst_local, mask, block):
+    rows = jnp.take(x_full, src, axis=0) * mask[:, None]
+    return jax.ops.segment_sum(rows, dst_local, num_segments=block)
+
+
+def aggregate_allgather(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
+                        axis: str = "data") -> jnp.ndarray:
+    """x: (P*block, F) sharded over `axis` -> aggregated (P*block, F)."""
+    _require_uniform(pg)
+    block = pg.block_size
+
+    def fn(x_local, src, dst_local, mask, starts):
+        x_full = jax.lax.all_gather(x_local[0], axis, tiled=True)
+        out = _local_agg(x_full, src[0] - 0, dst_local[0], mask[0], block)
+        return out[None]
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None),
+                  P(axis)),
+        out_specs=P(axis, None), check_rep=False,
+    )(x.reshape(pg.num_shards, -1, x.shape[-1]), pg.src, pg.dst_local,
+      pg.mask, pg.vtx_start).reshape(x.shape[0], x.shape[-1])
+
+
+def aggregate_ring(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
+                   axis: str = "data") -> jnp.ndarray:
+    """Ring halo exchange: P-1 collective_permutes, partial reduce per hop.
+
+    Device p holds block b_k = (p + k) mod P at hop k and reduces the edges
+    whose source lies in b_k.  The permute of hop k+1 can overlap the
+    reduce of hop k on real hardware (async collective start).
+    """
+    _require_uniform(pg)
+    block = pg.block_size
+    nsh = pg.num_shards
+
+    def fn(x_local, src, dst_local, mask):
+        x_loc = x_local[0]
+        srcl, dstl, mskl = src[0], dst_local[0], mask[0]
+        p = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % nsh) for i in range(nsh)]  # ring
+
+        def hop(carry, k):
+            buf, acc = carry
+            # ring sends i -> i+1, so after k hops we hold block (p - k)
+            owner = jnp.mod(p - k, nsh)               # whose block we hold
+            sel = (srcl // block) == owner
+            local_src = srcl - owner * block
+            rows = jnp.take(buf, jnp.clip(local_src, 0, block - 1), axis=0)
+            rows = rows * (mskl * sel)[:, None]
+            acc = acc + jax.ops.segment_sum(rows, dstl, num_segments=block)
+            buf = jax.lax.ppermute(buf, axis, perm)   # pass block onward
+            return (buf, acc), None
+
+        acc0 = jnp.zeros((block, x_loc.shape[-1]), x_loc.dtype)
+        (_, acc), _ = jax.lax.scan(hop, (x_loc, acc0), jnp.arange(nsh))
+        return acc[None]
+
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=P(axis, None), check_rep=False,
+    )(x.reshape(nsh, -1, x.shape[-1]), pg.src, pg.dst_local,
+      pg.mask).reshape(x.shape[0], x.shape[-1])
+
+
+def halo_bytes(pg: PartitionedGraph, feature_len: int,
+               dtype_bytes: int = 4) -> dict:
+    """Analytic collective cost of one distributed Aggregation (both strats).
+
+    Reported by bench_ordering to show the combine-first collective saving.
+    """
+    v_padded = pg.block_size * pg.num_shards
+    per_device = v_padded * feature_len * dtype_bytes * \
+        (pg.num_shards - 1) / pg.num_shards
+    # cut edges: sources not owned by the destination shard
+    src = np.asarray(pg.src)
+    starts = np.asarray(pg.vtx_start)
+    owners = np.clip(np.searchsorted(starts, src, side="right") - 1, 0,
+                     pg.num_shards - 1)
+    mine = owners == np.arange(pg.num_shards)[:, None]
+    cut_edges = int((np.asarray(pg.mask) * ~mine).sum())
+    return {
+        "allgather_bytes_per_device": per_device,
+        "ring_bytes_per_device": per_device,  # same total, overlapped
+        "cut_edges": cut_edges,
+        "min_halo_bytes": cut_edges * feature_len * dtype_bytes,
+    }
+
+
+def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
+                          mesh: Mesh, *, order: str = "combine_first",
+                          strategy: str = "ring", axis: str = "data"):
+    """One distributed GCN layer with explicit phase ordering (Table 4).
+
+    combine_first: project locally (embarrassingly parallel GEMM), then
+    aggregate projected rows -- halo moves out_len-wide rows.
+    aggregate_first: aggregate raw features (halo moves in_len-wide rows),
+    then project.
+    """
+    agg = aggregate_ring if strategy == "ring" else aggregate_allgather
+    deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
+    deg = pad_features(deg, pg.block_size, pg.num_shards)
+    deg = jnp.where(deg == 0, 1.0, deg)
+    if order == "combine_first":
+        h = x @ w
+        out = (agg(pg, h, mesh, axis) + h) / deg
+    else:
+        out = ((agg(pg, x, mesh, axis) + x) / deg) @ w
+    return out + bias

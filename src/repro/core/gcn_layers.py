@@ -1,0 +1,98 @@
+"""Graph-convolution layers built on the phase primitives (paper Table 1).
+
+  * GCNConv  -- mean({N(v)} ∪ {v}) ∘ Linear(|h|->d)      [combine-first legal]
+  * SAGEConv -- same propagation rule as GCN (paper §2)   [combine-first legal]
+  * GINConv  -- MLP(sum({N(v)} ∪ {v})), MLP = |h|->d->d   [aggregate-first only]
+
+Parameters are plain pytrees (dicts) -- the framework is functional.
+Each layer exposes ``apply(params, graph, x)`` plus ``init`` and a static
+``cost(graph, in_len)`` used by the scheduler and benchmarks.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import phases
+from repro.core.dataflow import BlockedGraph, fused_gcn_layer
+from repro.core.scheduler import (AGGREGATE_FIRST, COMBINE_FIRST,
+                                  choose_ordering)
+from repro.graph.structure import Graph
+
+
+def _dense_init(key, din, dout, scale=None):
+    scale = scale if scale is not None else (2.0 / din) ** 0.5
+    return {"w": jax.random.normal(key, (din, dout), jnp.float32) * scale,
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+class GCNConv:
+    """Paper Eq. 1 with mean aggregation over {N(v)} ∪ {v}."""
+
+    def __init__(self, din: int, dout: int, ordering: str = "auto",
+                 impl: str = "xla"):
+        self.din, self.dout = din, dout
+        self.ordering = ordering
+        self.impl = impl
+
+    def init(self, key) -> Dict:
+        return {"lin": _dense_init(key, self.din, self.dout)}
+
+    def resolve_order(self, g: Graph) -> str:
+        if self.ordering in (COMBINE_FIRST, AGGREGATE_FIRST):
+            return self.ordering
+        return choose_ordering(g, self.din, self.dout, agg_op="mean",
+                               n_mlp_layers=1, semantic_order=COMBINE_FIRST)
+
+    def apply(self, params, g: Graph, x, *, order: Optional[str] = None,
+              blocked: Optional[BlockedGraph] = None):
+        order = order or self.resolve_order(g)
+        w, b = params["lin"]["w"], params["lin"]["b"]
+        if blocked is not None:  # fused dataflow path (F5)
+            return fused_gcn_layer(blocked, x, w, b, agg_op="mean",
+                                   in_deg=g.in_deg, impl=self.impl)
+        if order == COMBINE_FIRST:
+            h = x @ w
+            h = phases.aggregate(g, h, op="mean", impl=self.impl)
+        else:
+            h = phases.aggregate(g, x, op="mean", impl=self.impl)
+            h = h @ w
+        return h + b
+
+
+class SAGEConv(GCNConv):
+    """GraphSAGE-mean: identical per-layer rule (paper §2); differs upstream
+    by mini-batch 2-hop sampling (graph/sampling.py)."""
+
+
+class GINConv:
+    """GIN-0 (paper Eq. 2): MLP(sum over {N(v)} ∪ {v}); MLP has an interior
+    ReLU so the ordering is pinned to aggregate_first (scheduler enforces)."""
+
+    def __init__(self, din: int, dout: int, hidden: Optional[int] = None,
+                 impl: str = "xla"):
+        self.din, self.dout = din, dout
+        self.hidden = hidden or dout
+        self.impl = impl
+        self.ordering = AGGREGATE_FIRST
+
+    def init(self, key) -> Dict:
+        k1, k2 = jax.random.split(key)
+        return {"mlp1": _dense_init(k1, self.din, self.hidden),
+                "mlp2": _dense_init(k2, self.hidden, self.dout)}
+
+    def resolve_order(self, g: Graph) -> str:
+        return AGGREGATE_FIRST
+
+    def apply(self, params, g: Graph, x, *, order: Optional[str] = None,
+              blocked=None):
+        h = phases.aggregate(g, x, op="sum", include_self=True, impl=self.impl)
+        h = h @ params["mlp1"]["w"] + params["mlp1"]["b"]
+        h = jax.nn.relu(h)
+        return h @ params["mlp2"]["w"] + params["mlp2"]["b"]
+
+
+CONVS = {"gcn": GCNConv, "sage": SAGEConv, "gin": GINConv}

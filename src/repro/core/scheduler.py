@@ -1,0 +1,104 @@
+"""Phase-ordering scheduler (paper F2 / Table 4) -- the analytic cost model.
+
+The paper's headline systems result: executing Combination before Aggregation
+reduces the Aggregation phase's data accesses by the in/out feature-length
+ratio (RD: 602->128 => 4.75x bytes, 4.72x ops, 4.76x time).  This module turns
+that observation into a *decision procedure*:
+
+  * ``ordering_cost(graph, in_len, out_len)`` -- closed-form bytes/flops for
+    both orderings (matching paper Table 4's accounting).
+  * ``choose_ordering`` -- picks the cheaper LEGAL ordering.  Reordering is
+    legal only when aggregation is linear (sum/mean) and the combination
+    applied across the swap is linear (single matmul; GIN's 2-layer MLP with
+    an interior ReLU pins it to aggregate_first).
+
+At cluster scale the same model also prices the *collective* term: with
+1-D vertex partitioning the halo exchange moves one feature row per remote
+edge, so combine-first shrinks collective bytes by the same ratio.  This is
+the paper's insight restated for multi-chip execution (DESIGN.md §8.5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.phases import aggregate_cost, combine_cost
+from repro.graph.structure import Graph
+
+COMBINE_FIRST = "combine_first"
+AGGREGATE_FIRST = "aggregate_first"
+
+
+@dataclass(frozen=True)
+class OrderingCost:
+    order: str
+    agg_bytes: int
+    agg_flops: int
+    comb_bytes: int
+    comb_flops: int
+    halo_bytes_per_remote_edge: int
+
+    @property
+    def total_bytes(self) -> int:
+        return self.agg_bytes + self.comb_bytes
+
+    @property
+    def total_flops(self) -> int:
+        return self.agg_flops + self.comb_flops
+
+
+def ordering_cost(g: Graph, in_len: int, out_len: int, order: str,
+                  dtype_bytes: int = 4) -> OrderingCost:
+    """Cost of one layer under a given phase ordering (paper Table 4 math)."""
+    v = g.num_vertices
+    if order == COMBINE_FIRST:
+        agg_len = out_len          # aggregation moves already-projected rows
+    else:
+        agg_len = in_len           # aggregation moves raw input rows
+    agg = aggregate_cost(g, agg_len, dtype_bytes)
+    comb = combine_cost(v, (in_len, out_len), dtype_bytes)
+    return OrderingCost(
+        order=order,
+        agg_bytes=agg["bytes"], agg_flops=agg["flops"],
+        comb_bytes=comb["bytes"], comb_flops=comb["flops"],
+        halo_bytes_per_remote_edge=agg_len * dtype_bytes)
+
+
+def reduction_ratios(g: Graph, in_len: int, out_len: int) -> dict:
+    """Paper Table 4's three reduction ratios, analytically."""
+    cf = ordering_cost(g, in_len, out_len, COMBINE_FIRST)
+    af = ordering_cost(g, in_len, out_len, AGGREGATE_FIRST)
+    return {
+        "data_access_reduction": af.agg_bytes / max(1, cf.agg_bytes),
+        "computation_reduction": af.agg_flops / max(1, cf.agg_flops),
+        "combine_first": cf, "aggregate_first": af,
+    }
+
+
+def swap_is_legal(agg_op: str, n_mlp_layers: int) -> bool:
+    """Ordering may be swapped iff both phases commute.
+
+    sum/mean aggregation is linear; a single affine layer commutes with it
+    (A(XW) = (AX)W, and mean-normalization is a diagonal scale absorbed on
+    either side).  max aggregation or a multi-layer MLP (interior
+    nonlinearity) breaks commutation -> ordering is fixed by semantics.
+    """
+    return agg_op in ("sum", "mean") and n_mlp_layers <= 1
+
+
+def choose_ordering(g: Graph, in_len: int, out_len: int, agg_op: str = "mean",
+                    n_mlp_layers: int = 1,
+                    semantic_order: Optional[str] = None) -> str:
+    """Pick the cheaper legal ordering for one layer.
+
+    ``semantic_order`` is the order the model *definition* implies (GIN:
+    aggregate_first).  If swapping is illegal we honor it; otherwise we pick
+    by modeled aggregation bytes -- i.e. combine_first iff out_len < in_len.
+    """
+    base = semantic_order or COMBINE_FIRST
+    if not swap_is_legal(agg_op, n_mlp_layers):
+        return base
+    cf = ordering_cost(g, in_len, out_len, COMBINE_FIRST)
+    af = ordering_cost(g, in_len, out_len, AGGREGATE_FIRST)
+    return COMBINE_FIRST if cf.total_bytes <= af.total_bytes else AGGREGATE_FIRST

@@ -1,0 +1,4 @@
+from repro.graph.structure import Graph, graph_from_coo
+from repro.graph.datasets import make_synthetic_graph, load_dataset
+from repro.graph.reorder import degree_reorder, reuse_distance_stats
+from repro.graph.partition import partition_1d, PartitionedGraph

@@ -1,0 +1,95 @@
+"""1-D destination-block graph partitioning for distributed aggregation.
+
+Each device owns a contiguous block of destination vertices (all edges whose
+dst falls in the block).  Blocks are *edge-balanced*: boundaries are chosen so
+every shard carries ~|E|/P edges, not ~|V|/P vertices -- heavy-tailed degree
+distributions otherwise leave one shard with most of the work (the cluster
+analogue of the paper's load-imbalance remarks).
+
+Shards are padded to identical static shapes so the whole structure stacks
+into (P, ...) arrays consumable by shard_map.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph
+
+
+class PartitionedGraph(NamedTuple):
+    """Stacked per-shard edge lists (all shapes static, padded).
+
+    src:        (P, Emax) int32 global source ids.
+    dst_local:  (P, Emax) int32 destination id LOCAL to the shard block.
+    mask:       (P, Emax) f32   1.0 for real edges, 0.0 padding.
+    vtx_start:  (P,)      int32 first global vertex id of each shard block.
+    block_size: python int      vertices per shard (padded).
+    num_vertices: python int    real global vertex count.
+    """
+
+    src: jnp.ndarray
+    dst_local: jnp.ndarray
+    mask: jnp.ndarray
+    vtx_start: jnp.ndarray
+    block_size: int
+    num_vertices: int
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.src.shape[0])
+
+
+def partition_1d(g: Graph, num_shards: int, edge_balanced: bool = True
+                 ) -> PartitionedGraph:
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)  # already sorted by dst
+    v = g.num_vertices
+    block = -(-v // num_shards)  # ceil; every shard owns `block` vertex slots
+
+    if edge_balanced:
+        # Choose vertex boundaries so edge counts are ~equal, but keep the
+        # owned vertex ranges within each shard's static `block` capacity.
+        row_ptr = np.asarray(g.row_ptr)
+        target = len(src) / num_shards
+        bounds = [0]
+        for p in range(1, num_shards):
+            ideal = int(np.searchsorted(row_ptr, target * p))
+            lo = bounds[-1] + 1
+            hi = min(v, bounds[-1] + block)
+            bounds.append(int(np.clip(ideal, lo, hi)))
+        bounds.append(v)
+    else:
+        bounds = [min(v, p * block) for p in range(num_shards)] + [v]
+
+    per_src, per_dst = [], []
+    for p in range(num_shards):
+        lo, hi = bounds[p], bounds[p + 1]
+        sel = (dst >= lo) & (dst < hi)
+        per_src.append(src[sel])
+        per_dst.append(dst[sel] - lo)
+    emax = max(1, max(len(s) for s in per_src))
+    # pad to multiple of 8 for clean TPU sublane tiling
+    emax = -(-emax // 8) * 8
+
+    ps = np.zeros((num_shards, emax), np.int32)
+    pd = np.zeros((num_shards, emax), np.int32)
+    pm = np.zeros((num_shards, emax), np.float32)
+    for p in range(num_shards):
+        e = len(per_src[p])
+        ps[p, :e] = per_src[p]
+        pd[p, :e] = per_dst[p]
+        pm[p, :e] = 1.0
+    starts = np.array([bounds[p] for p in range(num_shards)], np.int32)
+    return PartitionedGraph(
+        src=jnp.asarray(ps), dst_local=jnp.asarray(pd), mask=jnp.asarray(pm),
+        vtx_start=jnp.asarray(starts), block_size=block, num_vertices=v)
+
+
+def edge_balance(pg: PartitionedGraph) -> float:
+    """max/mean edge load across shards (1.0 = perfect)."""
+    loads = np.asarray(pg.mask).sum(axis=1)
+    return float(loads.max() / max(loads.mean(), 1e-9))

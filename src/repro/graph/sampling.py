@@ -1,0 +1,71 @@
+"""GraphSAGE mini-batch neighbor sampling (paper §2: SAG updates a batch of
+vertices along with their 2-hop neighbors per iteration).
+
+Static-shape, padded sampling: for each seed vertex we draw up to ``fanout``
+in-neighbors per hop with replacement-free reservoir-style numpy sampling, and
+pad with the seed itself (mask-weighted zero contribution downstream).
+Host-side (numpy) by design -- sampling is part of the data pipeline, not the
+jit graph.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.structure import Graph, graph_from_coo
+
+
+class SampledBlock(NamedTuple):
+    """One bipartite sampling layer: edges from sampled srcs -> seed dsts."""
+
+    graph: "Graph"          # destination-sorted subgraph over compacted ids
+    real_edges: int
+    seed_ids: np.ndarray    # global ids of the layer's destination vertices
+    input_ids: np.ndarray   # global ids of required input (source) vertices
+
+
+def sample_neighbors(g: Graph, seeds: np.ndarray, fanout: int,
+                     rng: np.random.Generator) -> SampledBlock:
+    row_ptr = np.asarray(g.row_ptr)
+    src_all = np.asarray(g.src)
+    seeds = np.asarray(seeds, dtype=np.int32)
+    n = len(seeds)
+    samp_src = np.empty((n, fanout), dtype=np.int32)
+    samp_msk = np.zeros((n, fanout), dtype=bool)
+    for i, v in enumerate(seeds):
+        lo, hi = row_ptr[v], row_ptr[v + 1]
+        deg = hi - lo
+        if deg == 0:
+            samp_src[i] = v  # isolated: self only
+            continue
+        take = min(fanout, deg)
+        idx = rng.choice(deg, size=take, replace=deg < fanout and False or False) \
+            if take < deg else np.arange(deg)
+        if take < deg:
+            idx = rng.choice(deg, size=take, replace=False)
+        samp_src[i, :take] = src_all[lo + idx]
+        samp_src[i, take:] = v
+        samp_msk[i, :take] = True
+
+    flat_src = samp_src.reshape(-1)
+    flat_dst = np.repeat(np.arange(n, dtype=np.int32), fanout)
+    # compact global source ids -> local input ids (seeds come first so the
+    # self-features line up with destination rows)
+    input_ids, inv = np.unique(np.concatenate([seeds, flat_src]),
+                               return_inverse=True)
+    local_src = inv[n:].astype(np.int32)
+    sub = graph_from_coo(local_src, flat_dst, max(len(input_ids), n))
+    return SampledBlock(graph=sub, real_edges=int(samp_msk.sum()),
+                        seed_ids=seeds, input_ids=input_ids)
+
+
+def two_hop_batch(g: Graph, batch: np.ndarray, fanouts: Tuple[int, int],
+                  seed: int = 0) -> Tuple[SampledBlock, SampledBlock]:
+    """Paper's SAG setting: a batch of vertices + their sampled 2-hop frontier."""
+    rng = np.random.default_rng(seed)
+    hop1 = sample_neighbors(g, batch, fanouts[0], rng)
+    hop2 = sample_neighbors(g, hop1.input_ids, fanouts[1], rng)
+    return hop2, hop1  # execution order: farthest hop first

@@ -1,0 +1,114 @@
+"""Graph containers with jit-friendly static shapes.
+
+The canonical in-memory form is a *destination-sorted edge list* (``src``,
+``dst`` sorted by ``dst``).  Sorting by destination is the TPU adaptation of
+the paper's atomic-scatter elimination (DESIGN.md F3): the reduce step becomes
+a contiguous segmented sum with no write collisions at all, and each
+destination's incoming feature rows land in one contiguous stretch, which is
+exactly what a VMEM row-accumulator wants.
+
+All arrays are plain jnp arrays so a Graph can be donated/sharded/captured in
+jit without host callbacks.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Graph(NamedTuple):
+    """Destination-sorted COO graph (== CSR without materialized row_ptr).
+
+    Attributes:
+      src:      (E,) int32 source vertex of each edge, sorted by dst.
+      dst:      (E,) int32 destination vertex of each edge (non-decreasing).
+      in_deg:   (V,) int32 in-degree (number of incoming edges per vertex).
+      out_deg:  (V,) int32 out-degree.
+      num_vertices: static python int.
+      row_ptr:  (V+1,) int32 CSR offsets into src/dst (host-side convenience).
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    in_deg: jnp.ndarray
+    out_deg: jnp.ndarray
+    num_vertices: int
+    row_ptr: Optional[jnp.ndarray] = None
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    # -- normalization terms used by the GCN models -------------------------
+    def mean_norm(self) -> jnp.ndarray:
+        """1 / (in_deg + 1)  -- mean over {N(v)} ∪ {v} (paper Eq. 1)."""
+        return 1.0 / (self.in_deg.astype(jnp.float32) + 1.0)
+
+    def sym_norm_edge(self) -> jnp.ndarray:
+        """Kipf symmetric normalization per edge: 1/sqrt((d_u+1)(d_v+1))."""
+        d = self.in_deg.astype(jnp.float32) + 1.0
+        return jnp.take(jnp.sqrt(1.0 / d), self.src) * jnp.take(
+            jnp.sqrt(1.0 / d), self.dst)
+
+
+def graph_from_coo(src, dst, num_vertices: int, sort: bool = True,
+                   build_row_ptr: bool = True) -> Graph:
+    """Build a destination-sorted Graph from arbitrary COO arrays (host-side)."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    assert src.shape == dst.shape and src.ndim == 1
+    if sort:
+        order = np.argsort(dst, kind="stable")
+        src, dst = src[order], dst[order]
+    in_deg = np.bincount(dst, minlength=num_vertices).astype(np.int32)
+    out_deg = np.bincount(src, minlength=num_vertices).astype(np.int32)
+    row_ptr = None
+    if build_row_ptr:
+        row_ptr = np.zeros(num_vertices + 1, dtype=np.int32)
+        np.cumsum(in_deg, out=row_ptr[1:])
+    return Graph(
+        src=jnp.asarray(src), dst=jnp.asarray(dst),
+        in_deg=jnp.asarray(in_deg), out_deg=jnp.asarray(out_deg),
+        num_vertices=int(num_vertices),
+        row_ptr=jnp.asarray(row_ptr) if row_ptr is not None else None)
+
+
+def to_dense_adj(g: Graph, norm: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Dense (V, V) adjacency -- test oracle only (O(V^2) memory)."""
+    a = jnp.zeros((g.num_vertices, g.num_vertices), dtype=jnp.float32)
+    vals = jnp.ones_like(g.src, dtype=jnp.float32) if norm is None else norm
+    return a.at[g.dst, g.src].add(vals)
+
+
+def add_self_loops(g: Graph) -> Graph:
+    """Return a new graph with v->v edges appended (and re-sorted)."""
+    v = np.arange(g.num_vertices, dtype=np.int32)
+    src = np.concatenate([np.asarray(g.src), v])
+    dst = np.concatenate([np.asarray(g.dst), v])
+    return graph_from_coo(src, dst, g.num_vertices)
+
+
+def pad_edges(g: Graph, target_edges: int, pad_vertex: Optional[int] = None
+              ) -> Graph:
+    """Pad the edge list to a static size with self-edges on a sink vertex.
+
+    Padded edges point at ``pad_vertex`` (default: an extra phantom vertex is
+    NOT added; we reuse vertex V-1 with zero weight downstream).  Downstream
+    aggregation multiplies by an edge mask, so padding never changes results.
+    """
+    e = g.num_edges
+    assert target_edges >= e
+    pv = g.num_vertices - 1 if pad_vertex is None else pad_vertex
+    pad = target_edges - e
+    src = np.concatenate([np.asarray(g.src), np.full(pad, pv, np.int32)])
+    dst = np.concatenate([np.asarray(g.dst), np.full(pad, pv, np.int32)])
+    # keep degrees of the REAL graph; mask is (length e) ones then zeros
+    out = graph_from_coo(src, dst, g.num_vertices)
+    return out._replace(in_deg=g.in_deg, out_deg=g.out_deg)
+
+
+def edge_mask(real_edges: int, total_edges: int) -> jnp.ndarray:
+    return (jnp.arange(total_edges) < real_edges).astype(jnp.float32)

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   seg_agg            -- collision-free segmented row aggregation (F3)
+#   fused_agg_combine  -- inter-phase dataflow fusion in VMEM (F5)
+#   flash_attention    -- blockwise attention substrate for the LM archs
+# Each kernel has a pure-jnp oracle in ref.py; ops.py holds jit'd wrappers.

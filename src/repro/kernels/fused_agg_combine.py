@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: fused Aggregation -> Combination (paper F5, §5.1-3).
+
+The paper: "a vertex is able to start the execution in Combination phase after
+this vertex completes its aggregation", but GPU frameworks insert a phase
+barrier and an HBM round-trip for the aggregated matrix.  Guideline: adaptive
+execution granularity.
+
+This kernel IS that guideline on TPU: the execution granularity is a
+``tile_m``-row destination block.  Per grid step:
+
+  1. segmented-reduce the block's gathered neighbor rows into a VMEM
+     accumulator (one-hot MXU matmul -- see seg_agg.py);
+  2. immediately hit the accumulator with the combination weight tile
+     (second MXU matmul) while it is still VMEM-resident.
+
+The (tile_m, F_in) aggregate never exists in HBM, and W stays pinned in VMEM
+across all destination blocks -- the software realization of the paper's
+"degree- & length-aware replacement policy" (the hottest data, W, is made
+cache-permanent; DESIGN.md §2).
+
+VMEM per step (tile_m=128, tile_e=512, F_in<=4096, F_out=128, fp32):
+rows 8 MiB + W 2 MiB + acc 2 MiB + out 64 KiB -- fits the ~64 MiB half-VMEM
+budget used by ops.py's tile picker.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(seg_ref, mask_ref, rows_ref, w_ref, out_ref, acc_ref, *,
+                  tile_m: int, tile_e: int):
+    ei = pl.program_id(1)
+    n_e = pl.num_programs(1)
+
+    @pl.when(ei == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seg = seg_ref[0, :]
+    mask = mask_ref[0, :]
+    rows = rows_ref[0]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_m, tile_e), 0)
+    onehot = jnp.where(row_ids == seg[None, :], mask[None, :], 0.0)
+    acc_ref[...] += jax.lax.dot(
+        onehot.astype(jnp.float32), rows.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ei == n_e - 1)
+    def _combine():
+        # Phase fusion point: aggregate tile -> GEMM without leaving VMEM.
+        out_ref[0] = jax.lax.dot(
+            acc_ref[...], w_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_m", "tile_e", "interpret"))
+def fused_agg_combine_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
+                              mask: jnp.ndarray, w: jnp.ndarray, *,
+                              tile_m: int, tile_e: int = 512,
+                              interpret: bool = True) -> jnp.ndarray:
+    """out[block b] = (sum_seg rows[b]) @ w, fused in VMEM.
+
+    rows: (nblocks, emax, F_in) destination-block-grouped gathered rows.
+    seg_local/mask: (nblocks, emax).
+    w: (F_in, F_out).
+    Returns (nblocks * tile_m, F_out) in w.dtype.
+    """
+    nblocks, emax, f_in = rows.shape
+    f_out = w.shape[1]
+    assert w.shape[0] == f_in, (w.shape, f_in)
+    assert emax % tile_e == 0, (emax, tile_e)
+    grid = (nblocks, emax // tile_e)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, tile_m=tile_m, tile_e=tile_e),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_e), lambda b, e: (b, e)),
+            pl.BlockSpec((1, tile_e), lambda b, e: (b, e)),
+            pl.BlockSpec((1, tile_e, f_in), lambda b, e: (b, e, 0)),
+            pl.BlockSpec((f_in, f_out), lambda b, e: (0, 0)),  # W: VMEM-pinned
+        ],
+        out_specs=pl.BlockSpec((1, tile_m, f_out), lambda b, e: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, tile_m, f_out), w.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, f_in), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="fused_agg_combine",
+    )(seg_local, mask, rows, w)
+    return out.reshape(nblocks * tile_m, f_out)

@@ -1,0 +1,125 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These own tile selection (VMEM-budget-aware, MXU-aligned), static-shape
+padding, and the host<->kernel layout glue so the rest of the framework calls
+plain functions.  On this CPU container kernels run in interpret mode
+(``interpret=True``); on a real TPU set ``REPRO_PALLAS_INTERPRET=0``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.characterize import VMEM_BYTES
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_agg_combine import fused_agg_combine_blocked
+from repro.kernels.seg_agg import seg_agg_blocked
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Segmented aggregation over a destination-sorted edge list
+# ---------------------------------------------------------------------------
+
+
+def seg_agg(rows: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
+            tile_m: int = 128, tile_e: int = 512) -> jnp.ndarray:
+    """Drop-in segment_sum(rows, seg_ids) using the Pallas kernel.
+
+    Requires ``seg_ids`` sorted (destination-sorted edges -- the framework
+    invariant).  Host-side regrouping is cached per (ids, shape) is NOT done
+    here: for repeated use on a fixed graph prefer ``seg_agg_pregrouped`` via
+    core.dataflow.block_graph.
+    """
+    e, f = rows.shape
+    seg_np = np.asarray(jax.device_get(seg_ids))
+    nblocks = _round_up(num_segments, tile_m) // tile_m
+    blk = seg_np // tile_m
+    counts = np.bincount(blk, minlength=nblocks)
+    emax = _round_up(max(int(counts.max()) if len(counts) else 1, 1), tile_e)
+    bs_rows = jnp.zeros((nblocks, emax, f), rows.dtype)
+    seg_l = np.zeros((nblocks, emax), np.int32)
+    mask = np.zeros((nblocks, emax), np.float32)
+    starts = np.zeros(nblocks + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    idx_b = np.empty(e, np.int64)
+    idx_e = np.empty(e, np.int64)
+    for b in range(nblocks):
+        lo, hi = starts[b], starts[b + 1]
+        idx_b[lo:hi] = b
+        idx_e[lo:hi] = np.arange(hi - lo)
+        seg_l[b, : hi - lo] = seg_np[lo:hi] - b * tile_m
+        mask[b, : hi - lo] = 1.0
+    bs_rows = bs_rows.at[jnp.asarray(idx_b), jnp.asarray(idx_e)].set(rows)
+    out = seg_agg_blocked(bs_rows, jnp.asarray(seg_l), jnp.asarray(mask),
+                          tile_m=tile_m, tile_e=tile_e,
+                          interpret=_interpret())
+    return out[:num_segments]
+
+
+def seg_agg_pregrouped(rows_blocked, seg_local, mask, tile_m: int,
+                       tile_e: int = 512) -> jnp.ndarray:
+    """Kernel entry for already block-grouped inputs (BlockedGraph layout)."""
+    return seg_agg_blocked(rows_blocked, seg_local, mask, tile_m=tile_m,
+                           tile_e=tile_e, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Fused aggregation + combination (paper F5)
+# ---------------------------------------------------------------------------
+
+
+def fused_agg_combine(src, dst_local, mask, x, w, *, tile_m: int,
+                      tile_e: int = 0) -> jnp.ndarray:
+    """Gather x rows by ``src`` (XLA DMA gather), then fused reduce+GEMM.
+
+    src/dst_local/mask: (nblocks, emax) BlockedGraph layout.
+    x: (V, F_in); w: (F_in, F_out).  Returns (nblocks*tile_m, F_out).
+    """
+    nblocks, emax = src.shape
+    f_in, f_out = w.shape
+    if tile_e == 0:
+        # VMEM budget: rows chunk + W + acc within half VMEM.
+        budget = VMEM_BYTES // 2
+        fixed = (f_in * f_out + tile_m * f_in + tile_m * f_out) * 4
+        tile_e = max(256, min(2048, (budget - fixed) // max(f_in * 4, 1)))
+        tile_e = max(256, (tile_e // 256) * 256)
+    emax_p = _round_up(emax, tile_e)
+    if emax_p != emax:
+        pad = ((0, 0), (0, emax_p - emax))
+        src = jnp.pad(src, pad)
+        dst_local = jnp.pad(dst_local, pad)
+        mask = jnp.pad(mask, pad)
+    rows = jnp.take(x, src.reshape(-1), axis=0).reshape(nblocks, emax_p, -1)
+    return fused_agg_combine_blocked(rows, dst_local, mask, w, tile_m=tile_m,
+                                     tile_e=tile_e, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, kv_len=None, *, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    tile_q: int = 128, tile_k: int = 128) -> jnp.ndarray:
+    return _flash(q, k, v, kv_len, causal=causal, window=window,
+                  softcap=softcap, tile_q=tile_q, tile_k=tile_k,
+                  interpret=_interpret())
+
+
+# Re-export oracles for convenience in tests/benchmarks.
+ref = kref

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+  * builds abstract params/state/inputs (ShapeDtypeStructs, no allocation),
+  * jit(step, in_shardings=..., out_shardings=...).lower(...).compile(),
+  * prints memory_analysis() (fits check) and cost_analysis() (FLOPs/bytes),
+  * extracts collective bytes from the compiled HLO,
+  * writes one JSON record per cell under experiments/dryrun/.
+
+The XLA_FLAGS line above MUST precede any jax import (device count locks on
+first backend init) and is intentionally NOT set in conftest.py/pyproject --
+smoke tests and benches see the single real CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                      # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+      --shape train_4k --mesh single                                 # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --list                # cell list
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config import (OptimizerConfig, SHAPES_BY_NAME,  # noqa: E402
+                          get_config)
+from repro.configs import ASSIGNED_ARCHS  # noqa: E402
+from repro.core.characterize import (Roofline, StepCost,  # noqa: E402
+                                     roofline)
+from repro.core.hlo_cost import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh, num_chips  # noqa: E402
+from repro.launch.sharding import rules_for, sharding_rules  # noqa: E402
+from repro.launch.specs import (abstract_params, abstract_state,  # noqa: E402
+                                arch_attn_tp, input_pspecs, input_specs,
+                                param_pspecs, serve_out_pspecs, state_pspecs)
+from repro.launch.steps import (make_decode_step, make_prefill_step,  # noqa: E402
+                                make_train_step)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); fwd-only for serve."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, remat: str = "auto",
+               opt: OptimizerConfig | None = None, microbatch: int = 0):
+    """Returns (jitted_fn, abstract_args) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if remat == "auto":  # production default: full remat for training
+        remat = "full" if shape.kind == "train" else "none"
+    opt = opt or default_opt(cfg)
+    batch = input_specs(cfg, shape)
+    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            input_pspecs(cfg, shape, mesh),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    attn_tp = arch_attn_tp(cfg, mesh)
+    if shape.kind == "train":
+        state = abstract_state(cfg, opt)
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                state_pspecs(state, mesh, attn_tp),
+                                is_leaf=lambda x: isinstance(x, P))
+        fn = make_train_step(cfg, opt, remat=remat, microbatch=microbatch)
+        jf = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+        return jf, (state, batch), cfg, shape
+    params = abstract_params(cfg)
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             param_pspecs(params, mesh, attn_tp),
+                             is_leaf=lambda x: isinstance(x, P))
+    out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          serve_out_pspecs(cfg, shape, mesh),
+                          is_leaf=lambda x: isinstance(x, P))
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+    else:
+        fn = make_decode_step(cfg)
+        jf = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                     out_shardings=out_sh,
+                     donate_argnames=("batch",))
+        return jf, (params, batch), cfg, shape
+    jf = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                 out_shardings=out_sh)
+    return jf, (params, batch), cfg, shape
+
+
+def default_opt(cfg) -> OptimizerConfig:
+    # bf16 moments above ~100B params: fp32 Adam state alone would exceed
+    # 16 GiB/chip HBM at kimi-k2 scale (see EXPERIMENTS.md §Dry-run).
+    big = cfg.param_count() > 100e9
+    return OptimizerConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             remat: str = "auto", tag: str = "baseline",
+             rules_override=None, microbatch: int = 0,
+             verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "tag": tag, "remat": remat, "status": "ok"}
+    try:
+        cfg0 = get_config(arch)
+        rules = rules_for(cfg0, mesh)
+        if rules_override:
+            rules.update(rules_override)
+            rec["rules_override"] = {k: list(v) if v else None
+                                     for k, v in rules_override.items()}
+        with mesh, sharding_rules(mesh, rules):
+            jf, args, cfg, shape = build_cell(arch, shape_name, mesh,
+                                              remat=remat,
+                                              microbatch=microbatch)
+            rec["microbatch"] = microbatch
+            lowered = jf.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            # trip-count-aware per-device cost (XLA's counter counts while
+            # bodies once -- see core/hlo_cost.py)
+            hc = analyze_hlo(compiled.as_text())
+            coll = dict(hc.collectives)
+            coll["total"] = hc.collective_bytes
+            chips = num_chips(mesh)
+            cost = StepCost(flops=hc.flops, hbm_bytes=hc.bytes_accessed,
+                            collective=coll)
+            mf = model_flops(cfg, shape)
+            rl = roofline(cost, chips, model_flops=mf)
+
+            per_dev = {
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+            }
+            peak = sum(v for k, v in per_dev.items()
+                       if v and k in ("output_bytes", "temp_bytes",
+                                      "argument_bytes"))
+            if per_dev.get("alias_bytes"):
+                peak -= per_dev["alias_bytes"]
+            rec.update({
+                "chips": chips,
+                "flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+                "collective": {k: v for k, v in coll.items()
+                               if k != "counts"},
+                "raw_cost_analysis": {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                    "note": "XLA counts while bodies once; see hlo_cost",
+                },
+                "memory_per_device": per_dev,
+                "peak_bytes_per_device": peak,
+                "fits_16g": bool(peak and peak < 16 * 2 ** 30),
+                "model_flops": mf,
+                "roofline": rl.row(),
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+            })
+            if verbose:
+                print(f"[{arch} x {shape_name} x {mesh_kind}] "
+                      f"peak/dev={peak / 2**30:.2f} GiB "
+                      f"flops={cost.flops:.3e} coll={coll['total']:.3e} "
+                      f"dom={rl.dominant} frac={rl.roofline_fraction:.3f} "
+                      f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+                print("  memory_analysis:", per_dev)
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] FAILED: {e}")
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = "" if tag == "baseline" else f"_{tag}"
+    path = OUT_DIR / f"{arch}_{shape_name}_{mesh_kind}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def all_cells():
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in cfg.shapes():
+            cells.append((arch, shape.name))
+        for skipped in cfg.shape_skips:
+            cells.append((arch, skipped + ":SKIP"))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--remat", default="auto")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--rules-override", default=None,
+                    help="comma list key=axes (axes '+'-joined, 'none' "
+                         "clears), e.g. heads=none,seq=model")
+    ap.add_argument("--microbatch", type=int, default=0)
+    args = ap.parse_args()
+    rules_override = None
+    if args.rules_override:
+        rules_override = {}
+        for kv in args.rules_override.split(","):
+            k, v = kv.split("=")
+            rules_override[k] = None if v == "none" else tuple(v.split("+"))
+
+    if args.list:
+        for arch, shape in all_cells():
+            print(arch, shape)
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_fail = 0
+    for arch, shape in all_cells():
+        if args.arch and arch != args.arch:
+            continue
+        if shape.endswith(":SKIP"):
+            if not args.arch or not args.shape:
+                print(f"[{arch} x {shape[:-5]}] SKIP "
+                      f"({get_config(arch).skip_reason})")
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        for mk in meshes:
+            suffix = "" if args.tag == "baseline" else f"_{args.tag}"
+            path = OUT_DIR / f"{arch}_{shape}_{mk}{suffix}.json"
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("status") == "ok":
+                    continue
+            rec = run_cell(arch, shape, mk, remat=args.remat, tag=args.tag,
+                           rules_override=rules_override,
+                           microbatch=args.microbatch)
+            n_ok += rec["status"] == "ok"
+            n_fail += rec["status"] != "ok"
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

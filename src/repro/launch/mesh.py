@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state -- the 512-placeholder-device environment is set up
+only by launch/dryrun.py before its first jax import.
+
+Mesh shapes (TPU v5e pods):
+  single-pod: (16, 16)      axes ("data", "model")   = 256 chips
+  multi-pod:  (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+Axis roles (see launch/sharding.py):
+  pod+data -> DP/FSDP (params + batch), sequence sharding for long-context
+  model    -> TP (heads / ffn) + EP (experts) + vocab-parallel logits
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None) -> jax.sharding.Mesh:
+    """Tiny mesh over whatever devices exist (subprocess multi-device tests)."""
+    devices = devices or jax.devices()
+    n = len(devices)
+    if n >= 4:
+        dp, tp = n // 2, 2
+    else:
+        dp, tp = n, 1
+    return jax.make_mesh((dp, tp), ("data", "model"),
+                         devices=devices[: dp * tp])
+
+
+def fsdp_axes(mesh: jax.sharding.Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_chips(mesh: jax.sharding.Mesh) -> int:
+    import numpy as np
+    return int(np.prod(list(mesh.shape.values())))

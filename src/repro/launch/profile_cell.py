@@ -1,0 +1,105 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: top HBM-traffic / FLOPs contributors for one cell.
+
+The CPU-container substitute for a real TPU profile (per the brief, the
+"profile" is the lowered HLO): walks the compiled module with trip-count
+scaling and attributes bytes/flops to instructions, aggregated by shape --
+this is what the §Perf iterations read to pick the next change.
+
+  PYTHONPATH=src python -m repro.launch.profile_cell --arch mamba2-2.7b \
+      --shape train_4k [--mesh single] [--top 20] [--microbatch 4]
+"""
+
+import argparse  # noqa: E402
+from collections import Counter  # noqa: E402
+
+from repro.core import hlo_cost as H  # noqa: E402
+
+
+def profile(arch: str, shape: str, mesh_kind: str = "single", top: int = 20,
+            remat: str = "auto", microbatch: int = 0, rules_override=None):
+    from repro.config import get_config
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import rules_for, sharding_rules
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg0 = get_config(arch)
+    rules = rules_for(cfg0, mesh)
+    if rules_override:
+        rules.update(rules_override)
+    with mesh, sharding_rules(mesh, rules):
+        jf, args, cfg, sh = build_cell(arch, shape, mesh, remat=remat,
+                                       microbatch=microbatch)
+        comp = jf.lower(*args).compile()
+    an = H.Analyzer(comp.as_text())
+
+    # computation -> total trip multiplier
+    trips: Counter = Counter()
+
+    def walk(cname, mult):
+        c = an.comps.get(cname)
+        if c is None:
+            return
+        trips[cname] += mult
+        for inst in c.instructions:
+            called = H._CALLED.findall(inst.attrs) or \
+                H._CALLED.findall(inst.line)
+            t = mult
+            if inst.opcode == "while":
+                cond = H._COND.search(inst.attrs) or \
+                    H._COND.search(inst.line)
+                if cond:
+                    t = mult * an._trip_count(cond.group(1))
+            for callee in called:
+                walk(callee, t)
+
+    walk(an.entry, 1)
+
+    by_bytes: Counter = Counter()
+    by_flops: Counter = Counter()
+    for cname, c in an.comps.items():
+        t = trips.get(cname, 0)
+        if t == 0 or cname.startswith("fused_") or ".fused" in cname:
+            continue
+        for inst in c.instructions:
+            if inst.opcode in ("while", "call", "conditional"):
+                continue  # bodies attributed via their own trip entries
+            ic = an._inst_cost(c, inst, False)
+            key = (inst.opcode, inst.result_text[:56], cname[:24])
+            if ic.bytes_accessed:
+                by_bytes[key] += ic.bytes_accessed * t
+            if ic.flops:
+                by_flops[key] += ic.flops * t
+    total_b = sum(by_bytes.values())
+    total_f = sum(by_flops.values())
+    print(f"== {arch} x {shape} x {mesh_kind} (remat={remat}, "
+          f"microbatch={microbatch}) ==")
+    print(f"bytes={total_b:.3e} ({total_b/819e9:.2f}s) "
+          f"flops={total_f:.3e} ({total_f/197e12:.2f}s)\n")
+    print("-- top HBM traffic --")
+    for (op, shp, cn), v in by_bytes.most_common(top):
+        print(f"{v:9.2e} ({100*v/total_b:4.1f}%) {op:16s} {shp:58s} {cn}")
+    print("\n-- top FLOPs --")
+    for (op, shp, cn), v in by_flops.most_common(max(6, top // 2)):
+        print(f"{v:9.2e} ({100*v/total_f:4.1f}%) {op:16s} {shp:58s} {cn}")
+    return by_bytes, by_flops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--remat", default="auto")
+    ap.add_argument("--microbatch", type=int, default=0)
+    args = ap.parse_args()
+    profile(args.arch, args.shape, args.mesh, args.top, args.remat,
+            args.microbatch)
+
+
+if __name__ == "__main__":
+    main()

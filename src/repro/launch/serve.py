@@ -1,0 +1,65 @@
+"""Serving launcher: `python -m repro.launch.serve --arch <id> [...]`.
+
+Builds the engine over whatever mesh exists and serves a synthetic request
+wave (stands in for an RPC front-end; the engine API is the integration
+point).  Reduced configs run on CPU:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+      --reduced --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import importlib
+import time
+
+import jax
+import numpy as np
+
+from repro.config import get_config
+from repro.launch.train import MODULES
+from repro.models.transformer import init_lm
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-size", type=int, default=256)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    if args.reduced:
+        mod = importlib.import_module(f"repro.configs.{MODULES[args.arch]}")
+        cfg = dataclasses.replace(mod.reduced(), dtype="float32")
+    else:
+        cfg = get_config(args.arch)
+    if cfg.family == "audio":
+        raise SystemExit("audio archs serve via the encdec prefill/decode "
+                         "steps; see launch/dryrun.py decode cells")
+
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=args.max_batch,
+                         cache_size=args.cache_size)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        engine.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(4, 32))),
+            max_tokens=args.max_tokens))
+    done = engine.run()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

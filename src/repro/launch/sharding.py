@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+Models annotate activations with LOGICAL axis names; this module maps them to
+mesh axes according to the active rule set.  Without an active mesh every
+annotation is a no-op, so the same model code runs single-device tests and
+512-chip dry-runs unchanged.
+
+Default rules:
+  batch    -> ("pod", "data")     (DP/FSDP axes)
+  seq      -> None                (replicated; long_500k remaps to ("data",))
+  embed    -> None                (activation d_model replicated)
+  heads    -> "model"             (TP over attention heads)
+  kv_heads -> "model"             (only when divisible; else None)
+  mlp      -> "model"             (TP over FFN hidden)
+  experts  -> "model"             (EP)
+  vocab    -> "model"             (TP over logits)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    # Megatron-style sequence parallelism: the residual stream (and with it
+    # every saved-for-backward layer carry) is sharded over `model` between
+    # blocks; attention/MLP gather it on entry and the TP all-reduce after
+    # each block becomes a reduce-scatter.  Same collective bytes, 1/tp the
+    # activation memory.
+    "seq": ("model",),
+    "seq_q": None,   # context-parallel attention: remapped to ("model",)
+    "embed": None,   # for archs whose head count doesn't divide the TP axis
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_cap": ("pod", "data"),
+    "vocab": ("model",),
+    "state": None,
+}
+
+
+def rules_for(cfg, mesh: Mesh) -> Dict[str, Optional[Tuple[str, ...]]]:
+    """Per-arch rule overrides.
+
+    Head-sharded TP requires num_heads % model-axis == 0.  When it doesn't
+    divide (internvl 14H, arctic 56H), GSPMD otherwise replicates attention
+    or -- worse -- all-reduces score tiles.  We switch those archs to
+    CONTEXT-PARALLEL attention: q's sequence dim shards over `model`, K/V
+    stay model-replicated (they are small: kv_heads*head_dim columns), and
+    each device computes its query chunk against the full KV.
+    """
+    rules = dict(DEFAULT_RULES)
+    tp = mesh.shape.get("model", 1)
+    a = getattr(cfg, "attention", None)
+    if a is not None and (a.num_heads % tp != 0):
+        # sequence-parallel profile: activations stay seq-sharded through
+        # norm/attention/MLP; only K/V (tiny: kv_dim columns) are gathered.
+        rules["heads"] = None
+        rules["kv_heads"] = None
+        rules["seq"] = ("model",)
+        rules["seq_q"] = ("model",)
+        rules["mlp"] = None
+        rules["vocab"] = None
+    return rules
+
+
+def _current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, rules: Optional[Dict] = None):
+    """Activate a mesh + logical rules for model-internal constraints."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes the mesh doesn't actually have (e.g. single-pod: no "pod")
+    axis_names = set(mesh.axis_names)
+    clean = {}
+    for k, v in merged.items():
+        if v is None:
+            clean[k] = None
+        else:
+            kept = tuple(a for a in v if a in axis_names)
+            clean[k] = kept if kept else None
+    prev = _current()
+    _state.ctx = (mesh, clean)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...]) -> P:
+    ctx = _current()
+    assert ctx is not None
+    _, rules = ctx
+    parts = []
+    for a in axes:
+        if a is None:
+            parts.append(None)
+        else:
+            r = rules.get(a)
+            parts.append(r if r else None)
+    return P(*parts)
+
+
+def constrain(x, *axes: Optional[str]):
+    """with_sharding_constraint by logical axis names; no-op without a mesh.
+
+    ``axes`` length must equal x.ndim; None entries are unsharded dims.
+    Divisibility guard: a dim that doesn't divide by its mesh-axes product is
+    left unsharded rather than failing (e.g. 8 kv heads on a 16-way model
+    axis -> replicated, the documented fallback).
+    """
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    parts = []
+    used: set = set()
+    for i, a in enumerate(axes):
+        if a is None:
+            parts.append(None)
+            continue
+        r = rules.get(a)
+        if r:  # a mesh axis may appear once per spec; first dim wins
+            r = tuple(ax for ax in r if ax not in used)
+        if not r:
+            parts.append(None)
+            continue
+        size = 1
+        for ax in r:
+            size *= mesh.shape[ax]
+        if x.shape[i] % size != 0:
+            parts.append(None)
+        else:
+            used.update(r)
+            parts.append(r if len(r) > 1 else r[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def named_sharding(mesh: Mesh, *parts) -> NamedSharding:
+    return NamedSharding(mesh, P(*parts))
+
+
+def ctx_mesh_axes():
+    """(mesh, batch_axes, seq_axes) under an active sharding context, for
+    modules that build explicit shard_map regions (MoE EP)."""
+    ctx = _current()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    batch = tuple(rules.get("batch") or ())
+    seq = tuple(rules.get("seq") or ())
+    return mesh, batch, seq
+
+
+class _CtxInfo:
+    def __init__(self, mesh, tp, batch):
+        self.mesh, self.tp, self.batch = mesh, tp, batch
+
+
+def ctx_parallel_info():
+    """Non-None when the active rules request context-parallel attention."""
+    ctx = _current()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    if rules.get("seq_q") and "model" in mesh.axis_names:
+        batch = rules.get("batch") or ()
+        return _CtxInfo(mesh, mesh.shape["model"], tuple(batch))
+    return None

@@ -1,0 +1,309 @@
+"""Abstract input/parameter/cache specs + sharding rules per (arch × shape).
+
+Everything here is allocation-free: params come from ``jax.eval_shape`` over
+the real initializers, inputs are ShapeDtypeStructs, and shardings are
+divisibility-guarded PartitionSpec trees.  launch/dryrun.py composes these
+into lower+compile calls for every dry-run cell.
+
+Sharding policy (DESIGN.md §6):
+  * params: FSDP over (pod,data) on the d_model-ish dim + TP over `model`
+    on heads/ffn/vocab/experts (Megatron layout), guarded by divisibility;
+  * batch inputs: (pod,data); batch==1 long-context remaps sequence->data;
+  * KV caches: batch->data, sequence->model (decode_32k) or
+    sequence->(data,model) (long_500k, batch=1); SSM states: heads->model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import LMConfig, OptimizerConfig, ShapeSpec
+from repro.launch.mesh import fsdp_axes
+from repro.models import encdec as encdec_lib
+from repro.models.transformer import init_caches_abstract, init_lm
+
+
+# ---------------------------------------------------------------------------
+# Abstract parameters / optimizer state
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(cfg: LMConfig):
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: encdec_lib.init_encdec(cfg, jax.random.PRNGKey(0)))
+    return jax.eval_shape(lambda: init_lm(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_state(cfg: LMConfig, opt: OptimizerConfig):
+    from repro.optim.optimizer import TrainState
+    p = abstract_params(cfg)
+    mdt = jnp.dtype(opt.moment_dtype)
+    mom = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, mdt), p)
+    return TrainState(step=jax.ShapeDtypeStruct((), jnp.int32), params=p,
+                      m=mom, v=mom)
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs (path-based rules + divisibility guard)
+# ---------------------------------------------------------------------------
+
+
+def _guard(parts, shape, mesh: Mesh) -> P:
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if not axes or dim % size != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def _param_rule(path: str, ndim: int, fsdp) -> Tuple:
+    """Returns per-dim mesh-axis parts for the TRAILING dims of the leaf."""
+    m = "model"
+    if path.endswith(("embed/table", "lm_head/table")):
+        return (m, fsdp)
+    if any(path.endswith(s) for s in ("wq/w", "wk/w", "wv/w")):
+        return (fsdp, m)
+    if path.endswith("wo/w") and "moe/" not in path.rsplit("wo/w")[0][-6:]:
+        # attention out-proj and dense-mlp down-proj share layout
+        pass
+    if "moe/" in path and ndim == 3:
+        if path.endswith(("wi", "wg")):
+            return (m, fsdp, None)
+        if path.endswith("wo"):
+            return (m, None, fsdp)
+    if path.endswith(("wi/w", "wg/w")):
+        return (fsdp, m)
+    if path.endswith("wo/w"):
+        return (m, fsdp)
+    if path.endswith("router/w"):
+        return (fsdp, None)
+    if path.endswith(("in_proj/w", "z_proj/w", "xbc_proj/w", "dt_proj/w")):
+        return (fsdp, m)
+    if path.endswith("out_proj/w"):
+        return (m, fsdp)
+    if path.endswith("conv_w"):
+        return (m, None)
+    return tuple(None for _ in range(ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_pspecs(params_abstract, mesh: Mesh, attn_tp: bool = True):
+    """PartitionSpecs for a param tree.
+
+    ``attn_tp=False`` (head count doesn't divide the model axis): attention
+    projections fall back to FSDP-only so activations can run
+    context-parallel without per-layer resharding churn.
+    """
+    fsdp = fsdp_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None)
+
+    def rule(path, leaf):
+        s = _path_str(path)
+        shape = leaf.shape
+        stacked = s.startswith("blocks/") or s.startswith(("enc/", "dec/"))
+        trail = shape[1:] if stacked and len(shape) > 1 else shape
+        parts = _param_rule(s, len(trail), fsdp)
+        if not attn_tp:
+            # sequence-parallel profile: rank-2 weights FSDP-only (experts
+            # keep EP over model); embedding tables FSDP on the vocab dim.
+            if s.endswith(("embed/table", "lm_head/table")):
+                parts = (fsdp, None)
+            elif len(trail) == 2 and not ("moe/" in s and len(trail) == 3):
+                parts = (fsdp,) + tuple(None for _ in trail[1:])
+        if len(parts) != len(trail):  # scalar-ish leaves
+            parts = tuple(None for _ in trail)
+        full = ((None,) + parts) if stacked and len(shape) > 1 else parts
+        return _guard(full, shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_abstract)
+
+
+def arch_attn_tp(cfg: LMConfig, mesh: Mesh) -> bool:
+    a = cfg.attention
+    tp = mesh.shape.get("model", 1)
+    return a is None or a.num_heads % tp == 0
+
+
+def state_pspecs(state_abstract, mesh: Mesh, attn_tp: bool = True):
+    from repro.optim.optimizer import TrainState
+    ps = param_pspecs(state_abstract.params, mesh, attn_tp)
+    return TrainState(step=P(), params=ps, m=ps, v=ps)
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+VLM_PATCH_TOKENS = 256
+
+
+def _batch_part(mesh: Mesh, b: int):
+    axes = fsdp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if b % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if "data" in mesh.axis_names and b % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def _seq_part_for_long(mesh: Mesh):
+    return "data" if "data" in mesh.axis_names else None
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+
+    if cfg.family == "audio":
+        frames = jax.ShapeDtypeStruct((b, min(s, 4096), d), dt)
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        caches = encdec_lib.init_dec_caches_abstract(cfg, b, s)
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+                "caches": caches,
+                "memory": jax.ShapeDtypeStruct((b, min(s, 4096), d), dt),
+                "length": jax.ShapeDtypeStruct((), i32)}
+
+    embeds = None
+    n_tok = s
+    if cfg.frontend_stub:  # vlm: patch embeddings occupy the first positions
+        embeds = jax.ShapeDtypeStruct((b, VLM_PATCH_TOKENS, d), dt)
+        n_tok = s - VLM_PATCH_TOKENS
+
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, n_tok), i32),
+               "labels": jax.ShapeDtypeStruct((b, n_tok), i32)}
+        if embeds is not None:
+            out["embeds"] = embeds
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, n_tok), i32)}
+        if embeds is not None:
+            out["embeds"] = embeds
+        return out
+    # decode: one new token against a seq_len cache
+    caches = init_caches_abstract(cfg, b, s)
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+            "caches": caches,
+            "length": jax.ShapeDtypeStruct((), i32)}
+
+
+def input_pspecs(cfg: LMConfig, shape: ShapeSpec, mesh: Mesh
+                 ) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    bp = _batch_part(mesh, b)
+    long_ctx = b == 1
+
+    def tok_spec():
+        if long_ctx:
+            return P(None, _seq_part_for_long(mesh))
+        return P(bp, None)
+
+    specs = input_specs(cfg, shape)
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = tok_spec()
+        elif k in ("embeds", "frames", "memory"):
+            out[k] = P(bp, None, None)
+        elif k == "token":
+            out[k] = P(bp, None)
+        elif k == "length":
+            out[k] = P()
+        elif k == "caches":
+            out[k] = jax.tree.map(
+                functools.partial(_cache_pspec, mesh=mesh,
+                                  long_ctx=long_ctx, bp=bp), v)
+    return out
+
+
+def serve_out_pspecs(cfg: LMConfig, shape: ShapeSpec, mesh: Mesh):
+    """Output PartitionSpecs for prefill/decode steps (logits, caches, ...).
+
+    Without these, GSPMD materializes the returned KV caches sharded only
+    over batch (25 GiB/device at deepseek prefill_32k); the cache must leave
+    the step sharded exactly like the decode step expects it.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    bp = _batch_part(mesh, b)
+    long_ctx = b == 1
+    vp = "model" if cfg.padded_vocab % mesh.shape.get("model", 1) == 0 \
+        else None
+    logits = P(bp, None, vp)
+    length = P()
+    if cfg.family == "audio":
+        caches = jax.tree.map(
+            functools.partial(_cache_pspec, mesh=mesh, long_ctx=long_ctx,
+                              bp=bp),
+            encdec_lib.init_dec_caches_abstract(cfg, b, s))
+        if shape.kind == "prefill":
+            memory = P(bp, None, None)
+            return (logits, caches, memory, length)
+        return (logits, caches, length)
+    caches = jax.tree.map(
+        functools.partial(_cache_pspec, mesh=mesh, long_ctx=long_ctx, bp=bp),
+        init_caches_abstract(cfg, b, s))
+    if shape.kind == "prefill":
+        return (logits, caches, length)
+    return (logits, caches, length)
+
+
+def _cache_pspec(leaf, *, mesh: Mesh, long_ctx: bool, bp):
+    shape = leaf.shape
+    if len(shape) == 5 and shape[-1] != 0 and shape[-2] >= 128:
+        # KV cache (n_rep, B, Hkv, S, hd): seq -> model (+data when batch=1)
+        seq = ("data", "model") if long_ctx else "model"
+        seq = tuple(a for a in (seq if isinstance(seq, tuple) else (seq,))
+                    if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in seq])) if seq else 1
+        seq_part = (seq if len(seq) > 1 else seq[0]) if seq and \
+            shape[3] % size == 0 else None
+        return P(None, bp if not long_ctx else None, None, seq_part, None)
+    if len(shape) == 5:
+        # SSM state (n_rep, B, H, N, P): heads -> model
+        h = shape[2]
+        hp = "model" if h % mesh.shape["model"] == 0 else None
+        return P(None, bp if not long_ctx else None, hp, None, None)
+    if len(shape) == 4:
+        # conv tail (n_rep, B, conv_dim, K-1)
+        return P(None, bp if not long_ctx else None, None, None)
+    return P(*(None,) * len(shape))

@@ -1,0 +1,116 @@
+"""Step functions lowered by the dry-run, trainer, and serving engine.
+
+One factory per step kind; each returns a pure function over (state/params,
+batch) pytrees so jit in_shardings apply cleanly.  VLM embeds / audio frames
+are threaded through per the arch family.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig, OptimizerConfig
+from repro.models import encdec as encdec_lib
+from repro.models.transformer import (lm_decode_step, lm_forward, lm_loss,
+                                      lm_prefill)
+from repro.optim.optimizer import TrainState, adamw_update
+
+
+def make_train_step(cfg: LMConfig, opt: OptimizerConfig,
+                    remat: str = "none", microbatch: int = 0) -> Callable:
+    """(TrainState, batch) -> (TrainState, metrics).
+
+    ``microbatch`` > 1 enables gradient accumulation: the global batch is
+    split along dim 0 into that many slices processed under a lax.scan;
+    peak activation memory scales down ~1/microbatch at unchanged math
+    (grads accumulated in ``opt.accum_dtype``).
+    """
+
+    def loss_fn(params, batch):
+        if cfg.family == "audio":
+            return encdec_lib.encdec_loss(params, cfg, batch["frames"],
+                                          batch["tokens"], batch["labels"])
+        return lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                       batch.get("embeds"), remat=remat)
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        if microbatch and microbatch > 1:
+            n = microbatch
+            adt = jnp.dtype(getattr(opt, "accum_dtype", "float32"))
+            mb = jax.tree.map(
+                lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]),
+                batch)
+
+            def body(acc, one):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, one)
+                acc = jax.tree.map(lambda a, g: a + g.astype(adt), acc,
+                                   grads)
+                metrics = dict(metrics)
+                metrics["loss"] = loss
+                return acc, metrics
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt),
+                                state.params)
+            grads, metrics_stack = jax.lax.scan(body, acc0, mb)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_stack)
+            loss = metrics.pop("loss")
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+            metrics = dict(metrics)
+        new_state, opt_metrics = adamw_update(state, grads, opt)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig, cache_size: int = 0) -> Callable:
+    """(params, batch) -> (last logits, caches, [memory,] length)."""
+
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            return encdec_lib.encdec_prefill(
+                params, cfg, batch["frames"], batch["tokens"],
+                cache_size or batch["tokens"].shape[1])
+        # VLM: frontend embeds occupy the first positions of the cache too
+        n_front = batch["embeds"].shape[1] if "embeds" in batch else 0
+        size = cache_size or (batch["tokens"].shape[1] + n_front)
+        return lm_prefill(params, cfg, batch["tokens"], size,
+                          batch.get("embeds"))
+
+    return prefill_step
+
+
+def make_decode_step(cfg: LMConfig) -> Callable:
+    """(params, batch{token, caches, [memory,] length}) -> (logits, caches, length)."""
+
+    def decode_step(params, batch):
+        if cfg.family == "audio":
+            return encdec_lib.encdec_decode_step(
+                params, cfg, batch["token"], batch["caches"],
+                batch["memory"], batch["length"])
+        return lm_decode_step(params, cfg, batch["token"], batch["caches"],
+                              batch["length"])
+
+    return decode_step
+
+
+def make_eval_step(cfg: LMConfig) -> Callable:
+    def eval_step(params, batch):
+        if cfg.family == "audio":
+            loss, m = encdec_lib.encdec_loss(params, cfg, batch["frames"],
+                                             batch["tokens"],
+                                             batch["labels"])
+        else:
+            loss, m = lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                              batch.get("embeds"))
+        return m
+    return eval_step

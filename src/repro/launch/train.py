@@ -1,0 +1,111 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+Real-cluster entry point: builds the production mesh from the available
+devices (or any smaller mesh on dev boxes), shards state per launch/specs,
+and drives train/trainer.Trainer (checkpoint-resume, failure recovery,
+straggler watchdog).  On this CPU container run it with a reduced config:
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+      --reduced --steps 20 --batch 4 --seq 64
+
+On a TPU slice the same command with real flags uses the full config and
+the (data, model) production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import importlib
+import logging
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (OptimizerConfig, ShapeSpec, TrainConfig,
+                          get_config)
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_test_mesh
+from repro.launch.sharding import rules_for, sharding_rules
+from repro.launch.specs import (arch_attn_tp, input_pspecs, state_pspecs)
+from repro.launch.steps import make_train_step
+from repro.models import encdec as encdec_lib
+from repro.models.transformer import init_lm
+from repro.optim.optimizer import make_train_state
+from repro.train.trainer import Trainer
+
+MODULES = {
+    "kimi-k2-1t-a32b": "kimi_k2", "arctic-480b": "arctic_480b",
+    "deepseek-67b": "deepseek_67b", "gemma2-9b": "gemma2_9b",
+    "gemma-7b": "gemma_7b", "granite-3-8b": "granite_3_8b",
+    "jamba-1.5-large-398b": "jamba_1_5_large", "internvl2-1b": "internvl2_1b",
+    "seamless-m4t-medium": "seamless_m4t_medium", "mamba2-2.7b": "mamba2_2_7b",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-sized family config (CPU dev)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    if args.reduced:
+        mod = importlib.import_module(f"repro.configs.{MODULES[args.arch]}")
+        cfg = dataclasses.replace(mod.reduced(), dtype="float32")
+    else:
+        cfg = get_config(args.arch)
+    if cfg.family == "audio":
+        raise SystemExit("use the encdec example path for audio archs")
+
+    shape = ShapeSpec("train_cli", args.seq, args.batch, "train")
+    opt = OptimizerConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                          total_steps=args.steps)
+    tc = TrainConfig(model=cfg.name, steps=args.steps, optimizer=opt,
+                     checkpoint_dir=args.ckpt_dir, checkpoint_every=25,
+                     log_every=5)
+
+    mesh = make_test_mesh()
+    with mesh, sharding_rules(mesh, rules_for(cfg, mesh)):
+        attn_tp = arch_attn_tp(cfg, mesh)
+        step_fn0 = make_train_step(cfg, opt, remat=args.remat,
+                                   microbatch=args.microbatch)
+        abstract = jax.eval_shape(
+            lambda: make_train_state(init_lm(cfg, jax.random.PRNGKey(0)),
+                                     opt))
+        st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             state_pspecs(abstract, mesh, attn_tp),
+                             is_leaf=lambda x: isinstance(x, P))
+        bt_sh = {k: NamedSharding(mesh, v) for k, v in
+                 input_pspecs(cfg, shape, mesh).items()
+                 if k in ("tokens", "labels", "embeds")}
+        step_fn = jax.jit(step_fn0, in_shardings=(st_sh, bt_sh),
+                          donate_argnums=(0,))
+        pipeline = TokenPipeline(cfg, shape, seed=0)
+
+        def make_state():
+            return jax.jit(
+                lambda: make_train_state(
+                    init_lm(cfg, jax.random.PRNGKey(0)), opt),
+                out_shardings=st_sh)()
+
+        trainer = Trainer(tc, make_state=make_state, step_fn=step_fn,
+                          pipeline=pipeline, state_shardings=st_sh,
+                          batch_shardings=bt_sh)
+        result = trainer.run()
+    h = result["history"]
+    print(f"done: loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f}; "
+          f"recoveries={result['recoveries']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, D) straight into the encoder.
+Decoder layers: causal self-attn + cross-attn over encoder memory + FFN.
+Both stacks scan over layers like transformer.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.launch.sharding import constrain
+from repro.nn.attention import (KVCache, attention_block,
+                                cross_attention_block, init_attention)
+from repro.nn.layers import (embed, init_embedding, init_mlp, init_rmsnorm,
+                             mlp, rmsnorm, unembed)
+
+
+def init_encdec(cfg: LMConfig, key) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_enc, k_dec, k_final = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "attn": init_attention(k1, cfg.d_model, cfg.attention, dtype),
+                "ln2": init_rmsnorm(cfg.d_model),
+                "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff,
+                                cfg.mlp_activation, dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "self_attn": init_attention(k1, cfg.d_model, cfg.attention,
+                                            dtype),
+                "ln_x": init_rmsnorm(cfg.d_model),
+                "cross_attn": init_attention(k2, cfg.d_model, cfg.attention,
+                                             dtype),
+                "ln2": init_rmsnorm(cfg.d_model),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff,
+                                cfg.mlp_activation, dtype)}
+
+    return {
+        "embed": init_embedding(k_embed, cfg.padded_vocab, cfg.d_model,
+                                dtype),
+        "enc": jax.vmap(enc_layer)(jax.random.split(k_enc,
+                                                    cfg.encoder_layers)),
+        "dec": jax.vmap(dec_layer)(jax.random.split(k_dec, cfg.num_layers)),
+        "enc_ln": init_rmsnorm(cfg.d_model),
+        "final_ln": init_rmsnorm(cfg.d_model),
+    }
+
+
+def encode(params, cfg: LMConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, D) precomputed frame embeddings (frontend stub)."""
+    ncfg = cfg.attention
+    import dataclasses
+    ncfg = dataclasses.replace(ncfg, causal=False)
+
+    @jax.checkpoint
+    def body(h, lp):
+        a, _ = attention_block(lp["attn"], rmsnorm(lp["ln1"], h),
+                               ncfg)
+        h = h + a
+        h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h), cfg.mlp_activation)
+        return constrain(h, "batch", "seq", "embed"), None
+
+    h = constrain(frames, "batch", "seq", "embed")
+    h, _ = jax.lax.scan(body, h, params["enc"])
+    return rmsnorm(params["enc_ln"], h)
+
+
+def _dec_layer(lp, h, memory, cfg: LMConfig, cache, make_cache, cache_size,
+               cache_length):
+    inner = None
+    if cache is not None:
+        inner = KVCache(cache["k"], cache["v"], cache_length)
+    a, new_kv = attention_block(lp["self_attn"], rmsnorm(lp["ln1"], h),
+                                cfg.attention, cache=inner,
+                                make_cache=make_cache, cache_size=cache_size)
+    h = h + a
+    c = cross_attention_block(lp["cross_attn"], rmsnorm(lp["ln_x"], h),
+                              memory, cfg.attention)
+    h = h + c
+    h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h), cfg.mlp_activation)
+    out_cache = None
+    if new_kv is not None:
+        out_cache = {"k": new_kv.k, "v": new_kv.v}
+    return constrain(h, "batch", "seq", "embed"), out_cache
+
+
+def decode_stack(params, cfg: LMConfig, tokens, memory, *, caches=None,
+                 cache_length=None, make_cache=False, cache_size=0):
+    x = embed(params["embed"], tokens)
+
+    def body(h, xs):
+        lp, cache = xs
+        h, out_cache = _dec_layer(lp, h, memory, cfg, cache, make_cache,
+                                  cache_size, cache_length)
+        return h, out_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec"], caches))
+    x = rmsnorm(params["final_ln"], x)
+    logits = unembed(params["embed"], x)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask
+    return constrain(logits, "batch", "seq", "vocab"), new_caches
+
+
+def encdec_loss(params, cfg: LMConfig, frames, tokens, labels,
+                ce_chunk: int = 2048):
+    """Chunked CE over decoder tokens (full 256k-vocab f32 logits would
+    dominate peak memory -- same trick as transformer.lm_loss)."""
+    memory = encode(params, cfg, frames)
+    x = embed(params["embed"], tokens)
+
+    @jax.checkpoint
+    def body(h, lp):
+        h, _ = _dec_layer(lp, h, memory, cfg, None, False, 0, None)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = rmsnorm(params["final_ln"], x)
+
+    b, s, d = x.shape
+    t = b * s
+    chunk = min(ce_chunk, t)
+    if t % chunk != 0:
+        chunk = t
+    xf = x.reshape(t, d)
+    lf = labels.reshape(t)
+    table = params["embed"]["table"]
+
+    @jax.checkpoint
+    def chunk_ce(x_c, l_c):
+        logits = jnp.einsum("td,vd->tv", x_c, table.astype(x_c.dtype),
+                            preferred_element_type=jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                            0.0, -1e30).astype(logits.dtype)
+            logits = logits + pad
+        valid = l_c >= 0
+        safe = jnp.where(valid, l_c, 0)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, safe[:, None], axis=-1)[:, 0]
+        return (nll * valid).sum(), valid.sum()
+
+    def ce_body(carry, io):
+        tot, cnt = carry
+        ls, n = chunk_ce(*io)
+        return (tot + ls, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        ce_body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xf.reshape(t // chunk, chunk, d), lf.reshape(t // chunk, chunk)))
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss, {"ce": loss}
+
+
+def encdec_prefill(params, cfg: LMConfig, frames, tokens, cache_size: int):
+    memory = encode(params, cfg, frames)
+    logits, caches = decode_stack(params, cfg, tokens, memory,
+                                  make_cache=True, cache_size=cache_size)
+    return logits[:, -1:], caches, memory, jnp.asarray(tokens.shape[1],
+                                                       jnp.int32)
+
+
+def encdec_decode_step(params, cfg: LMConfig, token, caches, memory, length):
+    logits, new_caches = decode_stack(params, cfg, token, memory,
+                                      caches=caches, cache_length=length)
+    return logits, new_caches, length + 1
+
+
+def init_dec_caches_abstract(cfg: LMConfig, batch: int, cache_size: int):
+    a = cfg.attention
+    dtype = jnp.dtype(cfg.dtype)
+    shp = (cfg.num_layers, batch, a.num_kv_heads, cache_size, a.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}

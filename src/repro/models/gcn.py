@@ -1,0 +1,109 @@
+"""Full GCN / GIN / GraphSAGE models (paper Table 1 configurations).
+
+Two-layer node-classification networks over the phase primitives, with
+per-layer phase-ordering control, the fused-dataflow option, and the analytic
+per-phase cost breakdown used by the benchmark harness.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GCNModelConfig, GraphSpec
+from repro.core import phases
+from repro.core.dataflow import BlockedGraph, block_graph, suggest_tile_m
+from repro.core.gcn_layers import CONVS
+from repro.core.scheduler import ordering_cost
+from repro.graph.structure import Graph
+
+# Paper Table 1 model configs: |h|->128 single layer (GCN/SAG);
+# |h|->128->128 MLP (GIN).  num_layers=2 gives the usual 2-conv network;
+# the paper profiles the FIRST conv layer, which bench code isolates.
+PAPER_MODELS: Dict[str, GCNModelConfig] = {
+    "gcn": GCNModelConfig("gcn", conv="gcn", aggregator="mean",
+                          hidden_dims=(128,), ordering="auto"),
+    "sage": GCNModelConfig("sage", conv="sage", aggregator="mean",
+                           hidden_dims=(128,), ordering="auto"),
+    "gin": GCNModelConfig("gin", conv="gin", aggregator="sum",
+                          hidden_dims=(128, 128), ordering="aggregate_first"),
+}
+
+
+class GCNModel:
+    """num_layers stacked convolutions + classifier head."""
+
+    def __init__(self, cfg: GCNModelConfig, in_dim: int, num_classes: int,
+                 impl: str = "xla"):
+        self.cfg = cfg
+        self.in_dim = in_dim
+        self.num_classes = num_classes
+        hid = cfg.hidden_dims[0]
+        conv_cls = CONVS[cfg.conv]
+        self.convs = []
+        d = in_dim
+        for i in range(cfg.num_layers):
+            dout = hid if i < cfg.num_layers - 1 else num_classes
+            if cfg.conv == "gin":
+                self.convs.append(conv_cls(d, dout, hidden=cfg.hidden_dims[-1],
+                                           impl=impl))
+            else:
+                self.convs.append(conv_cls(d, dout, ordering=cfg.ordering,
+                                           impl=impl))
+            d = dout
+
+    def init(self, key) -> Dict:
+        keys = jax.random.split(key, len(self.convs))
+        return {f"conv{i}": c.init(k) for i, (c, k) in
+                enumerate(zip(self.convs, keys))}
+
+    def apply(self, params, g: Graph, x,
+              blocked: Optional[BlockedGraph] = None) -> jnp.ndarray:
+        h = x
+        for i, conv in enumerate(self.convs):
+            h = conv.apply(params[f"conv{i}"], g, h,
+                           blocked=blocked if self.cfg.fused else None)
+            if i < len(self.convs) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss_fn(self, params, g: Graph, x, labels,
+                mask: Optional[jnp.ndarray] = None):
+        logits = self.apply(params, g, x)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, labels[:, None], axis=-1)[:, 0]
+        if mask is not None:
+            return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return nll.mean()
+
+    def make_blocked(self, g: Graph) -> BlockedGraph:
+        avg_deg = g.num_edges / max(1, g.num_vertices)
+        tile = suggest_tile_m(self.in_dim, self.cfg.hidden_dims[0], avg_deg)
+        return block_graph(g, tile)
+
+    # -- analytic per-phase costs (drives benchmarks + Table 3/4) ----------
+    def layer_costs(self, g: Graph, layer: int = 0) -> Dict:
+        conv = self.convs[layer]
+        din = conv.din
+        dims: List[int] = [din] + ([conv.hidden, conv.dout]
+                                   if self.cfg.conv == "gin" else [conv.dout])
+        order = conv.resolve_order(g)
+        agg_len = dims[0] if order == "aggregate_first" else dims[-1]
+        return {
+            "order": order,
+            "aggregation": phases.aggregate_cost(g, agg_len),
+            "combination": phases.combine_cost(g.num_vertices, dims),
+            "ordering_cost": ordering_cost(g, dims[0], dims[-1], order),
+        }
+
+
+def make_paper_model(name: str, spec: GraphSpec, impl: str = "xla",
+                     **overrides) -> GCNModel:
+    import dataclasses
+    cfg = PAPER_MODELS[name]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return GCNModel(cfg, in_dim=spec.feature_len,
+                    num_classes=spec.num_classes, impl=impl)

@@ -1,0 +1,245 @@
+"""Mamba-2 block: SSD (state-space duality) with chunked execution.
+
+[arXiv:2405.21060]  h_t = exp(dt_t * A_h) h_{t-1} + dt_t B_t x_t ; y_t = C_t h_t.
+
+The chunked SSD algorithm is itself an instance of the paper's
+phase-fusion insight: a memory-bound sequential recurrence (inter-chunk scan,
+the Aggregation-like irregular phase) interleaved with dense intra-chunk
+block GEMMs (Combination-like), executed at chunk granularity so the state
+never round-trips HBM per token.  We note this correspondence in DESIGN.md §4.
+
+Layout: heads H = d_inner / head_dim; B/C shared across heads in G groups.
+Train/prefill use the chunked scan (lax.scan over S/chunk steps); decode is
+the O(1)-state recurrence step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig
+from repro.launch.sharding import constrain
+from repro.nn.layers import gated_rmsnorm, init_dense, init_rmsnorm
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray       # (B, H, N, P) SSM state
+    conv: jnp.ndarray        # (B, conv_dim, d_conv-1) conv tail
+    length: jnp.ndarray      # () int32
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> Dict:
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    conv_dim = d_in + 2 * gn
+    ks = jax.random.split(key, 6)
+    return {
+        # input projections, SPLIT at the [z | xBC | dt] boundaries so each
+        # output's TP shard boundaries align with its consumer layout
+        # (a fused projection shards at arbitrary 1/16 offsets and forces
+        # per-layer resharding of z/xBC/dt -- observed in the mamba2
+        # train_4k profile as unsharded f32[B,S,5376] copies).
+        "z_proj": init_dense(ks[0], d_model, d_in, dtype),
+        "xbc_proj": init_dense(ks[5], d_model, conv_dim, dtype),
+        "dt_proj": init_dense(ks[2], d_model, h, dtype),
+        "out_proj": init_dense(ks[1], d_in, d_model, dtype,
+                               scale=d_in ** -0.5),
+        "conv_w": (jax.random.normal(ks[2], (conv_dim, cfg.d_conv),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),      # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 1e-2))),  # softplus^-1
+        "norm": init_rmsnorm(d_in),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  xbc: (B, S, C); w: (C, K); tail: (B,C,K-1)."""
+    bsz, s, c = xbc.shape
+    k = w.shape[1]
+    xt = xbc.transpose(0, 2, 1)                              # (B, C, S)
+    if tail is None:
+        xt = jnp.pad(xt, ((0, 0), (0, 0), (k - 1, 0)))
+    else:
+        xt = jnp.concatenate([tail.astype(xt.dtype), xt], axis=2)
+    out = jax.lax.conv_general_dilated(
+        xt[:, :, None, :], w.astype(xt.dtype)[:, None, None, :],
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c)[:, :, 0, :]
+    out = out + b.astype(out.dtype)[None, :, None]
+    return jax.nn.silu(out).transpose(0, 2, 1)               # (B, S, C)
+
+
+def _ssd_chunked(x, b_mat, c_mat, dt, a, cfg: SSMConfig,
+                 init_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); b_mat/c_mat: (B, S, G, N); dt: (B, S, H); a: (H,) (<0).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    q = min(cfg.chunk_size, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xg = x.reshape(bsz, nc, q, g, hg, p)
+    bg = b_mat.reshape(bsz, nc, q, g, n)
+    cg = c_mat.reshape(bsz, nc, q, g, n)
+    dtc = dt.reshape(bsz, nc, q, h)
+    da = dtc * a[None, None, None, :]                        # (B,nc,Q,H) <0
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def chunk_step(state, inp):
+        xc, bc, cc, dac, dtcc = inp                          # per-chunk slices
+        cum = jnp.cumsum(dac, axis=1)                        # (B,Q,H)
+        cum_g = cum.reshape(bsz, q, g, hg)
+        # off-diagonal: y_off[i] = exp(cum_i) * C_i . state
+        st_g = state.reshape(bsz, g, hg, n, p)
+        y_off = jnp.einsum("bqgn,bghnp->bqghp", cc, st_g)
+        y_off = y_off * jnp.exp(cum_g)[..., None]
+        # intra-chunk (the (B,H,Q,Q) tensors: compute_dtype traffic)
+        scores = jnp.einsum("bign,bjgn->bgij", cc.astype(cdt),
+                            bc.astype(cdt))                  # (B,G,Q,Q)
+        diff = cum_g.transpose(0, 2, 3, 1)                   # (B,G,Hg,Q)
+        m = jnp.exp(diff[..., :, None] - diff[..., None, :])  # (B,G,Hg,Q,Q)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        m = jnp.where(tri, m.astype(cdt), jnp.zeros((), cdt))
+        dtx = (xc.reshape(bsz, q, g, hg, p) *
+               dtcc.reshape(bsz, q, g, hg)[..., None]).astype(cdt)
+        t_mat = scores[:, :, None] * m                       # (B,G,Hg,Q,Q)
+        y_diag = jnp.einsum("bghij,bjghp->bighp", t_mat, dtx,
+                            preferred_element_type=jnp.float32)
+        y = (y_off.astype(jnp.float32) + y_diag).reshape(bsz, q, h, p)
+        # state update (f32 recurrence)
+        cum_last = cum[:, -1:, :]                            # (B,1,H)
+        w = jnp.exp(cum_last - cum)                          # (B,Q,H)
+        wg = w.reshape(bsz, q, g, hg)
+        s_c = jnp.einsum("bjgn,bjghp->bghnp", bc.astype(jnp.float32),
+                         dtx.astype(jnp.float32) * wg[..., None])
+        new_state = state * jnp.exp(cum_last[:, 0])[..., None, None] \
+            .reshape(bsz, h, 1, 1) + s_c.reshape(bsz, h, n, p)
+        return new_state, y
+
+    xs = (xg.transpose(1, 0, 2, 3, 4, 5).reshape(nc, bsz, q, g, hg, p)
+          .reshape(nc, bsz, q, h, p),
+          bg.transpose(1, 0, 2, 3, 4),
+          cg.transpose(1, 0, 2, 3, 4),
+          da.transpose(1, 0, 2, 3),
+          dtc.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(chunk_step, init_state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssd_reference(x, b_mat, c_mat, dt, a):
+    """Sequential per-token oracle (tests)."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hg = h // g
+    state = jnp.zeros((bsz, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        da = jnp.exp(dt[:, t] * a[None, :])                  # (B,H)
+        bt = jnp.repeat(b_mat[:, t], hg, axis=1)             # (B,H,N)
+        ct = jnp.repeat(c_mat[:, t], hg, axis=1)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt, x[:, t] * dt[:, t][..., None])
+        ys.append(jnp.einsum("bhn,bhnp->bhp", ct, state))
+    return jnp.stack(ys, axis=1), state
+
+
+def mamba2_block(params: Dict, x: jnp.ndarray, cfg: SSMConfig, *,
+                 cache: Optional[SSMCache] = None, make_cache: bool = False,
+                 ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """x: (B, S, D) -> (out (B,S,D), cache).  Decode when cache is not None."""
+    bsz, s, d_model = x.shape
+    d_in = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    conv_dim = d_in + 2 * gn
+
+    z = jnp.einsum("bsd,df->bsf", x, params["z_proj"]["w"].astype(x.dtype))
+    xbc = jnp.einsum("bsd,df->bsf", x,
+                     params["xbc_proj"]["w"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,df->bsf", x,
+                        params["dt_proj"]["w"].astype(x.dtype))
+    z = constrain(z, "batch", None, "mlp")
+    xbc = constrain(xbc, "batch", None, "mlp")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])
+    dt = constrain(dt, "batch", None, "heads")
+    a = -jnp.exp(params["A_log"])
+
+    if cache is not None:  # ---------- decode: single token ----------
+        assert s == 1
+        conv_in = jnp.concatenate(
+            [cache.conv, xbc.transpose(0, 2, 1).astype(cache.conv.dtype)],
+            axis=2)                                          # (B,C,K)
+        conv_out = (conv_in * params["conv_w"][None].astype(conv_in.dtype)
+                    ).sum(-1) + params["conv_b"][None]
+        xbc_act = jax.nn.silu(conv_out)                      # (B, conv_dim)
+        new_conv = conv_in[:, :, 1:]
+        xs = xbc_act[:, :d_in].reshape(bsz, h, -1)           # (B,H,P)
+        b_t = xbc_act[:, d_in:d_in + gn].reshape(bsz, cfg.n_groups, -1)
+        c_t = xbc_act[:, d_in + gn:].reshape(bsz, cfg.n_groups, -1)
+        hg = h // cfg.n_groups
+        bt = jnp.repeat(b_t, hg, axis=1)
+        ct = jnp.repeat(c_t, hg, axis=1)
+        dt1 = dt[:, 0]                                       # (B,H)
+        da = jnp.exp(dt1 * a[None, :])
+        state = cache.state * da[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xs.astype(jnp.float32) * dt1[..., None])
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+        new_cache = SSMCache(state, new_conv, cache.length + 1)
+    else:  # ---------- train / prefill: chunked scan ----------
+        xbc_raw = xbc  # unpadded; conv tail for the cache comes from here
+        s_pad = -(-s // cfg.chunk_size) * cfg.chunk_size if s > cfg.chunk_size \
+            else s
+        if s_pad != s:
+            xbc = jnp.pad(xbc, ((0, 0), (0, s_pad - s), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, s_pad - s), (0, 0)))
+        xbc_act = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xbc_act = constrain(xbc_act, "batch", None, "mlp")
+        xs = xbc_act[..., :d_in].reshape(bsz, s_pad, h, -1)
+        # TP over SSD heads: the intra-chunk decay/score tensors are
+        # (B, H, Q, Q)-shaped -- unsharded they dominate activation memory
+        # (observed 566 GiB/device at jamba train_4k).
+        xs = constrain(xs, "batch", None, "heads", None)
+        b_mat = xbc_act[..., d_in:d_in + gn].reshape(bsz, s_pad,
+                                                     cfg.n_groups, -1)
+        c_mat = xbc_act[..., d_in + gn:].reshape(bsz, s_pad,
+                                                 cfg.n_groups, -1)
+        # B/C are per-group (tiny) and consumed by every head: replicate
+        b_mat = constrain(b_mat, "batch", None, None, None)
+        c_mat = constrain(c_mat, "batch", None, None, None)
+        cdt = jnp.dtype(cfg.compute_dtype)
+        y, state = _ssd_chunked(xs.astype(cdt), b_mat.astype(cdt),
+                                c_mat.astype(cdt), dt, a, cfg)
+        y = constrain(y, "batch", None, "heads", None)
+        y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y[:, :s].reshape(bsz, s, d_in).astype(x.dtype)
+        new_cache = None
+        if make_cache:
+            tail = xbc_raw.transpose(0, 2, 1)[:, :, s - (cfg.d_conv - 1):]
+            new_cache = SSMCache(state, tail.astype(jnp.float32),
+                                 jnp.asarray(s, jnp.int32))
+
+    y = gated_rmsnorm(params["norm"], y, z)
+    return jnp.einsum("bsf,fd->bsd", y,
+                      params["out_proj"]["w"].astype(y.dtype)), new_cache

@@ -1,0 +1,43 @@
+"""MLP-MNIST baseline (paper Table 1: 784–128, batch 1000).
+
+The paper contrasts GCN Combination against a plain fully-connected layer
+classifying single samples: parameters are NOT shared across a neighborhood,
+and batch parallelism is the only parallelism.  Synthetic MNIST-shaped data
+(no network access) -- the characterization depends only on shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.phases import combine_cost
+
+MNIST_IN, MNIST_OUT, MNIST_BATCH = 784, 128, 1000
+
+
+def init_mlp(key, din: int = MNIST_IN, dout: int = MNIST_OUT) -> Dict:
+    return {"w": jax.random.normal(key, (din, dout)) * (2.0 / din) ** 0.5,
+            "b": jnp.zeros((dout,))}
+
+
+def apply_mlp(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.relu(x @ params["w"] + params["b"])
+
+
+def mlp_cost(batch: int = MNIST_BATCH, din: int = MNIST_IN,
+             dout: int = MNIST_OUT) -> dict:
+    """Cost + parameter-reuse factor (paper §4.3): reuse = rows per weight."""
+    c = combine_cost(batch, (din, dout))
+    c["param_reuse"] = batch  # each weight used once per row
+    return c
+
+
+def synthetic_mnist(key, batch: int = MNIST_BATCH) -> Tuple[jnp.ndarray,
+                                                            jnp.ndarray]:
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (batch, MNIST_IN))
+    y = jax.random.randint(ky, (batch,), 0, 10)
+    return x, y

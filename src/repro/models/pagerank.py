@@ -1,0 +1,63 @@
+"""PageRank -- the paper's classic-graph-processing baseline (Gunrock, PGR).
+
+Feature length is 1 (one scalar rank per vertex): the contrast case for every
+aggregation-phase observation (F3 spatial locality, F4 reuse distance, the
+atomic-collision model).  Implemented as power iteration over the same
+destination-sorted edge list the GCN aggregation uses, so every comparison is
+apples-to-apples on the identical graph structure.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.phases import aggregate_cost
+from repro.graph.structure import Graph
+
+
+def pagerank(g: Graph, damping: float = 0.85, iters: int = 20,
+             tol: float = 0.0) -> jnp.ndarray:
+    """Standard power iteration: r = (1-d)/V + d * A^T (r / outdeg)."""
+    v = g.num_vertices
+    out_deg = jnp.maximum(g.out_deg.astype(jnp.float32), 1.0)
+
+    def step(r, _):
+        contrib = r / out_deg
+        gathered = jnp.take(contrib, g.src)            # feature_len == 1
+        summed = jax.ops.segment_sum(gathered, g.dst, num_segments=v)
+        # dangling mass redistributed uniformly
+        dangling = jnp.where(g.out_deg == 0, r, 0.0).sum()
+        r_new = (1.0 - damping) / v + damping * (summed + dangling / v)
+        return r_new, jnp.abs(r_new - r).sum()
+
+    r0 = jnp.full((v,), 1.0 / v, jnp.float32)
+    r, deltas = jax.lax.scan(step, r0, None, length=iters)
+    return r
+
+
+def pagerank_cost(g: Graph, iters: int = 1) -> dict:
+    """Per-iteration byte/flop accounting -- the PGR column of Fig. 2/Table 3."""
+    c = aggregate_cost(g, feature_len=1, include_self=False)
+    return {k: (v * iters if isinstance(v, (int, float)) else v)
+            for k, v in c.items()}
+
+
+def pagerank_reference(g: Graph, damping: float = 0.85, iters: int = 20
+                       ) -> jnp.ndarray:
+    """Dense-matrix oracle for tests (O(V^2); small graphs only)."""
+    import numpy as np
+    v = g.num_vertices
+    a = np.zeros((v, v), np.float64)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    np.add.at(a, (dst, src), 1.0)
+    out_deg = np.maximum(np.asarray(g.out_deg, np.float64), 1.0)
+    r = np.full(v, 1.0 / v)
+    for _ in range(iters):
+        contrib = r / out_deg
+        dangling = r[np.asarray(g.out_deg) == 0].sum()
+        r = (1 - damping) / v + damping * (a @ contrib + dangling / v)
+    return jnp.asarray(r, jnp.float32)

@@ -1,0 +1,364 @@
+"""Decoder LM backbone for all assigned architectures.
+
+Heterogeneous layer stacks (gemma2 local/global alternation, jamba 1:7
+attn:mamba + alternating MoE) are handled by grouping layers into a repeating
+PERIOD of positions; parameters are stacked per position over period
+repetitions and the stack executes under one ``lax.scan`` -- HLO stays
+period-sized regardless of depth (95-layer deepseek compiles the same program
+as a 1-layer toy), which is what keeps the 512-device dry-runs tractable.
+
+Entry points:
+  init_lm(cfg, key)                         -> params pytree
+  lm_forward(params, cfg, tokens, ...)      -> logits           (train/eval)
+  lm_prefill(params, cfg, tokens, cache_sz) -> (logits, caches) (serving)
+  lm_decode_step(params, cfg, tok, caches)  -> (logits, caches) (serving)
+  lm_loss(params, cfg, tokens, labels)      -> scalar + metrics
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.launch.sharding import constrain
+from repro.models.mamba2 import SSMCache, init_mamba2, mamba2_block
+from repro.models.moe import init_moe, moe_ffn
+from repro.nn.attention import (KVCache, attention_block, init_attention)
+from repro.nn.layers import (embed, init_embedding, init_mlp, init_rmsnorm,
+                             mlp, rmsnorm, softcap, unembed)
+
+
+# ---------------------------------------------------------------------------
+# Layer-period machinery
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerPos:
+    """Static description of one position inside the repeating period."""
+    index: int
+    kind: str        # "attn" | "ssm"
+    moe: bool
+    local: bool      # sliding-window attention (gemma2 even layers)
+
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def layer_period(cfg: LMConfig) -> int:
+    p = 1
+    if cfg.attention is not None and cfg.attention.local_global_alternate:
+        p = _lcm(p, 2)
+    if cfg.ssm is not None and cfg.attention is not None and cfg.attn_every:
+        p = _lcm(p, cfg.attn_every)
+    if cfg.moe is not None and cfg.moe.layer_pattern == "every_2":
+        p = _lcm(p, 2)
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return p
+
+
+def layer_positions(cfg: LMConfig) -> List[LayerPos]:
+    return [LayerPos(i,
+                     "attn" if cfg.layer_is_attention(i) else "ssm",
+                     cfg.layer_is_moe(i),
+                     cfg.layer_is_local(i))
+            for i in range(layer_period(cfg))]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_one_layer(key, cfg: LMConfig, pos: LayerPos, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_rmsnorm(cfg.d_model),
+                         "ln2": init_rmsnorm(cfg.d_model)}
+    if pos.kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg.d_model, cfg.attention, dtype)
+    else:
+        p["ssm"] = init_mamba2(ks[0], cfg.d_model, cfg.ssm, dtype)
+    if pos.moe:
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.moe,
+                            cfg.mlp_activation, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                            cfg.mlp_activation, dtype)
+    else:
+        del p["ln2"]  # pure-SSM block (mamba2): no FFN sub-block
+    if cfg.name.startswith("gemma2"):
+        p["ln1_post"] = init_rmsnorm(cfg.d_model)
+        p["ln2_post"] = init_rmsnorm(cfg.d_model)
+    return p
+
+
+def init_lm(cfg: LMConfig, key) -> Dict:
+    dtype = jnp.dtype(cfg.dtype)
+    positions = layer_positions(cfg)
+    period = len(positions)
+    n_rep = cfg.num_layers // period
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+
+    def init_rep(k):
+        kk = jax.random.split(k, period)
+        return {f"pos{p.index}": _init_one_layer(kk[p.index], cfg, p, dtype)
+                for p in positions}
+
+    layer_keys = jax.random.split(k_layers, n_rep)
+    # vmap stacking: leaves become (n_rep, ...) arrays
+    blocks = jax.vmap(init_rep)(layer_keys)
+
+    params = {
+        "embed": init_embedding(k_embed, cfg.padded_vocab, cfg.d_model,
+                                dtype),
+        "final_ln": init_rmsnorm(cfg.d_model),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(k_head, cfg.padded_vocab,
+                                           cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(lp: Dict, x, cfg: LMConfig, pos: LayerPos, *,
+                 cache=None, make_cache=False, cache_size=0,
+                 attn_impl="auto"):
+    """One transformer/ssm block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.attention.sliding_window if (
+        pos.kind == "attn" and pos.local) else 0
+    sandwich = "ln1_post" in lp
+
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    if pos.kind == "attn":
+        out, new_inner = attention_block(
+            lp["attn"], h, cfg.attention, layer_window=window,
+            cache=cache, make_cache=make_cache, cache_size=cache_size,
+            impl=attn_impl)
+        out = constrain(out, "batch", "seq", "embed")
+    else:
+        out, new_inner = mamba2_block(lp["ssm"], h, cfg.ssm, cache=cache,
+                                      make_cache=make_cache)
+    if sandwich:
+        out = rmsnorm(lp["ln1_post"], out, cfg.norm_eps)
+    x = x + out
+
+    if "ln2" in lp:  # mamba2 pure-SSM blocks have no FFN sub-block
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if pos.moe:
+            # decode is dropless: capacity drops would corrupt generation
+            out, aux = moe_ffn(lp["moe"], h, cfg.moe, cfg.mlp_activation,
+                               dropless=cache is not None)
+        else:
+            out = mlp(lp["mlp"], h, cfg.mlp_activation)
+        if sandwich:
+            out = rmsnorm(lp["ln2_post"], out, cfg.norm_eps)
+        x = x + out
+    x = constrain(x, "batch", "seq", "embed")
+    return x, new_inner, aux
+
+
+def _cache_tree_slice(caches, rep):
+    if caches is None:
+        return None
+    return jax.tree.map(lambda a: a[rep], caches)
+
+
+def _run_stack(params, cfg: LMConfig, x, *, caches=None, cache_length=None,
+               make_cache=False, cache_size=0, remat: str = "none",
+               attn_impl="auto"):
+    """Scan the layer stack.  Returns (x, new_caches, total_aux)."""
+    positions = layer_positions(cfg)
+
+    def period_body(carry, xs):
+        h, aux_acc = carry
+        h = h.astype(jnp.dtype(cfg.dtype))  # keep the saved carry bf16
+        block_params, cache_slice = xs
+        new_cache_slice = {}
+        for pos in positions:
+            lp = block_params[f"pos{pos.index}"]
+            inner = None
+            if cache_slice is not None and f"pos{pos.index}" in cache_slice:
+                raw = cache_slice[f"pos{pos.index}"]
+                if pos.kind == "attn":
+                    inner = KVCache(raw["k"], raw["v"], cache_length)
+                else:
+                    inner = SSMCache(raw["state"], raw["conv"], cache_length)
+            h, new_inner, aux = _apply_layer(
+                lp, h, cfg, pos, cache=inner, make_cache=make_cache,
+                cache_size=cache_size, attn_impl=attn_impl)
+            if new_inner is not None:
+                if pos.kind == "attn":
+                    new_cache_slice[f"pos{pos.index}"] = {
+                        "k": new_inner.k, "v": new_inner.v}
+                else:
+                    new_cache_slice[f"pos{pos.index}"] = {
+                        "state": new_inner.state, "conv": new_inner.conv}
+            aux_acc = aux_acc + aux
+        return (h, aux_acc), (new_cache_slice or None)
+
+    body = period_body
+    if remat == "full":
+        body = jax.checkpoint(period_body, prevent_cse=False)
+    elif remat == "selective":
+        body = jax.checkpoint(
+            period_body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = (params["blocks"], caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        xs)
+    return x, new_caches, aux
+
+
+def _embed_inputs(params, cfg: LMConfig, tokens, embeds):
+    scale = cfg.name.startswith(("gemma", "internvl")) is False
+    x = embed(params["embed"], tokens,
+              scale_by_sqrt_d=cfg.name.startswith("gemma"))
+    if embeds is not None:  # VLM/audio frontend stub: prepend embeddings
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(params, cfg: LMConfig, x):
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padding ids to -inf
+        pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                             0.0, -1e30).astype(logits.dtype)
+        logits = logits + pad_mask
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def lm_forward(params, cfg: LMConfig, tokens, embeds=None,
+               remat: str = "none", attn_impl: str = "auto") -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S_total, vocab)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    x = constrain(x, "batch", "seq", "embed")
+    x, _, aux = _run_stack(params, cfg, x, remat=remat, attn_impl=attn_impl)
+    return _logits(params, cfg, x), aux
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, embeds=None,
+            remat: str = "none", attn_impl: str = "auto",
+            ce_chunk: int = 2048):
+    """Next-token CE, computed CHUNKED over tokens.
+
+    Materializing full (tokens, vocab) f32 logits dominates peak memory at
+    256k-vocab scale (observed: 4x 2.5 GiB/device buffers at kimi-k2).  The
+    unembed + log-softmax therefore run per token-chunk under jax.checkpoint
+    -- the classic chunked-CE trick; backward recomputes chunk logits.
+
+    labels == -100 are masked (frontend positions, padding).
+    """
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    x = constrain(x, "batch", "seq", "embed")
+    x, _, aux = _run_stack(params, cfg, x, remat=remat, attn_impl=attn_impl)
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    if embeds is not None:  # frontend prefix positions carry no labels
+        x = x[:, embeds.shape[1]:]
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    table = head["table"]
+
+    b, s, d = x.shape
+    t = b * s
+    chunk = min(ce_chunk, t)
+    if t % chunk != 0:
+        chunk = t  # fallback: unchunked for odd tiny shapes
+    xf = x.reshape(t, d)
+    lf = labels.reshape(t)
+
+    @jax.checkpoint
+    def chunk_ce(x_c, l_c):
+        logits = jnp.einsum("td,vd->tv", x_c, table.astype(x_c.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, cfg.final_logit_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                            0.0, -1e30).astype(logits.dtype)
+            logits = logits + pad
+        valid = l_c >= 0
+        safe = jnp.where(valid, l_c, 0)
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, safe[:, None], axis=-1)[:, 0]
+        return (nll * valid).sum(), valid.sum()
+
+    def body(carry, io):
+        x_c, l_c = io
+        tot, cnt = carry
+        ls, n = chunk_ce(x_c, l_c)
+        return (tot + ls, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xf.reshape(t // chunk, chunk, d), lf.reshape(t // chunk, chunk)))
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches_abstract(cfg: LMConfig, batch: int, cache_size: int):
+    """ShapeDtypeStructs for the stacked cache pytree (decode dry-runs)."""
+    positions = layer_positions(cfg)
+    n_rep = cfg.num_layers // len(positions)
+    dtype = jnp.dtype(cfg.dtype)
+    tree = {}
+    for pos in positions:
+        if pos.kind == "attn":
+            a = cfg.attention
+            shp = (n_rep, batch, a.num_kv_heads, cache_size, a.head_dim)
+            tree[f"pos{pos.index}"] = {
+                "k": jax.ShapeDtypeStruct(shp, dtype),
+                "v": jax.ShapeDtypeStruct(shp, dtype)}
+        else:
+            s = cfg.ssm
+            h = s.n_heads(cfg.d_model)
+            conv_dim = s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state
+            tree[f"pos{pos.index}"] = {
+                "state": jax.ShapeDtypeStruct(
+                    (n_rep, batch, h, s.d_state, s.head_dim), jnp.float32),
+                "conv": jax.ShapeDtypeStruct(
+                    (n_rep, batch, conv_dim, s.d_conv - 1), jnp.float32)}
+    return tree
+
+
+def lm_prefill(params, cfg: LMConfig, tokens, cache_size: int, embeds=None,
+               attn_impl: str = "auto"):
+    """Forward + cache build.  Returns (last-token logits, caches, length)."""
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    x = constrain(x, "batch", "seq", "embed")
+    x, caches, _ = _run_stack(params, cfg, x, make_cache=True,
+                              cache_size=cache_size, attn_impl=attn_impl)
+    logits = _logits(params, cfg, x[:, -1:])
+    length = jnp.asarray(x.shape[1], jnp.int32)
+    return logits, caches, length
+
+
+def lm_decode_step(params, cfg: LMConfig, token, caches, length,
+                   attn_impl: str = "auto"):
+    """One-token decode.  token: (B, 1) -> (logits, new_caches, new_length)."""
+    x = embed(params["embed"], token,
+              scale_by_sqrt_d=cfg.name.startswith("gemma"))
+    x = constrain(x, "batch", "seq", "embed")
+    x, new_caches, _ = _run_stack(params, cfg, x, caches=caches,
+                                  cache_length=length, attn_impl=attn_impl)
+    logits = _logits(params, cfg, x)
+    return logits, new_caches, length + 1

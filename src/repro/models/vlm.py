@@ -1,0 +1,39 @@
+"""VLM composition helpers (internvl2-1b): frontend stub + backbone glue.
+
+Per the assignment, the vision frontend is a STUB: ``input_specs`` provides
+precomputed patch embeddings occupying the first ``NUM_PATCH_TOKENS``
+positions.  The backbone is models/transformer.py; this module holds the
+composition conventions so launchers/tests share one definition.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LMConfig
+from repro.configs.internvl2_1b import NUM_PATCH_TOKENS
+from repro.models.transformer import lm_forward, lm_loss, lm_prefill
+
+
+def stub_patch_embeds(key, batch: int, cfg: LMConfig,
+                      n_patches: int = NUM_PATCH_TOKENS) -> jnp.ndarray:
+    """Stand-in for InternViT+pixel-shuffle output: (B, P, d_model)."""
+    return jax.random.normal(key, (batch, n_patches, cfg.d_model)) * 0.02
+
+
+def vlm_forward(params, cfg: LMConfig, patch_embeds, tokens, **kw):
+    """logits over [patch positions ++ token positions]."""
+    return lm_forward(params, cfg, tokens, embeds=patch_embeds, **kw)
+
+
+def vlm_loss(params, cfg: LMConfig, patch_embeds, tokens, labels, **kw):
+    """CE over the text positions only (patch positions carry no labels)."""
+    return lm_loss(params, cfg, tokens, labels, embeds=patch_embeds, **kw)
+
+
+def vlm_prefill(params, cfg: LMConfig, patch_embeds, tokens,
+                cache_size: int):
+    """Image+prompt prefill; the cache includes the patch positions."""
+    assert cache_size >= patch_embeds.shape[1] + tokens.shape[1]
+    return lm_prefill(params, cfg, tokens, cache_size, embeds=patch_embeds)

@@ -1,0 +1,213 @@
+"""Flash attention with a custom VJP: O(chunk^2) memory in forward AND backward.
+
+Plain autodiff through blockwise attention saves every chunk's probability
+matrix for the backward pass, resurrecting the O(S^2) memory the forward
+carefully avoided (observed directly in the internvl train_4k dry-run: a
+168 GiB/device saved-probabilities buffer).  The standard fix -- and the one
+every production system ships -- is recomputation: save only (q, k, v, out,
+row-logsumexp) and rebuild each (q_chunk x kv_chunk) score tile on the fly in
+the backward sweep.
+
+Math (per tile, with optional logit softcap c and masks M):
+  Z = scale Q K^T ; S = c tanh(Z/c) ; P = exp(S - L_row)  (L = logsumexp)
+  dV += P^T dO
+  dP  = dO V^T ;  D = rowsum(dO * O)
+  dS  = P * (dP - D)
+  dZ  = dS * (1 - (S/c)^2)            (tanh softcap jacobian; dZ=dS if c=0)
+  dQ += scale dZ K ; dK += scale dZ^T Q
+
+GQA: K/V gradients sum over the query-head group dim.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _fwd_scan(q, k, v, q_start, *, causal, window, cap, q_chunk, kv_chunk):
+    """Returns (out, lse) with out (B,Hkv,G,Sq,D), lse (B,Hkv,G,Sq)."""
+    b, hkv, g, sq, d = q.shape
+    sk = k.shape[2]
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    q_off = q_start.astype(jnp.int32)
+    qs = q.reshape(b, hkv, g, nq, q_chunk, d)
+
+    def per_q(qi):
+        qc = qs[:, :, :, qi].astype(jnp.float32)
+        qpos = q_off + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk,
+                                              axis=2).astype(jnp.float32)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk,
+                                              axis=2).astype(jnp.float32)
+            z = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc)
+            if cap > 0:
+                z = cap * jnp.tanh(z / cap)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            msk = _mask(qpos, kpos, causal, window)
+            z = jnp.where(msk[None, None, None], z, NEG_INF)
+            m_cur = jnp.max(z, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_run, m_cur)
+            m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.where(msk[None, None, None],
+                          jnp.exp(z - m_safe), 0.0)
+            alpha = jnp.exp(jnp.where(m_run <= NEG_INF / 2, NEG_INF,
+                                      m_run - m_safe))
+            l_new = l_run * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vc)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(nk))
+        l_safe = jnp.where(l_f == 0.0, 1.0, l_f)
+        out = acc / l_safe
+        lse = (m_f + jnp.log(l_safe))[..., 0]
+        return out.astype(q.dtype), lse
+
+    outs = jax.lax.map(per_q, jnp.arange(nq))      # (nq,b,hkv,g,qc,*)
+    out = outs[0].transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, sq, d)
+    lse = outs[1].transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def flash_mha(q, k, v, q_start, causal: bool = True, window: int = 0,
+              cap: float = 0.0, q_chunk: int = 2048, kv_chunk: int = 1024):
+    """q: (B,Hkv,G,Sq,D) pre-scaled; k/v: (B,Hkv,Sk,D).  Out like q.
+
+    ``q_start``: f32 scalar -- absolute position of q row 0 (context-parallel
+    shards pass sk - sq_global + axis_index * local_sq).
+    """
+    out, _ = _fwd_scan(q, k, v, q_start, causal=causal, window=window,
+                       cap=cap, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, q_start, causal, window, cap, q_chunk, kv_chunk):
+    out, lse = _fwd_scan(q, k, v, q_start, causal=causal, window=window,
+                         cap=cap, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out, (q, k, v, q_start, out, lse)
+
+
+def _tile_grads(qc, doc, lsec, dc, kc, vc, qpos, kpos, causal, window, cap,
+                tile_dtype=jnp.float32):
+    """Recompute one (q_chunk x kv_chunk) tile; return (ds, p).
+
+    The recomputed score/probability tiles are emitted in the MODEL's
+    compute dtype (``tile_dtype`` = q's dtype): they are pure recompute
+    traffic feeding MXU dots (f32-accumulated), and at 32k sequences the
+    f32 versions dominated backward HBM bytes.  f32-input tests keep full
+    precision.
+    """
+    z = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc)
+    s = cap * jnp.tanh(z / cap) if cap > 0 else z
+    msk = _mask(qpos, kpos, causal, window)[None, None, None]
+    p = jnp.where(msk, jnp.exp(s - lsec[..., None]), 0.0)
+    dp = jnp.einsum("bhgqd,bhkd->bhgqk", doc, vc)
+    ds = p * (dp - dc[..., None])
+    if cap > 0:
+        ds = ds * (1.0 - jnp.square(s / cap))
+    return ds.astype(tile_dtype), p.astype(tile_dtype)
+
+
+def _flash_bwd(causal, window, cap, q_chunk, kv_chunk, res, dout):
+    """Two-pass flash backward.
+
+    Pass A (dq): scan q chunks, accumulate over kv chunks, EMIT dq chunks.
+    Pass B (dk/dv): scan kv chunks, accumulate over q chunks, EMIT chunks.
+    Carries and ys stay chunk-sized -- no full-size zero-init carries or
+    dynamic_update_slice, which GSPMD otherwise reshards by gathering the
+    whole batch (observed: 3.8 GB/step all-gathers in the internvl cell).
+    """
+    q, k, v, q_start, out, lse = res
+    b, hkv, g, sq, d = q.shape
+    sk = k.shape[2]
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    q_off = q_start.astype(jnp.int32)
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                   # (b,hkv,g,sq)
+
+    def slc(x, i, chunk, axis):
+        return jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=axis)
+
+    # ---- pass A: dq ----
+    def qi_step(_, qi):
+        qc = slc(q, qi, q_chunk, 3).astype(jnp.float32)
+        doc = slc(dout, qi, q_chunk, 3).astype(jnp.float32)
+        lsec = slc(lse, qi, q_chunk, 3)
+        dc = slc(delta, qi, q_chunk, 3)
+        qpos = q_off + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(dq_acc, ki):
+            kc = slc(k, ki, kv_chunk, 2).astype(jnp.float32)
+            vc = slc(v, ki, kv_chunk, 2).astype(jnp.float32)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            ds, _ = _tile_grads(qc, doc, lsec, dc, kc, vc, qpos, kpos,
+                                causal, window, cap, tile_dtype=q.dtype)
+            return dq_acc + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", ds, kc.astype(ds.dtype),
+                preferred_element_type=jnp.float32), None
+
+        dq0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        dq_c, _ = jax.lax.scan(kv_step, dq0, jnp.arange(nk))
+        return 0, dq_c
+
+    _, dqs = jax.lax.scan(qi_step, 0, jnp.arange(nq))          # (nq,b,h,g,qc,d)
+    dq = dqs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, sq, d)
+
+    # ---- pass B: dk, dv ----
+    def ki_step(_, ki):
+        kc = slc(k, ki, kv_chunk, 2).astype(jnp.float32)
+        vc = slc(v, ki, kv_chunk, 2).astype(jnp.float32)
+        kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+
+        def q_step(carry, qi):
+            dk_acc, dv_acc = carry
+            qc = slc(q, qi, q_chunk, 3).astype(jnp.float32)
+            doc = slc(dout, qi, q_chunk, 3).astype(jnp.float32)
+            lsec = slc(lse, qi, q_chunk, 3)
+            dc = slc(delta, qi, q_chunk, 3)
+            qpos = q_off + qi * q_chunk + jnp.arange(q_chunk)
+            ds, p = _tile_grads(qc, doc, lsec, dc, kc, vc, qpos, kpos,
+                                causal, window, cap, tile_dtype=q.dtype)
+            dk_acc = dk_acc + jnp.einsum(
+                "bhgqk,bhgqd->bhkd", ds, qc.astype(ds.dtype),
+                preferred_element_type=jnp.float32)
+            dv_acc = dv_acc + jnp.einsum(
+                "bhgqk,bhgqd->bhkd", p, doc.astype(p.dtype),
+                preferred_element_type=jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, hkv, kv_chunk, d), jnp.float32)
+        (dk_c, dv_c), _ = jax.lax.scan(q_step, (z, z), jnp.arange(nq))
+        return 0, (dk_c, dv_c)
+
+    _, (dks, dvs) = jax.lax.scan(ki_step, 0, jnp.arange(nk))   # (nk,b,h,kc,d)
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(b, hkv, sk, d)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(b, hkv, sk, d)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(q_start))
+
+
+flash_mha.defvjp(_flash_fwd, _flash_bwd)

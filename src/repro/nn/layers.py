@@ -1,0 +1,147 @@
+"""Core NN layers: norms, dense/MLP variants, embeddings, rotary positions.
+
+Functional style: ``init_*`` returns a params pytree of plain jnp arrays,
+``apply`` functions are pure.  Compute dtype is bf16-by-default with fp32
+accumulation (preferred_element_type) -- the TPU-native convention.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # (1 + scale) * x-hat
+
+
+def rmsnorm(params: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    return (xn * (1.0 + params["scale"])).astype(dt)
+
+
+def gated_rmsnorm(params: Dict, x: jnp.ndarray, z: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    """Mamba2's norm-then-gate: RMSNorm(x * silu(z))."""
+    return rmsnorm(params, x * jax.nn.silu(z.astype(x.dtype)), eps)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MLP
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, din: int, dout: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> Dict:
+    s = scale if scale is not None else din ** -0.5
+    return {"w": (jax.random.normal(key, (din, dout), jnp.float32) * s
+                  ).astype(dtype)}
+
+
+def dense(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, params["w"].astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str,
+             dtype=jnp.float32) -> Dict:
+    ks = _split(key, 3)
+    p = {"wi": init_dense(ks[0], d_model, d_ff, dtype),
+         "wo": init_dense(ks[1], d_ff, d_model, dtype,
+                          scale=d_ff ** -0.5)}
+    if activation in ("swiglu", "geglu"):
+        p["wg"] = init_dense(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params: Dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    h = dense(params["wi"], x)
+    if activation == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x)) * h
+    elif activation == "geglu":
+        h = jax.nn.gelu(dense(params["wg"], x), approximate=True) * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(h, approximate=True)
+    elif activation == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(activation)
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Dict:
+    # d^-0.5 keeps tied-unembed logits O(1) at init (gemma's sqrt(d) embed
+    # scaling restores unit-variance activations on the way in).
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * d ** -0.5).astype(dtype)}
+
+
+def embed(params: Dict, ids: jnp.ndarray, scale_by_sqrt_d: bool = False
+          ) -> jnp.ndarray:
+    out = jnp.take(params["table"], ids, axis=0)
+    if scale_by_sqrt_d:
+        out = out * (params["table"].shape[1] ** 0.5)
+    return out
+
+
+def unembed(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,vd->...v", x,
+                      params["table"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (dim / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.optim.optimizer import (adamw_init, adamw_update, cosine_lr,
+                                   global_norm, TrainState, make_train_state)

@@ -1,0 +1,172 @@
+"""Batched serving engine: continuous-batching decode over a static KV cache.
+
+Serving shape of the assigned cells: ``prefill_*`` lowers ``prefill_step``
+(build cache + first logits), ``decode_*`` lowers one ``decode_step`` (one
+token for every sequence in the batch against a seq_len cache).
+
+Engine features:
+  * request queue with admission up to ``max_batch`` concurrent sequences,
+  * slot-based continuous batching: finished sequences free their slot and
+    the next request's prefill fills it (prefill-into-slot),
+  * greedy / temperature sampling,
+  * per-request max_tokens + EOS stop,
+  * static shapes throughout (jit-stable): the cache is allocated once at
+    ``cache_size`` and positions advance per step.
+
+The multi-chip layout comes from launch/specs.py (batch over data, cache
+sequence over model); on one CPU device the same code runs unsharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import LMConfig
+from repro.models.transformer import (init_caches_abstract, lm_decode_step,
+                                      lm_prefill)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    enqueue_t: float = 0.0
+    finish_t: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: LMConfig, params, *, max_batch: int = 8,
+                 cache_size: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_size = cache_size
+        self.rng = np.random.default_rng(seed)
+        self._decode = jax.jit(
+            lambda p, tok, caches, length: lm_decode_step(p, cfg, tok,
+                                                          caches, length))
+        self._queue: List[Request] = []
+        self._active: Dict[int, Request] = {}   # slot -> request
+        self._finished_at_prefill: List[Request] = []
+        self._caches = None
+        self._length = None
+        self._last_tokens = np.zeros((max_batch, 1), np.int32)
+        self._steps = 0
+
+    # --------------------------------------------------------------- public
+    def submit(self, req: Request) -> None:
+        req.enqueue_t = time.time()
+        self._queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive the loop until queue + active drain.  Returns finished."""
+        finished: List[Request] = []
+        self._finished_at_prefill: List[Request] = []
+        while (self._queue or self._active) and self._steps < max_steps:
+            self._admit()
+            finished.extend(self._finished_at_prefill)
+            self._finished_at_prefill = []
+            finished.extend(self._step())
+        return finished
+
+    # ------------------------------------------------------------- internal
+    def _admit(self) -> None:
+        """Prefill waiting requests into free slots (continuous batching)."""
+        free = [s for s in range(self.max_batch) if s not in self._active]
+        while free and self._queue:
+            slot = free.pop(0)
+            req = self._queue.pop(0)
+            self._prefill_into_slot(slot, req)
+            # the prefill's first sampled token may already finish the request
+            tok = req.output[-1]
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.output) >= req.max_tokens:
+                req.done = True
+                req.finish_t = time.time()
+                self._finished_at_prefill.append(req)
+                free.insert(0, slot)
+                continue
+            self._active[slot] = req
+
+    def _ensure_caches(self):
+        if self._caches is None:
+            abstract = init_caches_abstract(self.cfg, self.max_batch,
+                                            self.cache_size)
+            self._caches = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), abstract)
+            # per-slot lengths: slots are fully independent sequences
+            self._length = jnp.zeros((self.max_batch,), jnp.int32)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        """Single-sequence prefill written into the batch cache at `slot`.
+
+        Per-slot cache lengths make admission exact at any time: the new
+        sequence's rows live at positions [0, L) of ITS slot and its RoPE
+        positions restart at 0, independent of every other slot.
+        """
+        self._ensure_caches()
+        prompt = np.asarray(req.prompt, np.int32)[None, :]     # (1, L)
+        logits, caches1, _ = lm_prefill(
+            self.params, self.cfg, jnp.asarray(prompt),
+            cache_size=self.cache_size)
+
+        def write(batch_cache, one_cache):
+            return batch_cache.at[:, slot:slot + 1].set(
+                one_cache.astype(batch_cache.dtype))
+
+        self._caches = jax.tree.map(write, self._caches, caches1)
+        self._length = self._length.at[slot].set(prompt.shape[1])
+        tok = self._sample(np.asarray(logits)[:, -1], req)
+        req.output.append(int(tok))
+        self._last_tokens[slot, 0] = tok
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        logits = np.asarray(logits, np.float64).reshape(-1)
+        if req.temperature <= 0:
+            return int(logits.argmax())
+        p = np.exp(logits / req.temperature - np.max(logits /
+                                                     req.temperature))
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def _step(self) -> List[Request]:
+        if not self._active:
+            return []
+        toks = jnp.asarray(self._last_tokens)
+        logits, self._caches, self._length = self._decode(
+            self.params, toks, self._caches, self._length)
+        self._steps += 1
+        logits_np = np.asarray(logits)[:, 0]
+        finished = []
+        for slot, req in list(self._active.items()):
+            tok = self._sample(logits_np[slot], req)
+            req.output.append(tok)
+            self._last_tokens[slot, 0] = tok
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.output) >= req.max_tokens or \
+                    int(self._length[slot]) >= self.cache_size - 1:
+                req.done = True
+                req.finish_t = time.time()
+                finished.append(req)
+                del self._active[slot]
+        return finished
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> Dict[str, Any]:
+        return {"decode_steps": self._steps,
+                "active": len(self._active),
+                "queued": len(self._queue),
+                "cache_len": (np.asarray(self._length).tolist()
+                              if self._length is not None else [])}

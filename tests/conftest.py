@@ -1,0 +1,14 @@
+# NOTE: no XLA_FLAGS here by design -- smoke tests and benches must see the
+# single real CPU device.  Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves (tests/test_distributed.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,151 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward +
+one train step on CPU, asserting output shapes and no NaNs (deliverable f).
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import OptimizerConfig, get_config, list_archs
+from repro.configs import ASSIGNED_ARCHS
+from repro.launch.steps import make_train_step
+from repro.models import encdec
+from repro.models.transformer import init_lm, lm_forward, lm_loss
+from repro.optim.optimizer import make_train_state
+
+MODULES = {
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "arctic-480b": "arctic_480b",
+    "deepseek-67b": "deepseek_67b",
+    "gemma2-9b": "gemma2_9b",
+    "gemma-7b": "gemma_7b",
+    "granite-3-8b": "granite_3_8b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "internvl2-1b": "internvl2_1b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "mamba2-2.7b": "mamba2_2_7b",
+}
+
+
+def reduced_cfg(arch):
+    mod = importlib.import_module(f"repro.configs.{MODULES[arch]}")
+    return dataclasses.replace(mod.reduced(), dtype="float32")
+
+
+def test_all_archs_registered():
+    assert set(ASSIGNED_ARCHS) <= set(list_archs())
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced_cfg(arch)
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    opt = OptimizerConfig(warmup_steps=1, total_steps=10)
+
+    if cfg.family == "audio":
+        params = encdec.init_encdec(cfg, key)
+        frames = jax.random.normal(key, (B, 16, cfg.d_model)) * 0.1
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"frames": frames, "tokens": toks, "labels": toks}
+        memory = encdec.encode(params, cfg, frames)
+        logits, _ = encdec.decode_stack(params, cfg, toks, memory)
+        assert logits.shape == (B, S, cfg.padded_vocab)
+    else:
+        params = init_lm(cfg, key)
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        embeds = None
+        batch = {"tokens": toks, "labels": toks}
+        if cfg.frontend_stub:
+            embeds = jax.random.normal(key, (B, 8, cfg.d_model)) * 0.1
+            batch["embeds"] = embeds
+        logits, aux = lm_forward(params, cfg, toks, embeds)
+        n_pos = S + (8 if cfg.frontend_stub else 0)
+        assert logits.shape == (B, n_pos, cfg.padded_vocab)
+        assert not bool(jnp.isnan(logits).any()), "NaN in forward logits"
+
+    state = make_train_state(params, opt)
+    step = make_train_step(cfg, opt)
+    new_state, metrics = step(state, batch)
+    loss = float(np.asarray(metrics["loss"]))
+    assert np.isfinite(loss), f"{arch}: non-finite loss {loss}"
+    assert int(new_state.step) == 1
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a - b).sum()),
+                     state.params, new_state.params))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_assigned_numbers(arch):
+    """The FULL config must carry the exact assignment-table numbers."""
+    cfg = get_config(arch)
+    expect = {
+        "kimi-k2-1t-a32b": (61, 7168, 2048, 163840, 64, 8),
+        "arctic-480b": (35, 7168, 4864, 32000, 56, 8),
+        "deepseek-67b": (95, 8192, 22016, 102400, 64, 8),
+        "gemma2-9b": (42, 3584, 14336, 256000, 16, 8),
+        "gemma-7b": (28, 3072, 24576, 256000, 16, 16),
+        "granite-3-8b": (40, 4096, 12800, 49155, 32, 8),
+        "jamba-1.5-large-398b": (72, 8192, 24576, 65536, 64, 8),
+        "internvl2-1b": (24, 896, 4864, 151655, 14, 2),
+        "seamless-m4t-medium": (12, 1024, 4096, 256206, 16, 16),
+        "mamba2-2.7b": (64, 2560, 0, 50280, None, None),
+    }[arch]
+    L, d, dff, vocab, heads, kv = expect
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.d_ff == dff
+    assert cfg.vocab_size == vocab
+    if heads is not None:
+        assert cfg.attention.num_heads == heads
+        assert cfg.attention.num_kv_heads == kv
+    else:
+        assert cfg.attention is None and cfg.ssm is not None
+        assert cfg.ssm.d_state == 128
+
+
+def test_moe_details():
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert kimi.moe.num_experts == 384 and kimi.moe.top_k == 8
+    arctic = get_config("arctic-480b")
+    assert arctic.moe.num_experts == 128 and arctic.moe.top_k == 2
+    assert arctic.moe.dense_residual
+    jamba = get_config("jamba-1.5-large-398b")
+    assert jamba.moe.num_experts == 16 and jamba.attn_every == 8
+
+
+def test_param_counts_match_published():
+    expected = {
+        "kimi-k2-1t-a32b": (1.04e12, 0.05), "arctic-480b": (480e9, 0.05),
+        "deepseek-67b": (67e9, 0.05), "gemma2-9b": (9.2e9, 0.08),
+        "gemma-7b": (8.5e9, 0.08), "granite-3-8b": (8.1e9, 0.08),
+        "jamba-1.5-large-398b": (398e9, 0.05), "mamba2-2.7b": (2.7e9, 0.1),
+    }
+    for arch, (n, tol) in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < tol, f"{arch}: {got:.3e} vs {n:.3e}"
+    assert abs(get_config("kimi-k2-1t-a32b").active_param_count() - 32e9) \
+        < 3e9
+    assert abs(get_config("jamba-1.5-large-398b").active_param_count()
+               - 94e9) < 5e9
+
+
+def test_shape_skips_documented():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if cfg.shape_skips:
+            assert cfg.skip_reason, f"{arch} skips without a reason"
+    # exactly the sub-quadratic-capable archs run long_500k
+    runners = [a for a in ASSIGNED_ARCHS
+               if "long_500k" not in get_config(a).shape_skips]
+    assert sorted(runners) == ["gemma2-9b", "jamba-1.5-large-398b",
+                               "mamba2-2.7b"]

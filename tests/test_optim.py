@@ -1,0 +1,170 @@
+"""Optimizer, schedule, clipping, gradient compression, checkpointing."""
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.config import OptimizerConfig
+from repro.optim.compression import (_quantize, compression_wire_bytes,
+                                     init_residuals)
+from repro.optim.optimizer import (adamw_update, cosine_lr, global_norm,
+                                   make_train_state)
+
+
+def test_adamw_converges_quadratic():
+    opt = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0, grad_clip=0.0)
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((4, 4)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((4, 4))}
+    state = make_train_state(params, opt)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)  # noqa: E731
+    for _ in range(150):
+        g = jax.grad(loss)(state.params)
+        state, _ = adamw_update(state, g, opt)
+    assert float(loss(state.params)) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    opt = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_lr(opt, jnp.asarray(0))) == 0.0
+    assert float(cosine_lr(opt, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(cosine_lr(opt, jnp.asarray(100))) == pytest.approx(0.0,
+                                                                    abs=1e-6)
+    mid = float(cosine_lr(opt, jnp.asarray(55)))
+    assert 0.4 < mid < 0.6
+
+
+def test_grad_clip_caps_norm():
+    opt = OptimizerConfig(lr=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros((8,))}
+    state = make_train_state(params, opt)
+    g = {"w": jnp.full((8,), 100.0)}
+    _, metrics = adamw_update(state, g, opt)
+    assert float(metrics["grad_norm"]) > 100
+
+
+def test_weight_decay_skips_vectors():
+    opt = OptimizerConfig(lr=0.1, warmup_steps=0, weight_decay=1.0)
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    state = make_train_state(params, opt)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    state, _ = adamw_update(state, zero_g, opt)
+    assert float(jnp.abs(state.params["w"] - 1.0).max()) > 0  # decayed
+    assert float(jnp.abs(state.params["b"] - 1.0).max()) == 0  # not decayed
+
+
+def test_moment_dtype_bf16():
+    opt = OptimizerConfig(moment_dtype="bfloat16")
+    state = make_train_state({"w": jnp.ones((4,))}, opt)
+    assert state.m["w"].dtype == jnp.bfloat16
+
+
+# ----------------------------------------------------------- compression
+def test_quantize_error_feedback_unbiased_over_time():
+    """Accumulated (q*scale + residual) must equal accumulated gradients."""
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros((64,), jnp.float32)
+    total_g, total_sent = np.zeros(64), np.zeros(64)
+    for _ in range(50):
+        g = jnp.asarray(rng.standard_normal(64), jnp.float32)
+        q, scale, residual = _quantize(g, residual)
+        total_g += np.asarray(g)
+        total_sent += np.asarray(q, np.float64) * float(scale)
+    # error feedback: cumulative sent tracks cumulative true gradient
+    np.testing.assert_allclose(total_sent + np.asarray(residual), total_g,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_range():
+    g = jnp.asarray([-1000.0, 0.0, 1000.0])
+    q, scale, r = _quantize(g, jnp.zeros(3))
+    assert int(jnp.abs(q).max()) <= 127
+    np.testing.assert_allclose(np.asarray(q, np.float32) * float(scale),
+                               np.asarray(g), rtol=1e-2, atol=float(scale))
+
+
+def test_wire_bytes_model():
+    w = compression_wire_bytes(1_000_000, dp=16)
+    assert w["fp32_bytes"] / w["int8_ef_bytes"] == pytest.approx(4.0)
+
+
+# ----------------------------------------------------------- checkpointer
+def _state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip():
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d, keep=2)
+        st = _state()
+        ck.save(3, st, extra={"pipeline": {"step": 3, "seed": 0}},
+                blocking=True)
+        abstract = jax.eval_shape(lambda: _state())
+        restored, step, extra = ck.restore(abstract)
+        assert step == 3 and extra["pipeline"]["step"] == 3
+        np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                      np.asarray(st["params"]["w"]))
+        assert restored["params"]["b"].dtype == jnp.bfloat16
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_retention_and_latest():
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save(s, _state(), blocking=True)
+        assert ck.all_steps() == [3, 4]
+        assert ck.latest_step() == 4
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_async_then_wait():
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d, keep=1)
+        ck.save(1, _state(), blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 1
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_atomicity_no_partial_dirs():
+    """A .tmp dir must never be listed as a restorable step."""
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d, keep=3)
+        (Path(d) / "step_000000000099.tmp").mkdir()
+        ck.save(1, _state(), blocking=True)
+        assert ck.all_steps() == [1]
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_shape_mismatch_raises():
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d)
+        ck.save(1, _state(), blocking=True)
+        bad = jax.eval_shape(
+            lambda: {"params": {"w": jnp.zeros((5, 4)),
+                                "b": jnp.zeros((4,), jnp.bfloat16)},
+                     "step": jnp.asarray(0, jnp.int32)})
+        with pytest.raises(ValueError):
+            ck.restore(bad)
+    finally:
+        shutil.rmtree(d)

@@ -1,0 +1,127 @@
+"""Serving: prefill/decode consistency, engine continuous batching."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (gemma2_9b, granite_3_8b, jamba_1_5_large,
+                           kimi_k2, mamba2_2_7b, seamless_m4t_medium)
+from repro.models import encdec
+from repro.models.transformer import (init_lm, lm_decode_step, lm_forward,
+                                      lm_prefill)
+from repro.serve.engine import Request, ServeEngine
+
+
+def _fp32(mod, cap=8.0):
+    cfg = dataclasses.replace(mod.reduced(), dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cap))
+    return cfg
+
+
+@pytest.mark.parametrize("mod", [granite_3_8b, gemma2_9b, kimi_k2,
+                                 jamba_1_5_large, mamba2_2_7b])
+def test_decode_matches_full_forward(mod):
+    cfg = _fp32(mod)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full, _ = lm_forward(params, cfg, toks)
+    lg, caches, length = lm_prefill(params, cfg, toks[:, :S - 1],
+                                    cache_size=S + 4)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(full[:, -2]), rtol=1e-3, atol=1e-3)
+    lg2, caches, length = lm_decode_step(params, cfg, toks[:, S - 1:S],
+                                         caches, length)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-3, atol=1e-3)
+
+
+def test_decode_multi_step_consistency():
+    cfg = _fp32(granite_3_8b)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 24), 0,
+                              cfg.vocab_size)
+    full, _ = lm_forward(params, cfg, toks)
+    lg, caches, length = lm_prefill(params, cfg, toks[:, :16],
+                                    cache_size=32)
+    for t in range(16, 24):
+        lg, caches, length = lm_decode_step(params, cfg, toks[:, t:t + 1],
+                                            caches, length)
+        np.testing.assert_allclose(np.asarray(lg[0, 0]),
+                                   np.asarray(full[0, t]), rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_encdec_decode_consistency():
+    cfg = _fp32(seamless_m4t_medium)
+    p = encdec.init_encdec(cfg, jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                              cfg.vocab_size)
+    memory = encdec.encode(p, cfg, frames)
+    full, _ = encdec.decode_stack(p, cfg, toks, memory)
+    lg, caches, mem, length = encdec.encdec_prefill(p, cfg, frames,
+                                                    toks[:, :11],
+                                                    cache_size=16)
+    lg2, caches, length = encdec.encdec_decode_step(p, cfg, toks[:, 11:12],
+                                                    caches, mem, length)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-3, atol=1e-3)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = _fp32(granite_3_8b)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_greedy_matches_naive(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, max_batch=2, cache_size=48)
+    reqs = [Request(rid=i, prompt=np.arange(4 + i) % cfg.vocab_size,
+                    max_tokens=6) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3
+    for r in done:
+        toks = list(r.prompt)
+        for _ in range(r.max_tokens):
+            logits, _ = lm_forward(params, cfg,
+                                   jnp.asarray([toks], jnp.int32))
+            toks.append(int(np.asarray(logits)[0, -1].argmax()))
+        assert toks[len(r.prompt):] == r.output[:r.max_tokens]
+
+
+def test_engine_continuous_batching_slot_reuse(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, max_batch=2, cache_size=64)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=np.arange(3) % cfg.vocab_size,
+                           max_tokens=3 + i))
+    done = eng.run()
+    assert len(done) == 5
+    assert {r.rid for r in done} == set(range(5))
+    # slots were reused: max concurrent = 2 but 5 requests served
+    assert eng.stats()["decode_steps"] < sum(3 + i for i in range(5))
+
+
+def test_engine_eos_stop(engine_setup):
+    cfg, params = engine_setup
+    eng = ServeEngine(cfg, params, max_batch=1, cache_size=64)
+    # find the greedy first token, then use it as EOS: generation stops at 1
+    eng.submit(Request(rid=0, prompt=np.arange(4), max_tokens=32))
+    done = eng.run()
+    first = done[0].output[0]
+    eng2 = ServeEngine(cfg, params, max_batch=1, cache_size=64)
+    eng2.submit(Request(rid=1, prompt=np.arange(4), max_tokens=32,
+                        eos_id=first))
+    done2 = eng2.run()
+    assert len(done2[0].output) == 1

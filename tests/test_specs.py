@@ -1,0 +1,102 @@
+"""Dry-run specs: cell enumeration, abstract inputs, param partition specs.
+
+These run WITHOUT the 512-device env (pure metadata) -- mesh construction
+for spec checks uses an AbstractMesh so no devices are touched."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.config import ALL_SHAPES, SHAPES_BY_NAME, get_config
+from repro.configs import ASSIGNED_ARCHS
+from repro.launch.specs import (abstract_params, arch_attn_tp, input_specs,
+                                param_pspecs)
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_cell_enumeration_is_40():
+    cells = [(a, s.name) for a in ASSIGNED_ARCHS for s in ALL_SHAPES]
+    assert len(cells) == 40
+    runnable = [(a, s.name) for a in ASSIGNED_ARCHS
+                for s in get_config(a).shapes()]
+    skipped = 40 - len(runnable)
+    assert skipped == 7  # 7 archs skip long_500k
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_input_specs_all_cells(arch):
+    cfg = get_config(arch)
+    for shape in cfg.shapes():
+        specs = input_specs(cfg, shape)
+        assert specs, (arch, shape.name)
+        if shape.kind == "train":
+            assert specs["tokens"].shape[0] == shape.global_batch
+            total = specs["tokens"].shape[1] + \
+                (specs["embeds"].shape[1] if "embeds" in specs else 0)
+            assert total == shape.seq_len
+        elif shape.kind == "decode":
+            assert specs["token"].shape == (shape.global_batch, 1)
+            kv_leaves = jax.tree.leaves(specs["caches"])
+            if cfg.attention is not None:  # SSM caches have no seq dim
+                assert any(shape.seq_len in l.shape for l in kv_leaves)
+        # no real allocation happened
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "kimi-k2-1t-a32b",
+                                  "mamba2-2.7b", "internvl2-1b"])
+def test_param_pspecs_divisibility(arch):
+    """Every sharded dim must divide by its mesh-axes product."""
+    cfg = get_config(arch)
+    mesh = _mesh()
+    params = abstract_params(cfg)
+    specs = param_pspecs(params, mesh, arch_attn_tp(cfg, mesh))
+
+    def check(leaf, spec):
+        for dim, part in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (leaf.shape, spec)
+    jax.tree.map(check, params, specs,
+                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_moe_experts_sharded():
+    cfg = get_config("kimi-k2-1t-a32b")
+    mesh = _mesh()
+    specs = param_pspecs(abstract_params(cfg), mesh, True)
+    wi_spec = specs["blocks"]["pos0"]["moe"]["wi"]
+    assert wi_spec[1] == "model"  # experts dim (after stack dim) EP-sharded
+
+
+def test_ctx_profile_for_indivisible_heads():
+    mesh = _mesh()
+    assert not arch_attn_tp(get_config("internvl2-1b"), mesh)  # 14 heads
+    assert not arch_attn_tp(get_config("arctic-480b"), mesh)   # 56 heads
+    assert arch_attn_tp(get_config("deepseek-67b"), mesh)      # 64 heads
+
+
+def test_padded_vocab_shards():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab - cfg.vocab_size < 256
+
+
+def test_sharded_params_fit_hbm_serve():
+    """bf16 serving params per chip must fit 16G HBM on the single pod."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        per_chip = cfg.param_count() * 2 / 256
+        assert per_chip < 16 * 2 ** 30, f"{arch}: {per_chip/2**30:.1f} GiB"
