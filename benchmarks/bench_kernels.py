@@ -16,8 +16,7 @@ import numpy as np
 
 from benchmarks.common import bench_graph, emit, timeit
 from repro.core.characterize import VMEM_BYTES
-from repro.core.dataflow import block_graph, fused_gcn_layer, suggest_tile_m
-from repro.core.phases import phase_ordered_layer
+from repro.core.plan import plan_for_phases
 from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.kernels import ops
 from repro.kernels.ref import seg_agg_ref
@@ -29,20 +28,22 @@ def run():
     x = make_features(spec)
     w = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * 0.05
 
-    # fused vs unfused dataflow (XLA backend)
-    tile_m = suggest_tile_m(256, 128, g.num_edges / g.num_vertices)
-    bg = block_graph(g, min(tile_m, 512))
-    fused = jax.jit(lambda xx: fused_gcn_layer(
-        bg, xx, w, None, agg_op="mean", in_deg=g.in_deg))
-    unfused = jax.jit(lambda xx: phase_ordered_layer(
-        g, xx, [(w, None)], order="combine_first", agg_op="mean",
-        activation="none"))
+    # fused vs unfused dataflow (XLA backend), both as planner scenarios
+    weights = [(w, None)]
+    fused_plan = plan_for_phases(g, weights, order="combine_first",
+                                 agg_op="mean", backend="xla", fused=True)
+    unfused_plan = plan_for_phases(g, weights, order="combine_first",
+                                   agg_op="mean", backend="xla")
+    fused = jax.jit(lambda xx: fused_plan.run_phases(
+        xx, weights, activation="none"))
+    unfused = jax.jit(lambda xx: unfused_plan.run_phases(
+        xx, weights, activation="none"))
     t_f = timeit(fused, x)
     t_u = timeit(unfused, x)
     err = float(jnp.abs(fused(x) - unfused(x)).max())
     emit("kernels/fused_dataflow", t_f,
          unfused_us=round(t_u, 1), speedup=round(t_u / t_f, 2),
-         max_err=f"{err:.1e}", tile_m=bg.tile_m)
+         max_err=f"{err:.1e}", tile_m=fused_plan.layers[0].tile_m)
 
     # VMEM budgets of the kernel tilings (structural roofline inputs)
     for (fi, fo, tm, te) in [(602, 128, 128, 512), (256, 128, 256, 512)]:

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from benchmarks.common import bench_graph, emit, timeit
 from repro.config import GRAPHS
 from repro.core.phases import phase_ordered_layer
+from repro.core.plan import plan_for_phases
 from repro.core.scheduler import reduction_ratios
 from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.graph.partition import partition_1d
@@ -49,19 +50,25 @@ def run():
                                  spec.num_edges, spec.num_classes))
     w = jax.random.normal(jax.random.PRNGKey(0),
                           (IN_LEN, OUT_LEN)) * 0.05
+    # both orderings as single-layer plans (built once, replayed per call)
+    plans = {order: plan_for_phases(g, [(w, None)], order=order,
+                                    agg_op="mean")
+             for order in ("combine_first", "aggregate_first")}
     cf_fn = jax.jit(lambda xx: phase_ordered_layer(
-        g, xx, [(w, None)], order="combine_first", agg_op="mean",
-        activation="none"))
+        g, xx, [(w, None)], agg_op="mean", activation="none",
+        plan=plans["combine_first"]))
     af_fn = jax.jit(lambda xx: phase_ordered_layer(
-        g, xx, [(w, None)], order="aggregate_first", agg_op="mean",
-        activation="none"))
+        g, xx, [(w, None)], agg_op="mean", activation="none",
+        plan=plans["aggregate_first"]))
     t_cf = timeit(cf_fn, x)
     t_af = timeit(af_fn, x)
     rs = reduction_ratios(g, IN_LEN, OUT_LEN)
     emit("table4/scaled_reddit/measured", t_cf,
          time_com_first_us=round(t_cf, 1), time_agg_first_us=round(t_af, 1),
          time_reduction=round(t_af / t_cf, 2),
-         analytic_access_reduction=round(rs["data_access_reduction"], 2))
+         analytic_access_reduction=round(rs["data_access_reduction"], 2),
+         planner_pick=plan_for_phases(
+             g, [(w, None)], order=None, agg_op="mean").layers[0].order)
 
     # --- distributed restatement: halo bytes -------------------------------
     pg = partition_1d(g, 16, edge_balanced=False)

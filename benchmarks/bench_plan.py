@@ -1,0 +1,79 @@
+"""Planner sweep: ONE harness comparing backend x ordering x fusion.
+
+Every scenario is expressed as a ``build_plan`` override, so this module
+exercises exactly the dispatch layer production code uses -- no hand-built
+kernel calls.  Emits one row per scenario with the plan's decisions
+(order/backend/tile_m/interpret) plus measured wall-clock, and one row per
+model with the decisions the planner takes when left on "auto".
+
+``run(dry=True)`` (the ``benchmarks/run.py --dry-run`` path) builds and
+validates every plan and emits the decisions without timing -- the CI smoke
+check (scripts/smoke.sh).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_graph, emit, timeit
+from repro.core.plan import build_plan
+from repro.core.scheduler import AGGREGATE_FIRST, COMBINE_FIRST
+from repro.graph.datasets import make_features, make_synthetic_graph
+from repro.models.gcn import PAPER_MODELS, make_paper_model
+
+BACKENDS = ("xla", "pallas")
+ORDERINGS = (None, COMBINE_FIRST, AGGREGATE_FIRST)  # None = cost model
+FUSION = (False, True)
+
+
+def _scenario_name(backend, ordering, fused):
+    return (f"plan/gcn/{backend}/{ordering or 'auto'}/"
+            f"{'fused' if fused else 'unfused'}")
+
+
+def run(dry: bool = False):
+    spec = bench_graph("reddit", max_vertices=256 if dry else 2048,
+                       max_feature=128)
+    g = make_synthetic_graph(spec)
+    x = make_features(spec)
+    m = make_paper_model("gcn", spec)
+    params = m.init(jax.random.PRNGKey(0))
+
+    for backend, ordering, fused in itertools.product(BACKENDS, ORDERINGS,
+                                                      FUSION):
+        plan = build_plan(g, m.cfg, spec.feature_len, spec.num_classes,
+                          backend=backend, ordering=ordering, fused=fused)
+        d0 = plan.describe()[0]
+        derived = dict(order=d0["order"], backend=d0["backend"],
+                       fused=d0["fused"], tile_m=d0["tile_m"],
+                       interpret=d0["interpret"], agg_bytes=d0["agg_bytes"])
+        if dry or backend == "pallas":
+            # interpret-mode wall-clock is meaningless; validate + describe
+            out = plan.run_model(params, x) if dry else None
+            if out is not None:
+                assert out.shape == (spec.num_vertices, spec.num_classes)
+            emit(_scenario_name(backend, ordering, fused), 0.0, **derived)
+        else:
+            fn = jax.jit(lambda xx, p=plan: p.run_model(params, xx))
+            emit(_scenario_name(backend, ordering, fused), timeit(fn, x),
+                 **derived)
+
+    # what does the planner decide unaided, per paper model?
+    for name in ("gcn", "sage", "gin"):
+        mm = make_paper_model(name, spec)
+        plan = build_plan(g, mm.cfg, spec.feature_len, spec.num_classes)
+        for d in plan.describe():
+            emit(f"plan/auto/{name}/layer{d['layer']}", 0.0,
+                 order=d["order"], backend=d["backend"], fused=d["fused"],
+                 din=d["din"], dout=d["dout"], agg_bytes=d["agg_bytes"])
+
+
+def dry_run():
+    run(dry=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -8,9 +8,14 @@ Prints ``name,us_per_call,derived...`` CSV rows (benchmarks/common.emit).
   bench_ordering        Table 4 phase-ordering impact (+distributed halo)
   bench_feature_length  Fig. 5  input/output length sweeps
   bench_kernels         beyond-paper: Pallas kernels + fused dataflow
+  bench_plan            planner sweep: backend x ordering x fusion scenarios
   roofline              deliverable (g): dry-run roofline table
 
-Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--dry-run] [module ...]
+
+``--dry-run`` routes through the execution planner only: every scenario
+plan is built and validated (tiny graphs, no timing) -- the pre-merge
+smoke check (scripts/smoke.sh).
 """
 
 import sys
@@ -18,9 +23,14 @@ import traceback
 
 
 def main() -> None:
+    argv = sys.argv[1:]
+    dry = "--dry-run" in argv
+    argv = [a for a in argv if a != "--dry-run"]
+
     from benchmarks import (bench_agg_vs_pgr, bench_breakdown,
                             bench_feature_length, bench_kernels,
-                            bench_ordering, bench_phase_metrics, roofline)
+                            bench_ordering, bench_phase_metrics, bench_plan,
+                            roofline)
     modules = {
         "bench_breakdown": bench_breakdown,
         "bench_agg_vs_pgr": bench_agg_vs_pgr,
@@ -28,9 +38,29 @@ def main() -> None:
         "bench_ordering": bench_ordering,
         "bench_feature_length": bench_feature_length,
         "bench_kernels": bench_kernels,
+        "bench_plan": bench_plan,
         "roofline": roofline,
     }
-    selected = sys.argv[1:] or list(modules)
+    if dry:
+        # planner-path smoke: build+validate every scenario plan, no timing
+        selected = argv or ["bench_plan"]
+        failures = 0
+        for name in selected:
+            print(f"# === {name} (dry) ===")
+            try:
+                mod = modules[name]
+                if hasattr(mod, "dry_run"):
+                    mod.dry_run()
+                else:
+                    print(f"# {name}: no dry-run mode, skipped")
+            except Exception:  # noqa: BLE001
+                failures += 1
+                traceback.print_exc()
+        if failures:
+            raise SystemExit(f"{failures} dry-run module(s) failed")
+        return
+
+    selected = argv or list(modules)
     failures = 0
     for name in selected:
         print(f"# === {name} ===")

@@ -1,29 +1,33 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-"""Distributed GCN training demo: shard_map vertex partitioning + int8
-error-feedback gradient compression (DESIGN.md §6).
+"""Distributed GCN training demo: a mesh-built GraphExecutionPlan
+(shard_map vertex partitioning) + int8 error-feedback gradient compression
+(DESIGN.md §6).
 
 8 placeholder devices on CPU (the same code drives a real (data,) mesh):
-  * graph partitioned into 8 edge-balanced vertex blocks,
-  * each step: ring-halo aggregation (combine-first: halo moves 16-wide
-    projected rows, not 64-wide inputs -- the Table 4 collective saving),
+  * ``build_plan(..., mesh=mesh, num_shards=8)`` owns the 1-D partition,
+    the per-layer phase ordering (cost model prices the halo: combine-first
+    moves 16-wide projected rows, not 64-wide inputs -- the Table 4
+    collective saving), and the ring-halo aggregation strategy,
   * per-shard gradients reduced with int8 error feedback (4x wire bytes
     reduction vs fp32; unbiased over time).
 
   PYTHONPATH=src python examples/distributed_gcn.py
 """
 
+import dataclasses  # noqa: E402
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.config import CORA, reduced_graph  # noqa: E402
-from repro.core.distributed import (distributed_gcn_layer,  # noqa: E402
-                                    halo_bytes, pad_features)
+from repro.core.distributed import halo_bytes  # noqa: E402
+from repro.core.plan import build_plan  # noqa: E402
 from repro.graph.datasets import (make_features, make_labels,  # noqa: E402
                                   make_synthetic_graph)
-from repro.graph.partition import partition_1d  # noqa: E402
+from repro.models.gcn import PAPER_MODELS  # noqa: E402
 from repro.optim.compression import (compression_wire_bytes,  # noqa: E402
                                      init_residuals,
                                      make_compressed_allreduce)
@@ -38,43 +42,33 @@ def main():
         4.0 * jax.nn.one_hot(y, spec.num_classes))
 
     mesh = jax.make_mesh((8,), ("data",))
-    pg = partition_1d(g, 8, edge_balanced=False)
-    xp = pad_features(x, pg.block_size, 8)
+    cfg = dataclasses.replace(PAPER_MODELS["gcn"], hidden_dims=(16,))
+    plan = build_plan(g, cfg, spec.feature_len, spec.num_classes,
+                      mesh=mesh, num_shards=8, strategy="ring")
+    pg = plan.partition
     hb_in = halo_bytes(pg, spec.feature_len)["min_halo_bytes"]
     hb_out = halo_bytes(pg, 16)["min_halo_bytes"]
     print(f"partition: 8 shards x {pg.block_size} vertices, "
           f"halo {hb_in:,} B (agg-first) vs {hb_out:,} B (combine-first) "
           f"-> {hb_in / hb_out:.1f}x collective saving")
+    for d in plan.describe():
+        print(f"  layer{d['layer']}: {d['din']}->{d['dout']} "
+              f"order={d['order']} (planned)")
 
-    key = jax.random.PRNGKey(0)
-    k1, k2 = jax.random.split(key)
-    params = {
-        "w1": jax.random.normal(k1, (spec.feature_len, 16)) * 0.15,
-        "b1": jnp.zeros(16),
-        "w2": jax.random.normal(k2, (16, spec.num_classes)) * 0.3,
-        "b2": jnp.zeros(spec.num_classes),
-    }
-    yp = jnp.pad(y, (0, pg.block_size * 8 - spec.num_vertices))
-    vmask = (jnp.arange(pg.block_size * 8) < spec.num_vertices
-             ).astype(jnp.float32)
+    params = plan.init(jax.random.PRNGKey(0))
 
     def loss_fn(p):
-        h = distributed_gcn_layer(pg, xp, p["w1"], p["b1"], g.in_deg, mesh,
-                                  order="combine_first", strategy="ring")
-        h = jax.nn.relu(h)
-        logits = distributed_gcn_layer(pg, h, p["w2"], p["b2"], g.in_deg,
-                                       mesh, order="aggregate_first",
-                                       strategy="ring")
+        logits = plan.run_model(p, x)
         ll = jax.nn.log_softmax(logits, axis=-1)
-        nll = -jnp.take_along_axis(ll, yp[:, None], axis=-1)[:, 0]
-        return (nll * vmask).sum() / vmask.sum()
+        nll = -jnp.take_along_axis(ll, y[:, None], axis=-1)[:, 0]
+        return nll.mean()
 
     allreduce = make_compressed_allreduce(mesh, "data")
     residuals = init_residuals(params)
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))
 
     wire = compression_wire_bytes(
-        sum(int(np.prod(v.shape)) for v in params.values()), dp=8)
+        sum(int(np.prod(v.shape)) for v in jax.tree.leaves(params)), dp=8)
     print(f"grad wire bytes/step: fp32 {wire['fp32_bytes']:,.0f} -> "
           f"int8+EF {wire['int8_ef_bytes']:,.0f} "
           f"({wire['reduction_vs_fp32']:.0f}x)")
@@ -89,13 +83,8 @@ def main():
             if step % 5 == 0:
                 print(f" step {step:2d}  loss {float(loss):.4f}")
 
-    h = distributed_gcn_layer(pg, xp, params["w1"], params["b1"], g.in_deg,
-                              mesh, order="combine_first")
-    logits = distributed_gcn_layer(pg, jax.nn.relu(h), params["w2"],
-                                   params["b2"], g.in_deg, mesh,
-                                   order="aggregate_first")
-    acc = float(((jnp.argmax(logits, -1) == yp) * vmask).sum() /
-                vmask.sum())
+        logits = plan.run_model(params, x)
+    acc = float((jnp.argmax(logits, -1) == y).mean())
     print(f"final accuracy {acc:.3f} (chance {1 / spec.num_classes:.3f})")
 
 

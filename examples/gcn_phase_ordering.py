@@ -1,9 +1,11 @@
-"""Paper Table 4 as a runnable demo: phase ordering on (scaled) Reddit.
+"""Paper Table 4 as a runnable demo: phase ordering on (scaled) Reddit,
+driven end-to-end by the GraphExecutionPlan.
 
-Shows the three views of the paper's headline result:
+Shows the four views of the paper's headline result:
   1. analytic bytes/ops for both orderings (the paper's accounting),
-  2. measured wall-clock Com->Agg vs Agg->Com,
-  3. the fused inter-phase dataflow (guideline 5.1-3) on top.
+  2. the planner's own decision for this (graph, layer) -- F2 as code,
+  3. measured wall-clock Com->Agg vs Agg->Com (both as planner scenarios),
+  4. the fused inter-phase dataflow (guideline 5.1-3) on top.
 
   PYTHONPATH=src python examples/gcn_phase_ordering.py
 """
@@ -14,17 +16,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import REDDIT, reduced_graph
-from repro.core.dataflow import block_graph, fused_gcn_layer, suggest_tile_m
-from repro.core.phases import phase_ordered_layer
-from repro.core.scheduler import choose_ordering, reduction_ratios
+from repro.core.plan import plan_for_phases
+from repro.core.scheduler import reduction_ratios
 from repro.graph.datasets import make_features, make_synthetic_graph
 
 IN_LEN, OUT_LEN = 602, 128
 
 
 def bench(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -36,6 +36,7 @@ def main():
     g = make_synthetic_graph(spec)
     x = make_features(spec)
     w = jax.random.normal(jax.random.PRNGKey(0), (IN_LEN, OUT_LEN)) * 0.05
+    weights = [(w, None)]
 
     print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,} "
           f"features {IN_LEN} -> {OUT_LEN}")
@@ -47,27 +48,30 @@ def main():
     print(f"   reduction: {r['data_access_reduction']:.2f}x data, "
           f"{r['computation_reduction']:.2f}x ops "
           f"(paper: 4.75x, 4.72x)")
-    print(f"   scheduler picks: "
-          f"{choose_ordering(g, IN_LEN, OUT_LEN)}")
 
-    cf = jax.jit(lambda xx: phase_ordered_layer(
-        g, xx, [(w, None)], order="combine_first", agg_op="mean",
-        activation="none"))
-    af = jax.jit(lambda xx: phase_ordered_layer(
-        g, xx, [(w, None)], order="aggregate_first", agg_op="mean",
-        activation="none"))
+    auto = plan_for_phases(g, weights, order=None, agg_op="mean")
+    d = auto.describe()[0]
+    print(f"\n2. planner decision: order={d['order']} backend={d['backend']} "
+          f"interpret={d['interpret']}")
+
+    plans = {o: plan_for_phases(g, weights, order=o, agg_op="mean")
+             for o in ("combine_first", "aggregate_first")}
+    cf = jax.jit(lambda xx: plans["combine_first"].run_phases(
+        xx, weights, activation="none"))
+    af = jax.jit(lambda xx: plans["aggregate_first"].run_phases(
+        xx, weights, activation="none"))
     t_cf, t_af = bench(cf, x), bench(af, x)
-    print(f"\n2. measured: Com->Agg {t_cf:.1f} ms | Agg->Com {t_af:.1f} ms"
+    print(f"\n3. measured: Com->Agg {t_cf:.1f} ms | Agg->Com {t_af:.1f} ms"
           f" | speedup {t_af / t_cf:.2f}x (paper: 4.76x)")
 
-    tile = suggest_tile_m(IN_LEN, OUT_LEN, g.num_edges / g.num_vertices)
-    bg = block_graph(g, min(tile, 1024))
-    fused = jax.jit(lambda xx: fused_gcn_layer(bg, xx, w, None,
-                                               agg_op="mean",
-                                               in_deg=g.in_deg))
+    fused_plan = plan_for_phases(g, weights, order="combine_first",
+                                 agg_op="mean", fused=True)
+    fused = jax.jit(lambda xx: fused_plan.run_phases(
+        xx, weights, activation="none"))
     t_fused = bench(fused, x)
     err = float(jnp.abs(fused(x) - cf(x)).max())
-    print(f"\n3. fused inter-phase dataflow (tile_m={bg.tile_m}): "
+    print(f"\n4. fused inter-phase dataflow "
+          f"(tile_m={fused_plan.layers[0].tile_m}): "
           f"{t_fused:.1f} ms (err vs unfused {err:.1e})")
 
 

@@ -1,4 +1,6 @@
 # The paper's primary contribution: phase-split execution of GCNs
 # (Aggregation vs Combination), the phase-ordering scheduler (Table 4),
-# tiled inter-phase dataflow (F5), and the characterization machinery.
-from repro.core import characterize, dataflow, gcn_layers, phases, scheduler
+# tiled inter-phase dataflow (F5), the characterization machinery, and the
+# GraphExecutionPlan planning/dispatch layer that composes them (plan.py).
+from repro.core import (backend, characterize, dataflow, gcn_layers, phases,
+                        plan, scheduler)

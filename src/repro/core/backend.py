@@ -1,0 +1,64 @@
+"""Backend & runtime detection shared by the kernels and the planner.
+
+One place answers three questions every execution path used to answer
+ad-hoc (and sometimes wrongly, e.g. a hardcoded ``interpret=True``):
+
+  * which platform are we on (``platform`` / ``on_tpu``)?
+  * should Pallas kernels run compiled or interpreted
+    (``default_interpret``: interpret off-TPU so the whole suite runs on
+    CPU containers, compiled on real TPUs; overridable via
+    ``REPRO_PALLAS_INTERPRET``)?
+  * which aggregation backend should a plan use when asked for "auto"
+    (``resolve_backend``: the Pallas kernels only pay off where an MXU
+    exists, so auto means pallas-on-TPU / XLA ``segment_sum`` elsewhere)?
+
+The execution planner (core/plan.py) consults this module once at plan-build
+time; kernels consult it only when a caller passes ``interpret=None``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+XLA = "xla"
+PALLAS = "pallas"
+AUTO = "auto"
+BACKENDS = (XLA, PALLAS)
+
+
+def platform() -> str:
+    """The JAX default backend platform: "cpu" | "gpu" | "tpu"."""
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return platform() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode default: compiled on TPU, interpreted elsewhere.
+
+    ``REPRO_PALLAS_INTERPRET=0``/``1`` overrides the detection (e.g. to force
+    interpret mode on a TPU while debugging a kernel).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return not on_tpu()
+
+
+def resolve_interpret(interpret=None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def resolve_backend(requested: str = AUTO) -> str:
+    """Map a requested backend ("auto" allowed) to a concrete one."""
+    if requested in BACKENDS:
+        return requested
+    if requested != AUTO:
+        raise ValueError(
+            f"unknown backend {requested!r}; expected one of "
+            f"{BACKENDS + (AUTO,)}")
+    return PALLAS if on_tpu() else XLA

@@ -58,6 +58,21 @@ class BlockedGraph(NamedTuple):
         return int(self.src.shape[1])
 
 
+def block_offsets(block_ids: np.ndarray, nblocks: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-edge offset within its (sorted) block, fully vectorized.
+
+    ``block_ids`` must be non-decreasing (edges are dst-sorted).  Returns
+    (counts, offsets): edge e lands at [block_ids[e], offsets[e]] in any
+    (nblocks, emax) padded layout.  O(E) numpy, no Python loop.
+    """
+    counts = np.bincount(block_ids, minlength=nblocks)
+    starts = np.zeros(nblocks + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    offsets = np.arange(len(block_ids), dtype=np.int64) - starts[block_ids]
+    return counts, offsets
+
+
 def block_graph(g: Graph, tile_m: int) -> BlockedGraph:
     """Host-side regroup of a destination-sorted graph into row blocks."""
     src = np.asarray(g.src)
@@ -65,20 +80,14 @@ def block_graph(g: Graph, tile_m: int) -> BlockedGraph:
     v = g.num_vertices
     nblocks = -(-v // tile_m)
     blk = dst // tile_m
-    counts = np.bincount(blk, minlength=nblocks)
-    emax = max(8, int(-(-counts.max() // 8) * 8))
+    counts, offs = block_offsets(blk, nblocks)
+    emax = max(8, int(-(-(counts.max() if len(src) else 1) // 8) * 8))
     bs = np.zeros((nblocks, emax), np.int32)
     bd = np.zeros((nblocks, emax), np.int32)
     bm = np.zeros((nblocks, emax), np.float32)
-    # edges are dst-sorted, so each block is one contiguous slice
-    starts = np.zeros(nblocks + 1, np.int64)
-    np.cumsum(counts, out=starts[1:])
-    for b in range(nblocks):
-        lo, hi = starts[b], starts[b + 1]
-        e = hi - lo
-        bs[b, :e] = src[lo:hi]
-        bd[b, :e] = dst[lo:hi] - b * tile_m
-        bm[b, :e] = 1.0
+    bs[blk, offs] = src
+    bd[blk, offs] = dst - blk * tile_m
+    bm[blk, offs] = 1.0
     return BlockedGraph(jnp.asarray(bs), jnp.asarray(bd), jnp.asarray(bm),
                         tile_m, v)
 
@@ -100,7 +109,7 @@ def suggest_tile_m(in_len: int, out_len: int, avg_deg: float,
 def fused_gcn_layer(bg: BlockedGraph, x: jnp.ndarray, w: jnp.ndarray,
                     bias: Optional[jnp.ndarray] = None, *, agg_op: str = "mean",
                     in_deg: Optional[jnp.ndarray] = None,
-                    impl: str = "xla") -> jnp.ndarray:
+                    backend: str = "xla") -> jnp.ndarray:
     """Aggregate-then-combine per vertex block; intermediate never spans V.
 
     Semantics: combine(aggregate(x))  == aggregate_first with single matmul;
@@ -109,7 +118,7 @@ def fused_gcn_layer(bg: BlockedGraph, x: jnp.ndarray, w: jnp.ndarray,
 
     x: (V, F_in) padded to block multiple internally.  w: (F_in, F_out).
     """
-    if impl == "pallas":
+    if backend == "pallas":
         from repro.kernels import ops as kops
         out = kops.fused_agg_combine(bg.src, bg.dstl, bg.mask, x, w,
                                      tile_m=bg.tile_m)

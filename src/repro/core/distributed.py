@@ -146,16 +146,34 @@ def halo_bytes(pg: PartitionedGraph, feature_len: int,
     }
 
 
+def _local_graph_view(pg: PartitionedGraph):
+    """Minimal |V|/|E| stats view for the scheduler's analytic cost model."""
+    import types
+    return types.SimpleNamespace(
+        num_vertices=pg.num_vertices,
+        num_edges=int(np.asarray(pg.mask).sum()))
+
+
 def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
-                          mesh: Mesh, *, order: str = "combine_first",
+                          mesh: Mesh, *, order: Optional[str] = None,
                           strategy: str = "ring", axis: str = "data"):
     """One distributed GCN layer with explicit phase ordering (Table 4).
 
     combine_first: project locally (embarrassingly parallel GEMM), then
     aggregate projected rows -- halo moves out_len-wide rows.
     aggregate_first: aggregate raw features (halo moves in_len-wide rows),
-    then project.
+    then project.  ``order=None`` asks the scheduler's cost model (which at
+    cluster scale also prices the collective term -- same in/out ratio).
+
+    This is the shard_map primitive; model-level code reaches it through a
+    ``GraphExecutionPlan`` built with ``mesh=``/``num_shards=`` (core/plan.py)
+    rather than calling it with hand-threaded flags.
     """
+    if order is None:
+        from repro.core.scheduler import choose_ordering
+        order = choose_ordering(
+            _local_graph_view(pg), int(w.shape[0]), int(w.shape[1]),
+            agg_op="mean", n_mlp_layers=1)
     agg = aggregate_ring if strategy == "ring" else aggregate_allgather
     deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
     deg = pad_features(deg, pg.block_size, pg.num_shards)

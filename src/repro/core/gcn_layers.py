@@ -5,8 +5,10 @@
   * GINConv  -- MLP(sum({N(v)} ∪ {v})), MLP = |h|->d->d   [aggregate-first only]
 
 Parameters are plain pytrees (dicts) -- the framework is functional.
-Each layer exposes ``apply(params, graph, x)`` plus ``init`` and a static
-``cost(graph, in_len)`` used by the scheduler and benchmarks.
+Each layer exposes ``apply(params, graph, x)`` plus ``init`` and
+``resolve_order``.  Execution dispatches through a ``GraphExecutionPlan``
+(core/plan.py): ordering, backend, and fusion are planned once per graph and
+cached, not threaded through every call as raw ``impl=``/``blocked=`` flags.
 """
 
 from __future__ import annotations
@@ -16,8 +18,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import phases
-from repro.core.dataflow import BlockedGraph, fused_gcn_layer
+from repro.core.backend import AUTO
 from repro.core.scheduler import (AGGREGATE_FIRST, COMBINE_FIRST,
                                   choose_ordering)
 from repro.graph.structure import Graph
@@ -33,10 +34,11 @@ class GCNConv:
     """Paper Eq. 1 with mean aggregation over {N(v)} ∪ {v}."""
 
     def __init__(self, din: int, dout: int, ordering: str = "auto",
-                 impl: str = "xla"):
+                 backend: str = AUTO, fused: bool = False):
         self.din, self.dout = din, dout
         self.ordering = ordering
-        self.impl = impl
+        self.backend = backend
+        self.fused = fused
 
     def init(self, key) -> Dict:
         return {"lin": _dense_init(key, self.din, self.dout)}
@@ -47,20 +49,11 @@ class GCNConv:
         return choose_ordering(g, self.din, self.dout, agg_op="mean",
                                n_mlp_layers=1, semantic_order=COMBINE_FIRST)
 
-    def apply(self, params, g: Graph, x, *, order: Optional[str] = None,
-              blocked: Optional[BlockedGraph] = None):
-        order = order or self.resolve_order(g)
-        w, b = params["lin"]["w"], params["lin"]["b"]
-        if blocked is not None:  # fused dataflow path (F5)
-            return fused_gcn_layer(blocked, x, w, b, agg_op="mean",
-                                   in_deg=g.in_deg, impl=self.impl)
-        if order == COMBINE_FIRST:
-            h = x @ w
-            h = phases.aggregate(g, h, op="mean", impl=self.impl)
-        else:
-            h = phases.aggregate(g, x, op="mean", impl=self.impl)
-            h = h @ w
-        return h + b
+    def apply(self, params, g: Graph, x, *, plan=None):
+        if plan is None:
+            from repro.core.plan import plan_for_conv
+            plan = plan_for_conv(self, g)
+        return plan.run_layer(params, x)
 
 
 class SAGEConv(GCNConv):
@@ -70,13 +63,16 @@ class SAGEConv(GCNConv):
 
 class GINConv:
     """GIN-0 (paper Eq. 2): MLP(sum over {N(v)} ∪ {v}); MLP has an interior
-    ReLU so the ordering is pinned to aggregate_first (scheduler enforces)."""
+    ReLU so the ordering is pinned to aggregate_first (scheduler enforces).
+    With fusion enabled the plan fuses aggregation with the FIRST MLP matmul
+    (exact: sum aggregation is linear, the ReLU applies after that matmul)."""
 
     def __init__(self, din: int, dout: int, hidden: Optional[int] = None,
-                 impl: str = "xla"):
+                 backend: str = AUTO, fused: bool = False):
         self.din, self.dout = din, dout
         self.hidden = hidden or dout
-        self.impl = impl
+        self.backend = backend
+        self.fused = fused
         self.ordering = AGGREGATE_FIRST
 
     def init(self, key) -> Dict:
@@ -87,12 +83,11 @@ class GINConv:
     def resolve_order(self, g: Graph) -> str:
         return AGGREGATE_FIRST
 
-    def apply(self, params, g: Graph, x, *, order: Optional[str] = None,
-              blocked=None):
-        h = phases.aggregate(g, x, op="sum", include_self=True, impl=self.impl)
-        h = h @ params["mlp1"]["w"] + params["mlp1"]["b"]
-        h = jax.nn.relu(h)
-        return h @ params["mlp2"]["w"] + params["mlp2"]["b"]
+    def apply(self, params, g: Graph, x, *, plan=None):
+        if plan is None:
+            from repro.core.plan import plan_for_conv
+            plan = plan_for_conv(self, g)
+        return plan.run_layer(params, x)
 
 
 CONVS = {"gcn": GCNConv, "sage": SAGEConv, "gin": GINConv}

@@ -109,8 +109,19 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
                     break
             operand_text = rest[:end]
             attrs = rest[end + 1:]
-            operands = [o.strip().lstrip("%")
-                        for o in _split_top(operand_text)]
+            # Older XLA prints operands with inline shapes
+            # ("f32[512,1024]{1,0} %Arg_0.1"); newer prints bare names.
+            # Take the last token as the name and harvest the inline shape
+            # into the symbol table (covers entry params too).
+            operands = []
+            for o in _split_top(operand_text):
+                if " " in o:
+                    shape_txt, name_tok = o.rsplit(" ", 1)
+                    name_tok = name_tok.lstrip("%")
+                    cur.symbols.setdefault(name_tok, shape_txt.strip())
+                    operands.append(name_tok)
+                else:
+                    operands.append(o.lstrip("%"))
             inst = Instruction(name, result, opcode, operands, attrs, line)
             cur.instructions.append(inst)
             cur.symbols[name] = result

@@ -40,7 +40,7 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
               edge_weight: Optional[jnp.ndarray] = None,
               edge_mask: Optional[jnp.ndarray] = None,
               include_self: bool = True,
-              impl: str = "xla") -> jnp.ndarray:
+              backend: Optional[str] = None) -> jnp.ndarray:
     """h_v = reduce_{u in N(v) (+ v)} x_u              (paper Eq. 1/2 inner term)
 
     Args:
@@ -51,7 +51,8 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
       edge_weight: optional (E,) per-edge scalar (e.g. sym-norm GCN weights).
       edge_mask: optional (E,) 1/0 mask for padded edge lists.
       include_self: add the vertex's own row to the reduction.
-      impl: "xla" (segment_sum) or "pallas" (seg_agg kernel).
+      backend: "xla" (segment_sum) or "pallas" (seg_agg kernel); None = xla.
+        Normally resolved by the execution planner (core/plan.py).
     """
     assert op in AGGREGATORS, op
     v, f = x.shape
@@ -73,7 +74,7 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
     if w is not None:
         gathered = gathered * w[:, None].astype(gathered.dtype)
 
-    if impl == "pallas":
+    if backend == "pallas":
         from repro.kernels import ops as kops
         summed = kops.seg_agg(gathered, g.dst, v)
     else:
@@ -151,21 +152,26 @@ def combine_cost(num_vertices: int, dims, dtype_bytes: int = 4) -> dict:
 
 
 def phase_ordered_layer(g: Graph, x: jnp.ndarray, weights, *,
-                        order: str, agg_op: str = "mean",
+                        order: Optional[str] = None, agg_op: str = "mean",
                         edge_weight=None, activation: str = "relu",
-                        impl: str = "xla") -> jnp.ndarray:
-    """One graph-conv layer with explicit phase ordering.
+                        plan=None) -> jnp.ndarray:
+    """One graph-conv layer with explicit (or planned) phase ordering.
 
     ``order`` = "combine_first" (GCN/SAG style; shrinks the feature length the
     sparse phase must move -- Table 4's 4.7x) or "aggregate_first" (GIN
-    semantics).  For *linear* combination + sum/mean aggregation the two
-    orderings are mathematically equivalent; the framework exploits that to
-    reorder GCN/SAG for performance while GIN (MLP with interior nonlinearity)
-    is pinned to aggregate_first to preserve semantics.
+    semantics); None lets the planner's cost model choose.  For *linear*
+    combination + sum/mean aggregation the two orderings are mathematically
+    equivalent; the framework exploits that to reorder GCN/SAG for
+    performance while GIN (MLP with interior nonlinearity) is pinned to
+    aggregate_first to preserve semantics.
+
+    Dispatches through a ``GraphExecutionPlan`` (built and cached per
+    (graph, dims, order, agg_op) when ``plan`` is not given), so backend and
+    fusion decisions live in ONE place (core/plan.py).
     """
-    assert order in ("combine_first", "aggregate_first"), order
-    if order == "combine_first":
-        h = combine(x, weights, activation=activation)
-        return aggregate(g, h, op=agg_op, edge_weight=edge_weight, impl=impl)
-    h = aggregate(g, x, op=agg_op, edge_weight=edge_weight, impl=impl)
-    return combine(h, weights, activation=activation)
+    assert order in ("combine_first", "aggregate_first", None), order
+    if plan is None:
+        from repro.core.plan import plan_for_phases
+        plan = plan_for_phases(g, weights, order=order, agg_op=agg_op)
+    return plan.run_phases(x, weights, edge_weight=edge_weight,
+                           activation=activation)

@@ -1,0 +1,457 @@
+"""GraphExecutionPlan: one planning/dispatch layer for GCN execution.
+
+Everything the paper shows must be decided *together* -- and that the rest
+of this repo used to decide per-call with ad-hoc flags -- is decided here
+ONCE per (graph, model, device) and then replayed on every forward/backward:
+
+  * **Phase ordering (paper F2, Table 4).**  Per layer, the analytic cost
+    model (``scheduler.choose_ordering``) picks combine-first when the
+    projection shrinks the feature length the sparse phase must move
+    (Reddit 602->128: 4.7x fewer aggregation bytes), and honors semantic
+    pins (GIN's interior ReLU forces aggregate-first).
+  * **Collision-free aggregation backend (paper F3).**  XLA
+    ``segment_sum`` vs the Pallas one-hot-MXU ``seg_agg`` kernel, chosen
+    by platform ("auto" = Pallas on TPU, XLA elsewhere); interpret mode
+    is auto-detected off-TPU (``backend.default_interpret``) instead of
+    the old hardcoded ``interpret=True``.
+  * **Inter-phase dataflow fusion (paper F5, §5.1-3).**  The fused
+    aggregate->combine tile executor needs a ``BlockedGraph`` regrouping
+    of the edge list and a VMEM-budgeted ``tile_m``; the plan builds both
+    once (cached per graph -- see ``_blocked_for``) instead of per call.
+    GIN layers fuse aggregation with the *first* MLP matmul (previously
+    the fused path was silently ignored for GIN).
+  * **1-D shard partition (DESIGN.md §8.5).**  With a mesh, the plan owns
+    the ``partition_1d`` vertex partition and routes layers through the
+    ring / all-gather halo aggregation, with ordering still chosen by the
+    same cost model (combine-first shrinks the *collective* term by the
+    same in/out ratio).
+
+Public surface:
+
+  ``build_plan(g, cfg, in_dim, num_classes, ...)``  -> GraphExecutionPlan
+  ``plan.run_model(params, x)``     full forward through all planned layers
+  ``plan.run_layer(params_i, x, layer=i)``  one layer (conv param subtree)
+  ``plan.run_phases(x, weights, ...)``      raw weight-list layer (the
+                                            ``phase_ordered_layer`` path)
+  ``plan.describe()`` / ``plan.layer_costs(i)``  decisions + analytic costs
+
+Layer APIs (``GCNModel.apply``, ``GCNConv.apply``, ``phase_ordered_layer``,
+the distributed example) all dispatch through plans; none of them takes raw
+``impl=`` / ``blocked=`` flags anymore.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import phases
+from repro.core.backend import (AUTO, XLA, resolve_backend,
+                                resolve_interpret)
+from repro.core.dataflow import (BlockedGraph, block_graph, fused_gcn_layer,
+                                 suggest_tile_m)
+from repro.core.scheduler import (AGGREGATE_FIRST, COMBINE_FIRST,
+                                  choose_ordering, ordering_cost)
+from repro.graph.structure import Graph
+
+# ---------------------------------------------------------------------------
+# Plan data model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True, eq=False)
+class LayerPlan:
+    """All decisions for one graph-conv layer, frozen at plan-build time."""
+
+    index: int
+    kind: str                 # "gcn" | "sage" | "gin" | "phase"
+    dims: Tuple[int, ...]     # (din, [hidden...,] dout) of the combination MLP
+    agg_op: str               # "sum" | "mean" | "max"
+    include_self: bool
+    order: str                # COMBINE_FIRST | AGGREGATE_FIRST (resolved)
+    backend: str              # "xla" | "pallas" (resolved, never "auto")
+    fused: bool               # inter-phase dataflow fusion (F5)
+    tile_m: int               # fused tile rows (0 when unfused)
+    blocked: Optional[BlockedGraph]  # shared BlockedGraph (None when unfused)
+
+    @property
+    def din(self) -> int:
+        return self.dims[0]
+
+    @property
+    def dout(self) -> int:
+        return self.dims[-1]
+
+    @property
+    def n_mlp(self) -> int:
+        return len(self.dims) - 1
+
+
+class GraphExecutionPlan:
+    """Precomputed execution recipe for a model over one fixed graph."""
+
+    def __init__(self, g: Graph, layers: Sequence[LayerPlan], *,
+                 interpret: bool, mesh=None, partition=None,
+                 strategy: str = "ring", axis: str = "data"):
+        self.g = g
+        self.layers: Tuple[LayerPlan, ...] = tuple(layers)
+        self.interpret = interpret
+        self.mesh = mesh
+        self.partition = partition
+        self.strategy = strategy
+        self.axis = axis
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def distributed(self) -> bool:
+        return self.partition is not None
+
+    # -- parameter helpers --------------------------------------------------
+
+    def init(self, key) -> Dict:
+        """Init a params pytree matching ``run_model`` ({"conv<i>": ...})."""
+        from repro.core.gcn_layers import _dense_init
+        keys = jax.random.split(key, max(self.num_layers, 1))
+        out: Dict = {}
+        for lp, k in zip(self.layers, keys):
+            if lp.n_mlp == 1:
+                out[f"conv{lp.index}"] = {
+                    "lin": _dense_init(k, lp.dims[0], lp.dims[1])}
+            else:
+                ks = jax.random.split(k, lp.n_mlp)
+                out[f"conv{lp.index}"] = {
+                    f"mlp{j + 1}": _dense_init(ks[j], lp.dims[j],
+                                               lp.dims[j + 1])
+                    for j in range(lp.n_mlp)}
+        return out
+
+    @staticmethod
+    def _split_params(lp: LayerPlan, params: Dict):
+        """Conv param subtree -> (weights list, post-aggregation bias)."""
+        if "lin" in params:
+            return [(params["lin"]["w"], None)], params["lin"]["b"]
+        weights = []
+        j = 1
+        while f"mlp{j}" in params:
+            weights.append((params[f"mlp{j}"]["w"], params[f"mlp{j}"]["b"]))
+            j += 1
+        return weights, None
+
+    # -- execution ----------------------------------------------------------
+
+    def run_layer(self, params: Dict, x: jnp.ndarray, *, layer: int = 0
+                  ) -> jnp.ndarray:
+        """One planned layer from its conv param subtree ({"lin": ...} or
+        {"mlp1": ..., "mlp2": ...}).  In distributed plans ``x`` must be
+        padded to the partition layout (``run_model`` handles this)."""
+        lp = self.layers[layer]
+        weights, bias_post = self._split_params(lp, params)
+        if self.distributed:
+            return self._run_distributed(lp, x, weights, bias_post)
+        return _execute_layer(self.g, lp, x, weights, bias_post=bias_post)
+
+    def run_model(self, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+        """Full forward: planned layers with ReLU between them."""
+        v = self.g.num_vertices
+        if self.distributed and x.shape[0] == v:
+            from repro.core.distributed import pad_features
+            x = pad_features(x, self.partition.block_size,
+                             self.partition.num_shards)
+        h = x
+        for i in range(self.num_layers):
+            h = self.run_layer(params[f"conv{i}"], h, layer=i)
+            if i < self.num_layers - 1:
+                h = jax.nn.relu(h)
+        return h[:v] if self.distributed else h
+
+    def run_phases(self, x: jnp.ndarray, weights, *, layer: int = 0,
+                   edge_weight=None, activation: str = "relu",
+                   bias_post=None) -> jnp.ndarray:
+        """Raw weight-list execution (the ``phase_ordered_layer`` entry).
+
+        ``weights`` is a list of (W, b) tuples with biases applied *inside*
+        the combination MLP (``phases.combine`` semantics); ``bias_post``
+        is an optional extra bias added after aggregation (conv semantics).
+        """
+        return _execute_layer(self.g, self.layers[layer], x, weights,
+                              edge_weight=edge_weight, activation=activation,
+                              bias_post=bias_post)
+
+    def _run_distributed(self, lp: LayerPlan, x, weights, bias_post):
+        from repro.core.distributed import distributed_gcn_layer
+        (w, b_inline), = weights  # build_plan guarantees single-matmul layers
+        bias = bias_post if bias_post is not None else b_inline
+        if bias is None:
+            bias = jnp.zeros((w.shape[1],), x.dtype)
+        return distributed_gcn_layer(
+            self.partition, x, w, bias, self.g.in_deg, self.mesh,
+            order=lp.order, strategy=self.strategy, axis=self.axis)
+
+    # -- introspection ------------------------------------------------------
+
+    def describe(self) -> List[Dict]:
+        """One dict per layer: every planned decision + modeled agg cost."""
+        out = []
+        for lp in self.layers:
+            oc = ordering_cost(self.g, lp.din, lp.dout, lp.order)
+            out.append({
+                "layer": lp.index, "kind": lp.kind,
+                "din": lp.din, "dout": lp.dout,
+                "order": lp.order, "backend": lp.backend,
+                "fused": lp.fused, "tile_m": lp.tile_m,
+                "interpret": self.interpret,
+                "distributed": self.distributed,
+                "agg_bytes": oc.agg_bytes, "agg_flops": oc.agg_flops,
+            })
+        return out
+
+    def layer_costs(self, layer: int = 0) -> Dict:
+        """Analytic per-phase costs of one planned layer (Table 3/4)."""
+        lp = self.layers[layer]
+        agg_len = lp.din if lp.order == AGGREGATE_FIRST else lp.dout
+        return {
+            "order": lp.order,
+            "aggregation": phases.aggregate_cost(self.g, agg_len),
+            "combination": phases.combine_cost(self.g.num_vertices, lp.dims),
+            "ordering_cost": ordering_cost(self.g, lp.din, lp.dout, lp.order),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Layer execution core (the ONE place ordering x backend x fusion composes)
+# ---------------------------------------------------------------------------
+
+
+def _fused_agg_op(lp: LayerPlan) -> Optional[str]:
+    """Map a layer's aggregation semantics onto fused_gcn_layer's modes."""
+    if lp.agg_op == "mean":
+        return "mean" if lp.include_self else None
+    if lp.agg_op == "sum":
+        return "sum_self" if lp.include_self else "sum"
+    return None  # max: non-linear, cannot fuse
+
+
+def _can_fuse(lp: LayerPlan, weights, edge_weight) -> bool:
+    if not (lp.fused and lp.blocked is not None and edge_weight is None):
+        return False
+    if _fused_agg_op(lp) is None:
+        return False
+    # An inline bias on the fused matmul is exact when it applies after the
+    # reduction (aggregate-first) or commutes with it (mean of a constant
+    # row is that row); otherwise fall back to the unfused path.
+    b0 = weights[0][1]
+    return b0 is None or lp.order == AGGREGATE_FIRST or lp.agg_op == "mean"
+
+
+def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
+                   edge_weight=None, activation: str = "relu",
+                   bias_post=None) -> jnp.ndarray:
+    """Execute one layer per its plan: fusion > ordering > backend."""
+    if _can_fuse(lp, weights, edge_weight):
+        w0, b0 = weights[0]
+        if len(weights) == 1:
+            # Whole layer fused: aggregate(+)combine never leaves the tile.
+            # An inline b0 is exact applied post-aggregation here (that is
+            # what _can_fuse admitted), so fold it into the final bias.
+            bias = b0 if bias_post is None else (
+                bias_post if b0 is None else b0 + bias_post)
+            return fused_gcn_layer(lp.blocked, x, w0, bias,
+                                   agg_op=_fused_agg_op(lp), in_deg=g.in_deg,
+                                   backend=lp.backend)
+        # Multi-layer MLP (GIN): fuse aggregation with the FIRST matmul --
+        # exact because sum/mean aggregation is linear and the interior
+        # nonlinearity only applies after that matmul.
+        h = fused_gcn_layer(lp.blocked, x, w0, b0, agg_op=_fused_agg_op(lp),
+                            in_deg=g.in_deg, backend=lp.backend)
+        h = phases._act(activation)(h)
+        h = phases.combine(h, weights[1:], activation=activation)
+    elif lp.order == COMBINE_FIRST:
+        h = phases.combine(x, weights, activation=activation)
+        h = phases.aggregate(g, h, op=lp.agg_op, edge_weight=edge_weight,
+                             include_self=lp.include_self, backend=lp.backend)
+    else:
+        h = phases.aggregate(g, x, op=lp.agg_op, edge_weight=edge_weight,
+                             include_self=lp.include_self, backend=lp.backend)
+        h = phases.combine(h, weights, activation=activation)
+    if bias_post is not None:
+        h = h + bias_post
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Plan construction + caching
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict = {}      # (graph_key, spec_key) -> (src_ref, plan)
+_BLOCKED_CACHE: Dict = {}   # (graph_key, tile_m)   -> (src_ref, BlockedGraph)
+_CACHE_LIMIT = 64
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _BLOCKED_CACHE.clear()
+
+
+def _graph_key(g: Graph):
+    if isinstance(g.src, jax.core.Tracer):
+        raise ValueError(
+            "build_plan needs a concrete Graph; build the plan outside jit "
+            "and close over it (plans precompute host-side structures)")
+    return (id(g.src), int(g.num_vertices), int(g.src.shape[0]))
+
+
+def _evict_oldest(cache: Dict) -> None:
+    """FIFO eviction: transient graphs (e.g. per-batch sampled blocks) age
+    out one at a time instead of wiping hot full-graph entries wholesale."""
+    while len(cache) >= _CACHE_LIMIT:
+        cache.pop(next(iter(cache)))
+
+
+def _blocked_for(g: Graph, tile_m: int) -> BlockedGraph:
+    """Build (or reuse) the BlockedGraph for (graph, tile_m).
+
+    The regrouping is O(E) host work; plans for the same graph -- across
+    rebuilds, convs, and benchmark scenarios -- share one copy.
+    """
+    key = (_graph_key(g), tile_m)
+    hit = _BLOCKED_CACHE.get(key)
+    if hit is not None and hit[0] is g.src:
+        return hit[1]
+    _evict_oldest(_BLOCKED_CACHE)
+    bg = block_graph(g, tile_m)
+    _BLOCKED_CACHE[key] = (g.src, bg)
+    return bg
+
+
+def _cached_plan(g: Graph, spec_key, builder):
+    key = (_graph_key(g), spec_key)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0] is g.src:
+        return hit[1]
+    _evict_oldest(_PLAN_CACHE)
+    plan = builder()
+    _PLAN_CACHE[key] = (g.src, plan)
+    return plan
+
+
+def _plan_layer(g: Graph, index: int, kind: str, dims: Tuple[int, ...], *,
+                agg_op: str, ordering: str, backend: str, fused: bool,
+                include_self: bool = True) -> LayerPlan:
+    """Resolve one layer's ordering / backend / fusion decisions."""
+    semantic = AGGREGATE_FIRST if len(dims) > 2 else COMBINE_FIRST
+    if ordering in (COMBINE_FIRST, AGGREGATE_FIRST):
+        order = ordering if len(dims) <= 2 else AGGREGATE_FIRST  # GIN pinned
+    else:
+        order = choose_ordering(g, dims[0], dims[-1], agg_op=agg_op,
+                                n_mlp_layers=len(dims) - 1,
+                                semantic_order=semantic)
+    backend = resolve_backend(backend)
+    fused = bool(fused) and agg_op in ("sum", "mean")
+    tile_m, blocked = 0, None
+    if fused:
+        avg_deg = g.num_edges / max(1, g.num_vertices)
+        tile_m = suggest_tile_m(dims[0], dims[1], avg_deg)
+        # a tile larger than the graph only pads; clamp to |V| rounded up
+        tile_m = max(8, min(tile_m, -(-g.num_vertices // 8) * 8))
+        blocked = _blocked_for(g, tile_m)
+    return LayerPlan(index=index, kind=kind, dims=tuple(int(d) for d in dims),
+                     agg_op=agg_op, include_self=include_self, order=order,
+                     backend=backend, fused=fused, tile_m=tile_m,
+                     blocked=blocked)
+
+
+def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
+               backend: str = AUTO, fused: Optional[bool] = None,
+               ordering: Optional[str] = None, mesh=None,
+               num_shards: int = 0, strategy: str = "ring",
+               axis: str = "data", interpret: Optional[bool] = None
+               ) -> GraphExecutionPlan:
+    """Plan a full model (``GCNModelConfig``) over one graph.
+
+    Overrides: ``backend`` ("auto" resolves per platform), ``fused`` /
+    ``ordering`` (default from cfg), ``mesh`` + ``num_shards`` for the 1-D
+    shard partition.  Plans are cached: calling again with the same graph
+    and arguments returns the same plan object (and any rebuilt plan on the
+    same graph reuses the cached BlockedGraph).
+    """
+    agg = cfg.aggregator
+    use_fused = cfg.fused if fused is None else bool(fused)
+    req_order = cfg.ordering if ordering is None else ordering
+    spec_key = (cfg.name, cfg.conv, agg, tuple(cfg.hidden_dims),
+                cfg.num_layers, int(in_dim), int(num_classes), backend,
+                use_fused, req_order, id(mesh), num_shards, strategy, axis,
+                interpret)
+
+    def builder():
+        if mesh is not None and num_shards > 0:
+            if cfg.conv == "gin":
+                raise ValueError(
+                    "distributed plans support single-matmul convs "
+                    "(gcn/sage); GIN's interior nonlinearity needs the "
+                    "local path")
+            from repro.graph.partition import partition_1d
+            partition = partition_1d(g, num_shards, edge_balanced=False)
+            lay_backend, lay_fused = XLA, False  # shard_map path is XLA
+        else:
+            partition = None
+            lay_backend, lay_fused = backend, use_fused
+
+        hid = cfg.hidden_dims[0]
+        layers = []
+        d = in_dim
+        for i in range(cfg.num_layers):
+            dout = hid if i < cfg.num_layers - 1 else num_classes
+            dims = (d, cfg.hidden_dims[-1], dout) if cfg.conv == "gin" \
+                else (d, dout)
+            layers.append(_plan_layer(
+                g, i, cfg.conv, dims, agg_op=agg, ordering=req_order,
+                backend=lay_backend, fused=lay_fused))
+            d = dout
+        return GraphExecutionPlan(
+            g, layers, interpret=resolve_interpret(interpret), mesh=mesh,
+            partition=partition, strategy=strategy, axis=axis)
+
+    return _cached_plan(g, spec_key, builder)
+
+
+def plan_for_conv(conv, g: Graph) -> GraphExecutionPlan:
+    """Single-layer plan for a standalone conv (GCNConv / SAGEConv / GINConv
+    ``apply`` without a model-level plan)."""
+    kind = type(conv).__name__.replace("Conv", "").lower()
+    dims = (conv.din, conv.hidden, conv.dout) if kind == "gin" \
+        else (conv.din, conv.dout)
+    agg_op = "sum" if kind == "gin" else "mean"
+    backend = getattr(conv, "backend", AUTO)
+    fused = bool(getattr(conv, "fused", False))
+    spec_key = ("conv", kind, dims, conv.ordering, backend, fused)
+
+    def builder():
+        lp = _plan_layer(g, 0, kind, dims, agg_op=agg_op,
+                         ordering=conv.ordering, backend=backend, fused=fused)
+        return GraphExecutionPlan(g, [lp], interpret=resolve_interpret(None))
+
+    return _cached_plan(g, spec_key, builder)
+
+
+def plan_for_phases(g: Graph, weights, *, order: Optional[str] = None,
+                    agg_op: str = "mean", backend: str = AUTO,
+                    fused: bool = False) -> GraphExecutionPlan:
+    """Single-layer plan for a raw weight list (``phase_ordered_layer``)."""
+    dims = tuple([int(w.shape[0]) for (w, _) in weights] +
+                 [int(weights[-1][0].shape[1])])
+    spec_key = ("phase", dims, order, agg_op, backend, fused)
+
+    def builder():
+        lp = _plan_layer(g, 0, "phase", dims, agg_op=agg_op,
+                         ordering=order or AUTO, backend=backend, fused=fused)
+        return GraphExecutionPlan(g, [lp], interpret=resolve_interpret(None))
+
+    return _cached_plan(g, spec_key, builder)

@@ -42,10 +42,9 @@ def sample_neighbors(g: Graph, seeds: np.ndarray, fanout: int,
             samp_src[i] = v  # isolated: self only
             continue
         take = min(fanout, deg)
-        idx = rng.choice(deg, size=take, replace=deg < fanout and False or False) \
-            if take < deg else np.arange(deg)
-        if take < deg:
-            idx = rng.choice(deg, size=take, replace=False)
+        # one no-replacement draw; degree <= fanout keeps every neighbor
+        idx = rng.choice(deg, size=take, replace=False) if take < deg \
+            else np.arange(deg)
         samp_src[i, :take] = src_all[lo + idx]
         samp_src[i, take:] = v
         samp_msk[i, :take] = True

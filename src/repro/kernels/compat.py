@@ -1,0 +1,13 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` around
+0.5; the kernels target the new name and this module backfills it on older
+installs so one source tree runs on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 NEG_INF = -1e30
 
 
@@ -105,12 +107,16 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     kv_len: Optional[jnp.ndarray] = None, *,
                     causal: bool = True, window: int = 0,
                     softcap: float = 0.0, tile_q: int = 128,
-                    tile_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+                    tile_k: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); returns (B, Hq, Sq, D).
 
     Sq and Sk are padded to tile multiples internally; ``kv_len`` (B,) marks
-    valid KV entries (defaults to Sk).
+    valid KV entries (defaults to Sk).  interpret None = auto-detect
+    (core.backend.default_interpret).
     """
+    from repro.core.backend import resolve_interpret
+    interpret = resolve_interpret(interpret)
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0
@@ -149,7 +155,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((tile_q, 128), jnp.float32),
             pltpu.VMEM((tile_q, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -26,11 +26,16 @@ budget used by ops.py's tile picker.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+
+from repro.core.backend import resolve_interpret
 
 
 def _fused_kernel(seg_ref, mask_ref, rows_ref, w_ref, out_ref, acc_ref, *,
@@ -64,14 +69,17 @@ def _fused_kernel(seg_ref, mask_ref, rows_ref, w_ref, out_ref, acc_ref, *,
 def fused_agg_combine_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
                               mask: jnp.ndarray, w: jnp.ndarray, *,
                               tile_m: int, tile_e: int = 512,
-                              interpret: bool = True) -> jnp.ndarray:
+                              interpret: Optional[bool] = None
+                              ) -> jnp.ndarray:
     """out[block b] = (sum_seg rows[b]) @ w, fused in VMEM.
 
     rows: (nblocks, emax, F_in) destination-block-grouped gathered rows.
     seg_local/mask: (nblocks, emax).
     w: (F_in, F_out).
+    interpret: None = auto-detect (core.backend.default_interpret).
     Returns (nblocks * tile_m, F_out) in w.dtype.
     """
+    interpret = resolve_interpret(interpret)
     nblocks, emax, f_in = rows.shape
     f_out = w.shape[1]
     assert w.shape[0] == f_in, (w.shape, f_in)
@@ -90,7 +98,7 @@ def fused_agg_combine_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
         out_specs=pl.BlockSpec((1, tile_m, f_out), lambda b, e: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nblocks, tile_m, f_out), w.dtype),
         scratch_shapes=[pltpu.VMEM((tile_m, f_in), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="fused_agg_combine",

@@ -2,28 +2,25 @@
 
 These own tile selection (VMEM-budget-aware, MXU-aligned), static-shape
 padding, and the host<->kernel layout glue so the rest of the framework calls
-plain functions.  On this CPU container kernels run in interpret mode
-(``interpret=True``); on a real TPU set ``REPRO_PALLAS_INTERPRET=0``.
+plain functions.  Interpret mode is auto-detected per platform
+(``core.backend.default_interpret``: interpreted off-TPU, compiled on TPU;
+override with ``REPRO_PALLAS_INTERPRET=0/1``).
 """
 
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import default_interpret as _interpret
 from repro.core.characterize import VMEM_BYTES
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_agg_combine import fused_agg_combine_blocked
 from repro.kernels.seg_agg import seg_agg_blocked
-
-
-def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def _round_up(x: int, m: int) -> int:
@@ -53,17 +50,11 @@ def seg_agg(rows: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
     bs_rows = jnp.zeros((nblocks, emax, f), rows.dtype)
     seg_l = np.zeros((nblocks, emax), np.int32)
     mask = np.zeros((nblocks, emax), np.float32)
-    starts = np.zeros(nblocks + 1, np.int64)
-    np.cumsum(counts, out=starts[1:])
-    idx_b = np.empty(e, np.int64)
-    idx_e = np.empty(e, np.int64)
-    for b in range(nblocks):
-        lo, hi = starts[b], starts[b + 1]
-        idx_b[lo:hi] = b
-        idx_e[lo:hi] = np.arange(hi - lo)
-        seg_l[b, : hi - lo] = seg_np[lo:hi] - b * tile_m
-        mask[b, : hi - lo] = 1.0
-    bs_rows = bs_rows.at[jnp.asarray(idx_b), jnp.asarray(idx_e)].set(rows)
+    from repro.core.dataflow import block_offsets
+    _, offs = block_offsets(blk, nblocks)
+    seg_l[blk, offs] = seg_np - blk * tile_m
+    mask[blk, offs] = 1.0
+    bs_rows = bs_rows.at[jnp.asarray(blk), jnp.asarray(offs)].set(rows)
     out = seg_agg_blocked(bs_rows, jnp.asarray(seg_l), jnp.asarray(mask),
                           tile_m=tile_m, tile_e=tile_e,
                           interpret=_interpret())

@@ -27,11 +27,16 @@ fp32): rows 256 KiB + onehot 256 KiB + acc 64 KiB << 128 MiB VMEM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+
+from repro.core.backend import resolve_interpret
 
 
 def _seg_agg_kernel(seg_ref, mask_ref, rows_ref, out_ref, acc_ref, *,
@@ -62,7 +67,7 @@ def _seg_agg_kernel(seg_ref, mask_ref, rows_ref, out_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret"))
 def seg_agg_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
                     mask: jnp.ndarray, *, tile_m: int, tile_e: int = 512,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
     """Blocked segmented sum.
 
     Args:
@@ -72,9 +77,12 @@ def seg_agg_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
       mask:      (nblocks, emax) 1/0 edge validity.
       tile_m:    output rows per block (static).
       tile_e:    edge chunk per grid step (static; emax must be a multiple).
+      interpret: None = auto (compiled on TPU, interpreted elsewhere --
+                 core.backend.default_interpret).
 
     Returns (nblocks * tile_m, F).
     """
+    interpret = resolve_interpret(interpret)
     nblocks, emax, f = rows.shape
     assert emax % tile_e == 0, (emax, tile_e)
     n_e = emax // tile_e
@@ -91,7 +99,7 @@ def seg_agg_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
         out_specs=pl.BlockSpec((1, tile_m, f), lambda b, e: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nblocks, tile_m, f), rows.dtype),
         scratch_shapes=[pltpu.VMEM((tile_m, f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="seg_agg",

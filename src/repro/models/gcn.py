@@ -1,22 +1,23 @@
 """Full GCN / GIN / GraphSAGE models (paper Table 1 configurations).
 
-Two-layer node-classification networks over the phase primitives, with
-per-layer phase-ordering control, the fused-dataflow option, and the analytic
-per-phase cost breakdown used by the benchmark harness.
+Node-classification networks whose execution is owned by a
+``GraphExecutionPlan`` (core/plan.py): per-layer phase ordering, aggregation
+backend, fused-dataflow tiling, and (optionally) the shard partition are
+planned once per graph and cached.  ``GCNModel.apply`` is plan dispatch --
+there are no per-call ``impl=``/``blocked=`` flags.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import GCNModelConfig, GraphSpec
-from repro.core import phases
-from repro.core.dataflow import BlockedGraph, block_graph, suggest_tile_m
+from repro.core.backend import AUTO
 from repro.core.gcn_layers import CONVS
-from repro.core.scheduler import ordering_cost
+from repro.core.plan import GraphExecutionPlan, build_plan
 from repro.graph.structure import Graph
 
 # Paper Table 1 model configs: |h|->128 single layer (GCN/SAG);
@@ -33,13 +34,14 @@ PAPER_MODELS: Dict[str, GCNModelConfig] = {
 
 
 class GCNModel:
-    """num_layers stacked convolutions + classifier head."""
+    """num_layers stacked convolutions + classifier head, plan-dispatched."""
 
     def __init__(self, cfg: GCNModelConfig, in_dim: int, num_classes: int,
-                 impl: str = "xla"):
+                 backend: str = AUTO):
         self.cfg = cfg
         self.in_dim = in_dim
         self.num_classes = num_classes
+        self.backend = backend
         hid = cfg.hidden_dims[0]
         conv_cls = CONVS[cfg.conv]
         self.convs = []
@@ -48,10 +50,10 @@ class GCNModel:
             dout = hid if i < cfg.num_layers - 1 else num_classes
             if cfg.conv == "gin":
                 self.convs.append(conv_cls(d, dout, hidden=cfg.hidden_dims[-1],
-                                           impl=impl))
+                                           backend=backend, fused=cfg.fused))
             else:
                 self.convs.append(conv_cls(d, dout, ordering=cfg.ordering,
-                                           impl=impl))
+                                           backend=backend, fused=cfg.fused))
             d = dout
 
     def init(self, key) -> Dict:
@@ -59,51 +61,37 @@ class GCNModel:
         return {f"conv{i}": c.init(k) for i, (c, k) in
                 enumerate(zip(self.convs, keys))}
 
+    def plan_for(self, g: Graph, **overrides) -> GraphExecutionPlan:
+        """The model's execution plan over ``g`` (cached in core/plan.py)."""
+        return build_plan(g, self.cfg, self.in_dim, self.num_classes,
+                          backend=overrides.pop("backend", self.backend),
+                          **overrides)
+
     def apply(self, params, g: Graph, x,
-              blocked: Optional[BlockedGraph] = None) -> jnp.ndarray:
-        h = x
-        for i, conv in enumerate(self.convs):
-            h = conv.apply(params[f"conv{i}"], g, h,
-                           blocked=blocked if self.cfg.fused else None)
-            if i < len(self.convs) - 1:
-                h = jax.nn.relu(h)
-        return h
+              plan: Optional[GraphExecutionPlan] = None) -> jnp.ndarray:
+        plan = plan or self.plan_for(g)
+        return plan.run_model(params, x)
 
     def loss_fn(self, params, g: Graph, x, labels,
-                mask: Optional[jnp.ndarray] = None):
-        logits = self.apply(params, g, x)
+                mask: Optional[jnp.ndarray] = None,
+                plan: Optional[GraphExecutionPlan] = None):
+        logits = self.apply(params, g, x, plan=plan)
         ll = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(ll, labels[:, None], axis=-1)[:, 0]
         if mask is not None:
             return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
         return nll.mean()
 
-    def make_blocked(self, g: Graph) -> BlockedGraph:
-        avg_deg = g.num_edges / max(1, g.num_vertices)
-        tile = suggest_tile_m(self.in_dim, self.cfg.hidden_dims[0], avg_deg)
-        return block_graph(g, tile)
-
     # -- analytic per-phase costs (drives benchmarks + Table 3/4) ----------
     def layer_costs(self, g: Graph, layer: int = 0) -> Dict:
-        conv = self.convs[layer]
-        din = conv.din
-        dims: List[int] = [din] + ([conv.hidden, conv.dout]
-                                   if self.cfg.conv == "gin" else [conv.dout])
-        order = conv.resolve_order(g)
-        agg_len = dims[0] if order == "aggregate_first" else dims[-1]
-        return {
-            "order": order,
-            "aggregation": phases.aggregate_cost(g, agg_len),
-            "combination": phases.combine_cost(g.num_vertices, dims),
-            "ordering_cost": ordering_cost(g, dims[0], dims[-1], order),
-        }
+        return self.plan_for(g).layer_costs(layer)
 
 
-def make_paper_model(name: str, spec: GraphSpec, impl: str = "xla",
+def make_paper_model(name: str, spec: GraphSpec, backend: str = AUTO,
                      **overrides) -> GCNModel:
     import dataclasses
     cfg = PAPER_MODELS[name]
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     return GCNModel(cfg, in_dim=spec.feature_len,
-                    num_classes=spec.num_classes, impl=impl)
+                    num_classes=spec.num_classes, backend=backend)

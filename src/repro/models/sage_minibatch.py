@@ -1,13 +1,13 @@
 """GraphSAGE mini-batch training (paper §2: "GraphSAGE only updates a batch
 of vertexes along with their 2-hop neighbors in an iteration").
 
-Couples graph/sampling.two_hop_batch with the phase-ordered SAGE layers:
+Couples graph/sampling.two_hop_batch with the plan-dispatched SAGE layers:
 layer 1 runs over the hop-2 block (farthest frontier -> hop-1 inputs),
-layer 2 over the hop-1 block (hop-1 inputs -> seed logits).  The phase
-scheduler applies per block exactly as in full-graph mode — the ordering
-decision (Table 4) is a property of (in_len, out_len, |E|/|V|), which
-sampling changes (fanout-regular degree), so the demo shows the scheduler
-re-deciding per block.
+layer 2 over the hop-1 block (hop-1 inputs -> seed logits).  Each sampled
+block gets its own ``GraphExecutionPlan`` (built/cached per block graph by
+core/plan.py) — the ordering decision (Table 4) is a property of
+(in_len, out_len, |E|/|V|), which sampling changes (fanout-regular degree),
+so the demo shows the planner re-deciding per block.
 """
 
 from __future__ import annotations
@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.config import GraphSpec
 from repro.core.gcn_layers import SAGEConv
-from repro.core.scheduler import choose_ordering
+from repro.core.plan import plan_for_conv
 from repro.graph.sampling import SampledBlock
 
 
@@ -39,11 +39,13 @@ class SageMiniBatchModel:
 
         Returns logits for hop1.seed_ids (the mini-batch seeds).
         """
-        h = self.layer1.apply(params["l1"], hop2.graph, x_inputs)
+        p1 = plan_for_conv(self.layer1, hop2.graph)
+        p2 = plan_for_conv(self.layer2, hop1.graph)
+        h = self.layer1.apply(params["l1"], hop2.graph, x_inputs, plan=p1)
         h = jax.nn.relu(h)
         # hop1's input vertices are a prefix-compatible subset: map rows
         h1_inputs = h[_index_of(hop2.input_ids, hop1.input_ids)]
-        out = self.layer2.apply(params["l2"], hop1.graph, h1_inputs)
+        out = self.layer2.apply(params["l2"], hop1.graph, h1_inputs, plan=p2)
         return out[: len(hop1.seed_ids)]
 
     def loss(self, params, hop2, hop1, x_inputs, labels) -> jnp.ndarray:

@@ -1,8 +1,22 @@
 # NOTE: no XLA_FLAGS here by design -- smoke tests and benches must see the
 # single real CPU device.  Multi-device tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves (tests/test_distributed.py).
+import sys
+
 import numpy as np
 import pytest
+
+try:  # the container has no hypothesis wheel; fall back to the local stub
+    import hypothesis  # noqa: F401
+except ImportError:
+    import importlib.util
+    from pathlib import Path
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", Path(__file__).parent / "_hypothesis_stub.py")
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
 
 
 @pytest.fixture

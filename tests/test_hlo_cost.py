@@ -92,7 +92,7 @@ def test_collective_bytes_from_sharded_program():
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                          text=True, env={"PYTHONPATH": src, "HOME": "/root",
                                           "PATH": "/usr/bin:/bin"},
-                         timeout=300)
+                         timeout=600)  # 8 fake-device startup is slow on CI
     assert res.returncode == 0, res.stderr[-2000:]
     assert "COLL" in res.stdout
 

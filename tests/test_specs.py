@@ -16,9 +16,14 @@ from repro.launch.specs import (abstract_params, arch_attn_tp, input_specs,
 
 
 def _mesh(multi=False):
-    if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+    # jax >= 0.5 takes (axis_sizes, axis_names); 0.4.x takes one tuple of
+    # (name, size) pairs -- build whichever this install accepts.
+    sizes, names = ((2, 16, 16), ("pod", "data", "model")) if multi \
+        else ((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
 
 
 def test_cell_enumeration_is_40():
