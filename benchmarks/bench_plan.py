@@ -1,37 +1,143 @@
-"""Planner sweep: ONE harness comparing backend x ordering x fusion.
+"""Planner sweep: ONE harness comparing backend x ordering x fusion x
+partition.
 
 Every scenario is expressed as a ``build_plan`` override, so this module
 exercises exactly the dispatch layer production code uses -- no hand-built
 kernel calls.  Emits one row per scenario with the plan's decisions
-(order/backend/tile_m/interpret) plus measured wall-clock, and one row per
-model with the decisions the planner takes when left on "auto".
+(order/RESOLVED backend/tile_m/interpret) plus measured wall-clock, and one
+row per model with the decisions the planner takes when left on "auto".
 
 ``run(dry=True)`` (the ``benchmarks/run.py --dry-run`` path) builds and
-validates every plan and emits the decisions without timing -- the CI smoke
-check (scripts/smoke.sh).
+validates every plan, emits the decisions without timing, and *accounts for
+every scenario in the matrix*: anything skipped is reported with a reason,
+and a scenario missing without one raises (scripts/smoke.sh fails).  The
+partition scenarios (1-D and 2-D meshes) run in a subprocess with 8 fake
+host devices so the main process keeps its single real device (the same
+rule tests/test_distributed.py follows).
+
+A backend is only *natively* exercised on its own platform; everywhere else
+the Pallas tiers run in interpret mode.  The dry run prints exactly which
+tiers were compiled vs interpreted so a GPU-less container can no longer
+silently validate nothing but XLA paths.
 """
 
 from __future__ import annotations
 
 import itertools
+import os
+import subprocess
+import sys
+from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import bench_graph, emit, timeit
+from repro.core.backend import interpret_for, platform
 from repro.core.plan import build_plan
 from repro.core.scheduler import AGGREGATE_FIRST, COMBINE_FIRST
 from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.models.gcn import PAPER_MODELS, make_paper_model
 
-BACKENDS = ("xla", "pallas")
+BACKENDS = ("xla", "pallas-tpu", "pallas-gpu")
 ORDERINGS = (None, COMBINE_FIRST, AGGREGATE_FIRST)  # None = cost model
 FUSION = (False, True)
+
+#: (kind, mesh shape, mesh axis names, halo strategy) -- subprocess matrix
+PARTITIONS = (
+    ("1d", (8,), ("data",), "ring"),
+    ("1d", (8,), ("data",), "allgather"),
+    ("2d", (4, 2), ("node", "feat"), "ring"),
+    ("2d", (4, 2), ("node", "feat"), "allgather"),
+    ("2d", (2, 4), ("node", "feat"), "ring"),
+)
 
 
 def _scenario_name(backend, ordering, fused):
     return (f"plan/gcn/{backend}/{ordering or 'auto'}/"
             f"{'fused' if fused else 'unfused'}")
+
+
+def _partition_name(kind, shape, strategy):
+    return f"plan/gcn/partition-{kind}/{'x'.join(map(str, shape))}/{strategy}"
+
+
+def expected_matrix():
+    """Every scenario name the dry run must account for."""
+    names = [_scenario_name(b, o, f) for b, o, f in
+             itertools.product(BACKENDS, ORDERINGS, FUSION)]
+    names += [_partition_name(k, s, st) for k, s, _, st in PARTITIONS]
+    return names
+
+
+def _run_local_scenarios(spec, g, x, m, params, dry):
+    validated = []
+    for backend, ordering, fused in itertools.product(BACKENDS, ORDERINGS,
+                                                      FUSION):
+        plan = build_plan(g, m.cfg, spec.feature_len, spec.num_classes,
+                          backend=backend, ordering=ordering, fused=fused)
+        d0 = plan.describe()[0]
+        derived = dict(order=d0["order"], backend=d0["backend"],
+                       fused=d0["fused"], tile_m=d0["tile_m"],
+                       interpret=d0["interpret"], agg_bytes=d0["agg_bytes"])
+        name = _scenario_name(backend, ordering, fused)
+        if dry or backend != "xla":
+            # interpret-mode wall-clock is meaningless; validate + describe
+            out = plan.run_model(params, x) if dry else None
+            if out is not None:
+                assert out.shape == (spec.num_vertices, spec.num_classes)
+            emit(name, 0.0, **derived)
+        else:
+            fn = jax.jit(lambda xx, p=plan: p.run_model(params, xx))
+            emit(name, timeit(fn, x), **derived)
+        validated.append(name)
+    return validated
+
+
+_PARTITION_CHILD_FLAG = "--partition-child"
+
+
+def _partition_child():
+    """Subprocess body: validate every partition scenario on fake devices."""
+    import numpy as np
+    spec = bench_graph("reddit", max_vertices=256, max_feature=64)
+    g = make_synthetic_graph(spec)
+    x = make_features(spec)
+    m = make_paper_model("gcn", spec)
+    params = m.init(jax.random.PRNGKey(0))
+    ref = build_plan(g, m.cfg, spec.feature_len,
+                     spec.num_classes).run_model(params, x)
+    for kind, shape, names, strategy in PARTITIONS:
+        mesh = jax.make_mesh(shape, names)
+        plan = build_plan(g, m.cfg, spec.feature_len, spec.num_classes,
+                          mesh=mesh, strategy=strategy)
+        assert plan.partition_kind == kind, (plan.partition_kind, kind)
+        with mesh:
+            out = plan.run_model(params, x)
+        err = float(np.abs(np.asarray(out - ref)).max())
+        assert err < 1e-3, (kind, shape, strategy, err)
+        d0 = plan.describe()[0]
+        emit(_partition_name(kind, shape, strategy), 0.0,
+             order=d0["order"], backend=d0["backend"],
+             partition=d0["partition"], max_err=f"{err:.2e}")
+    print("PARTITION-CHILD-OK")
+
+
+def _dry_run_partitions():
+    """Spawn the partition matrix in a subprocess with 8 fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(Path(__file__).resolve().parents[1] / "src"),
+         str(Path(__file__).resolve().parents[1])])
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_plan",
+         _PARTITION_CHILD_FLAG],
+        capture_output=True, text=True, env=env, timeout=600)
+    sys.stdout.write(res.stdout)
+    if res.returncode != 0 or "PARTITION-CHILD-OK" not in res.stdout:
+        raise RuntimeError(
+            f"partition dry-run subprocess failed:\n{res.stderr[-3000:]}")
+    return [_partition_name(k, s, st) for k, s, _, st in PARTITIONS]
 
 
 def run(dry: bool = False):
@@ -42,24 +148,13 @@ def run(dry: bool = False):
     m = make_paper_model("gcn", spec)
     params = m.init(jax.random.PRNGKey(0))
 
-    for backend, ordering, fused in itertools.product(BACKENDS, ORDERINGS,
-                                                      FUSION):
-        plan = build_plan(g, m.cfg, spec.feature_len, spec.num_classes,
-                          backend=backend, ordering=ordering, fused=fused)
-        d0 = plan.describe()[0]
-        derived = dict(order=d0["order"], backend=d0["backend"],
-                       fused=d0["fused"], tile_m=d0["tile_m"],
-                       interpret=d0["interpret"], agg_bytes=d0["agg_bytes"])
-        if dry or backend == "pallas":
-            # interpret-mode wall-clock is meaningless; validate + describe
-            out = plan.run_model(params, x) if dry else None
-            if out is not None:
-                assert out.shape == (spec.num_vertices, spec.num_classes)
-            emit(_scenario_name(backend, ordering, fused), 0.0, **derived)
-        else:
-            fn = jax.jit(lambda xx, p=plan: p.run_model(params, xx))
-            emit(_scenario_name(backend, ordering, fused), timeit(fn, x),
-                 **derived)
+    validated = _run_local_scenarios(spec, g, x, m, params, dry)
+    skipped = {}
+    if dry:
+        validated += _dry_run_partitions()
+    else:
+        for name in (_partition_name(k, s, st) for k, s, _, st in PARTITIONS):
+            skipped[name] = "partition timing needs a real multi-device mesh"
 
     # what does the planner decide unaided, per paper model?
     for name in ("gcn", "sage", "gin"):
@@ -70,10 +165,32 @@ def run(dry: bool = False):
                  order=d["order"], backend=d["backend"], fused=d["fused"],
                  din=d["din"], dout=d["dout"], agg_bytes=d["agg_bytes"])
 
+    # coverage report: which tiers ran compiled vs interpret-only, and
+    # whether every matrix scenario is accounted for (fail loudly if not)
+    plat = platform()
+    compiled = [b for b in BACKENDS
+                if b == "xla" or not interpret_for(b)]
+    interp = [b for b in BACKENDS if b not in compiled]
+    print(f"# backend coverage on platform={plat}: compiled natively: "
+          f"{','.join(compiled)}; interpret-mode only (numerics validated, "
+          f"perf NOT exercised): {','.join(interp) or 'none'}")
+    for name, why in skipped.items():
+        print(f"# skipped: {name} ({why})")
+    missing = [n for n in expected_matrix()
+               if n not in validated and n not in skipped]
+    if missing:
+        raise RuntimeError(
+            "dry-run matrix scenarios silently skipped: " + ", ".join(missing))
+    print(f"# matrix: {len(validated)} scenario(s) validated, "
+          f"{len(skipped)} skipped with reasons, 0 silent")
+
 
 def dry_run():
     run(dry=True)
 
 
 if __name__ == "__main__":
-    run()
+    if _PARTITION_CHILD_FLAG in sys.argv:
+        _partition_child()
+    else:
+        run()

@@ -42,7 +42,10 @@ def main() -> None:
         "roofline": roofline,
     }
     if dry:
-        # planner-path smoke: build+validate every scenario plan, no timing
+        # planner-path smoke: build+validate every scenario plan, no timing.
+        # A selected module without a dry-run mode is a HARD failure -- a
+        # scenario silently skipped here would merge unvalidated
+        # (scripts/smoke.sh counts on this exit code).
         selected = argv or ["bench_plan"]
         failures = 0
         for name in selected:
@@ -52,7 +55,10 @@ def main() -> None:
                 if hasattr(mod, "dry_run"):
                     mod.dry_run()
                 else:
-                    print(f"# {name}: no dry-run mode, skipped")
+                    raise RuntimeError(
+                        f"{name} has no dry_run(); its scenarios would be "
+                        "silently skipped -- add one or drop it from the "
+                        "dry-run selection")
             except Exception:  # noqa: BLE001
                 failures += 1
                 traceback.print_exc()

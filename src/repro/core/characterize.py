@@ -32,6 +32,16 @@ MXU_DIM = 128
 #: machine balance: FLOPs per byte at which compute and HBM time are equal
 MACHINE_BALANCE = PEAK_FLOPS_BF16 / HBM_BW  # ~240 flop/byte
 
+# --- GPU (A100-class) hardware constants (per SM) --------------------------
+# Used by the occupancy-aware GPU tile picker (core.dataflow.suggest_tile_m
+# with the pallas-gpu backend): unlike the TPU's one big VMEM, a GPU hides
+# latency by keeping SEVERAL thread blocks resident per SM, so the per-block
+# working set must fit a fraction of the SM's shared-memory/L1 carveout.
+GPU_SMEM_PER_SM = 192 * 1024      # unified SMEM/L1 carveout per SM (bytes)
+GPU_REGFILE_PER_SM = 256 * 1024   # register file per SM (bytes)
+GPU_TARGET_CTAS_PER_SM = 4        # resident CTAs needed to hide HBM latency
+GPU_WARP_ROWS = 32                # threads per warp = natural row granularity
+
 
 # ---------------------------------------------------------------------------
 # HLO parsing

@@ -10,11 +10,14 @@ This module provides the *tiled* executor: destination vertices are processed
 in blocks of ``tile_m`` rows; each block is aggregated and immediately
 combined while the next block's edges stream in.  Two backends:
 
-  * ``xla``    -- lax.scan over vertex blocks; XLA keeps the per-block
+  * ``xla``        -- lax.scan over vertex blocks; XLA keeps the per-block
     aggregate in registers/cache rather than a (V, F) HBM intermediate.
-  * ``pallas`` -- the fused gather->reduce->GEMM kernel
+  * ``pallas-tpu`` -- the fused gather->reduce->GEMM kernel
     (kernels/fused_agg_combine.py) where the block accumulator lives in VMEM
     and the weight tile is VMEM-resident across all blocks.
+  * ``pallas-gpu`` -- the row-blocked GPU variant (kernels/gpu_agg.py):
+    one thread block owns one destination block, edge chunks loop in-kernel
+    with a register accumulator (no cross-CTA atomics), coalesced slab loads.
 
 Granularity (``tile_m``) is the paper's "adaptive execution granularity":
 large tiles amortize the weight-tile reuse (compute efficiency), small tiles
@@ -30,7 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.characterize import VMEM_BYTES
+from repro.core.backend import PALLAS_GPU, is_pallas
+from repro.core.characterize import (GPU_SMEM_PER_SM, GPU_TARGET_CTAS_PER_SM,
+                                     GPU_WARP_ROWS, VMEM_BYTES)
 from repro.graph.structure import Graph
 
 
@@ -93,13 +98,32 @@ def block_graph(g: Graph, tile_m: int) -> BlockedGraph:
 
 
 def suggest_tile_m(in_len: int, out_len: int, avg_deg: float,
-                   dtype_bytes: int = 4, vmem_budget: int = VMEM_BYTES // 2
-                   ) -> int:
-    """Largest MXU-aligned tile whose fused working set fits the VMEM budget.
+                   dtype_bytes: int = 4, vmem_budget: int = VMEM_BYTES // 2,
+                   backend: str = "pallas-tpu") -> int:
+    """Largest aligned tile whose fused working set fits the on-chip budget.
 
     Working set per block: W (in*out) + accumulator (m*in) + output (m*out)
     + gathered rows stream (avg_deg*m*in, double-buffered factor 2).
+
+    The budget and alignment are *tier-aware* (the paper's F3 point that the
+    winning kernel shape follows the memory hierarchy):
+
+      * TPU (default): fit one giant tile into half of VMEM -- a single
+        sequential grid walks the blocks, so bigger tiles only amortize the
+        VMEM-pinned W further.  MXU alignment (multiples of 8 sublanes).
+      * GPU (``backend="pallas-gpu"``): fit the tile into a *fraction* of
+        the SM's shared-memory carveout (``GPU_SMEM_PER_SM /
+        GPU_TARGET_CTAS_PER_SM``), because latency hiding comes from
+        multiple resident CTAs per SM, not tile size; W is excluded from
+        the per-CTA budget (read once, served from L2).  Warp alignment
+        (multiples of 32 rows), capped low to keep the CTA count >= SMs.
     """
+    if backend == PALLAS_GPU:
+        budget = GPU_SMEM_PER_SM // GPU_TARGET_CTAS_PER_SM
+        per_row = (in_len + out_len + 2 * avg_deg * in_len) * dtype_bytes
+        m = max(GPU_WARP_ROWS, int(budget / max(per_row, 1)))
+        m = (m // GPU_WARP_ROWS) * GPU_WARP_ROWS
+        return int(max(GPU_WARP_ROWS, min(256, m)))
     w = in_len * out_len * dtype_bytes
     per_row = (in_len + out_len + 2 * avg_deg * in_len) * dtype_bytes
     m = max(8, int((vmem_budget - w) / max(per_row, 1)))
@@ -118,10 +142,10 @@ def fused_gcn_layer(bg: BlockedGraph, x: jnp.ndarray, w: jnp.ndarray,
 
     x: (V, F_in) padded to block multiple internally.  w: (F_in, F_out).
     """
-    if backend == "pallas":
+    if is_pallas(backend):
         from repro.kernels import ops as kops
         out = kops.fused_agg_combine(bg.src, bg.dstl, bg.mask, x, w,
-                                     tile_m=bg.tile_m)
+                                     tile_m=bg.tile_m, backend=backend)
     else:
         def body(carry, blk):
             src, dstl, mask = blk

@@ -19,6 +19,17 @@ Two interchangeable aggregation strategies (both exact):
 
 Both run under shard_map on the ``data`` axis; per-shard edge lists come
 from graph.partition (edge-balanced, padded static shapes).
+
+**2-D (node x feature) partitioning** (``distributed_gcn_layer_2d``)
+generalizes the same halo patterns to a multi-host mesh: device (p, q) owns
+node block p restricted to feature columns q, the ring/all-gather halo runs
+along the *node* axis on rows that are only F/Q wide (per-device halo bytes
+/ Q), and the Combination GEMM is a feature-parallel partial matmul closed
+with one reduce-scatter (``psum_scatter``) over the *feature* axis.  The
+intended placement is node
+axis across hosts (the expensive, DCN-crossing halo shrinks by Q) and
+feature axis across the fast intra-host links (the reduce-scatter stays
+local).
 """
 
 from __future__ import annotations
@@ -32,7 +43,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.graph.partition import PartitionedGraph
+from repro.graph.partition import Partition2D, PartitionedGraph
 
 
 def pad_features(x: jnp.ndarray, block: int, num_shards: int) -> jnp.ndarray:
@@ -60,6 +71,45 @@ def _local_agg(x_full, src, dst_local, mask, block):
     return jax.ops.segment_sum(rows, dst_local, num_segments=block)
 
 
+def _allgather_local(x_loc, srcl, dstl, mskl, block, nsh, axis):
+    """Per-device all-gather halo body (inside shard_map, over ``axis``)."""
+    del nsh
+    x_full = jax.lax.all_gather(x_loc, axis, tiled=True)
+    return _local_agg(x_full, srcl, dstl, mskl, block)
+
+
+def _ring_local(x_loc, srcl, dstl, mskl, block, nsh, axis):
+    """Per-device ring halo body: nsh hops of collective_permute over
+    ``axis``, reducing the currently-held block's contributions each hop.
+
+    Device p holds block b_k = (p - k) mod P at hop k; the permute of hop
+    k+1 can overlap the reduce of hop k on real hardware (async start).
+    Shared by the 1-D path (axis = the single data axis) and the 2-D path
+    (axis = the node axis of the mesh; feature columns ride along).
+    """
+    p = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % nsh) for i in range(nsh)]  # ring
+
+    def hop(carry, k):
+        buf, acc = carry
+        # ring sends i -> i+1, so after k hops we hold block (p - k)
+        owner = jnp.mod(p - k, nsh)               # whose block we hold
+        sel = (srcl // block) == owner
+        local_src = srcl - owner * block
+        rows = jnp.take(buf, jnp.clip(local_src, 0, block - 1), axis=0)
+        rows = rows * (mskl * sel)[:, None]
+        acc = acc + jax.ops.segment_sum(rows, dstl, num_segments=block)
+        buf = jax.lax.ppermute(buf, axis, perm)   # pass block onward
+        return (buf, acc), None
+
+    acc0 = jnp.zeros((block, x_loc.shape[-1]), x_loc.dtype)
+    (_, acc), _ = jax.lax.scan(hop, (x_loc, acc0), jnp.arange(nsh))
+    return acc
+
+
+_STRATEGIES = {"ring": _ring_local, "allgather": _allgather_local}
+
+
 def aggregate_allgather(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
                         axis: str = "data") -> jnp.ndarray:
     """x: (P*block, F) sharded over `axis` -> aggregated (P*block, F)."""
@@ -67,8 +117,8 @@ def aggregate_allgather(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
     block = pg.block_size
 
     def fn(x_local, src, dst_local, mask, starts):
-        x_full = jax.lax.all_gather(x_local[0], axis, tiled=True)
-        out = _local_agg(x_full, src[0] - 0, dst_local[0], mask[0], block)
+        out = _allgather_local(x_local[0], src[0], dst_local[0], mask[0],
+                               block, pg.num_shards, axis)
         return out[None]
 
     return shard_map(
@@ -82,37 +132,16 @@ def aggregate_allgather(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
 
 def aggregate_ring(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
                    axis: str = "data") -> jnp.ndarray:
-    """Ring halo exchange: P-1 collective_permutes, partial reduce per hop.
-
-    Device p holds block b_k = (p + k) mod P at hop k and reduces the edges
-    whose source lies in b_k.  The permute of hop k+1 can overlap the
-    reduce of hop k on real hardware (async collective start).
-    """
+    """Ring halo exchange: P-1 collective_permutes, partial reduce per hop
+    (see ``_ring_local``)."""
     _require_uniform(pg)
     block = pg.block_size
     nsh = pg.num_shards
 
     def fn(x_local, src, dst_local, mask):
-        x_loc = x_local[0]
-        srcl, dstl, mskl = src[0], dst_local[0], mask[0]
-        p = jax.lax.axis_index(axis)
-        perm = [(i, (i + 1) % nsh) for i in range(nsh)]  # ring
-
-        def hop(carry, k):
-            buf, acc = carry
-            # ring sends i -> i+1, so after k hops we hold block (p - k)
-            owner = jnp.mod(p - k, nsh)               # whose block we hold
-            sel = (srcl // block) == owner
-            local_src = srcl - owner * block
-            rows = jnp.take(buf, jnp.clip(local_src, 0, block - 1), axis=0)
-            rows = rows * (mskl * sel)[:, None]
-            acc = acc + jax.ops.segment_sum(rows, dstl, num_segments=block)
-            buf = jax.lax.ppermute(buf, axis, perm)   # pass block onward
-            return (buf, acc), None
-
-        acc0 = jnp.zeros((block, x_loc.shape[-1]), x_loc.dtype)
-        (_, acc), _ = jax.lax.scan(hop, (x_loc, acc0), jnp.arange(nsh))
-        return acc[None]
+        out = _ring_local(x_local[0], src[0], dst_local[0], mask[0],
+                          block, nsh, axis)
+        return out[None]
 
     return shard_map(
         fn, mesh=mesh,
@@ -184,3 +213,116 @@ def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
     else:
         out = ((agg(pg, x, mesh, axis) + x) / deg) @ w
     return out + bias
+
+
+# ---------------------------------------------------------------------------
+# 2-D (node x feature) partitioned execution
+# ---------------------------------------------------------------------------
+
+
+def pad_features_2d(x: jnp.ndarray, p2: Partition2D) -> jnp.ndarray:
+    """Pad (V, F) features to the (P*block, Q*fblock) partition layout."""
+    fb = p2.feature_block(x.shape[1])
+    rows = p2.block_size * p2.node_shards - x.shape[0]
+    cols = fb * p2.feat_shards - x.shape[1]
+    return jnp.pad(x, ((0, rows), (0, cols)))
+
+
+def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
+                             mesh: Mesh, *, order: Optional[str] = None,
+                             strategy: str = "ring",
+                             axes=("node", "feat")):
+    """One GCN layer on a 2-D (node x feature) device mesh (exact).
+
+    Device (p, q) owns node block p's rows restricted to feature block q.
+    Per ordering:
+
+    combine_first: partial GEMM with the device's W row-block, closed by a
+    reduce-scatter over the feature axis (fast intra-host links, each device
+    receiving its own output column block), then the ring/all-gather halo along the node axis moves
+    rows only ``F_out/Q`` wide -- the per-device halo bytes of the 1-D
+    partition divided by Q *on top of* Table 4's in/out ratio saving.
+
+    aggregate_first: halo first on the raw ``F_in/Q``-wide column slice
+    (purely feature-parallel -- each feature shard's halo is independent),
+    then the same partial-GEMM + reduce-scatter.
+
+    Args mirror :func:`distributed_gcn_layer`; ``x`` must be in the padded
+    ``(P*block, Q*fblock_in)`` layout (see :func:`pad_features_2d`) and the
+    result is ``(P*block, Q*fblock_out)`` -- pad columns are exact zeros.
+    ``axes`` names the (node, feature) mesh axes; ``order=None`` asks the
+    scheduler's cost model.  Model-level code reaches this through a
+    ``GraphExecutionPlan`` built with a 2-D ``mesh=`` (core/plan.py).
+    """
+    pg = p2.nodes
+    _require_uniform(pg)
+    node_ax, feat_ax = axes
+    nsh, q_sh = pg.num_shards, p2.feat_shards
+    block = pg.block_size
+    f_in, f_out = int(w.shape[0]), int(w.shape[1])
+    fb_in, fb_out = p2.feature_block(f_in), p2.feature_block(f_out)
+    if order is None:
+        from repro.core.scheduler import choose_ordering
+        order = choose_ordering(_local_graph_view(pg), f_in, f_out,
+                                agg_op="mean", n_mlp_layers=1)
+    local = _STRATEGIES[strategy]
+
+    # zero-pad W/bias onto the (Q*fb_in, Q*fb_out) grid: pad x columns hit
+    # zero W rows, pad W columns produce zero outputs -- exactness is free
+    wp = jnp.zeros((q_sh * fb_in, q_sh * fb_out), w.dtype)
+    wp = wp.at[:f_in, :f_out].set(w)
+    bp = jnp.zeros((q_sh * fb_out,), w.dtype).at[:f_out].set(bias)
+
+    deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
+    deg = pad_features(deg, block, nsh)
+    deg = jnp.where(deg == 0, 1.0, deg)
+
+    expect = (nsh * block, q_sh * fb_in)
+    if x.shape != expect:
+        raise ValueError(f"x must be in the padded 2-D layout {expect}, "
+                         f"got {tuple(x.shape)} (see pad_features_2d)")
+
+    def fn(x_blk, src, dstl, msk, deg_blk, wp_, bp_):
+        x_loc = x_blk.reshape(block, fb_in)
+        srcl, dl, ml = src[0], dstl[0], msk[0]
+        dg = deg_blk[0]
+        qi = jax.lax.axis_index(feat_ax)
+
+        def w_block(fb):
+            return jax.lax.dynamic_slice(wp_, (qi * fb, 0),
+                                         (fb, q_sh * fb_out))
+
+        def combine(h):
+            # partial GEMM closed with a reduce-scatter over the feature
+            # axis: each device receives only its own (block, fb_out)
+            # column slice -- 1/Q the wire bytes of psum + local slice
+            return jax.lax.psum_scatter(h @ w_block(fb_in), feat_ax,
+                                        scatter_dimension=1, tiled=True)
+
+        if order == "combine_first":
+            hq = combine(x_loc)                          # (block, fb_out)
+            out = (local(hq, srcl, dl, ml, block, nsh, node_ax) + hq) / dg
+        else:
+            agg = local(x_loc, srcl, dl, ml, block, nsh, node_ax)
+            out = combine((agg + x_loc) / dg)
+        out = out + jax.lax.dynamic_slice(bp_, (qi * fb_out,), (fb_out,))
+        return out.reshape(1, block, 1, fb_out)
+
+    out = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(node_ax, None, feat_ax, None), P(node_ax, None),
+                  P(node_ax, None), P(node_ax, None), P(node_ax, None, None),
+                  P(None, None), P(None)),
+        out_specs=P(node_ax, None, feat_ax, None), check_rep=False,
+    )(x.reshape(nsh, block, q_sh, fb_in), pg.src, pg.dst_local, pg.mask,
+      deg.reshape(nsh, block, 1), wp, bp)
+    return out.reshape(nsh * block, q_sh * fb_out)
+
+
+def halo_bytes_2d(p2: Partition2D, feature_len: int,
+                  dtype_bytes: int = 4) -> dict:
+    """Analytic per-device halo cost of the 2-D partition: the 1-D numbers
+    evaluated at the F/Q column slice each device actually exchanges."""
+    out = halo_bytes(p2.nodes, p2.feature_block(feature_len), dtype_bytes)
+    out["feat_shards"] = p2.feat_shards
+    return out

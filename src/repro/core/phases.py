@@ -26,6 +26,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import is_pallas, resolve_backend
 from repro.graph.structure import Graph
 
 AGGREGATORS = ("sum", "mean", "max")
@@ -51,7 +52,8 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
       edge_weight: optional (E,) per-edge scalar (e.g. sym-norm GCN weights).
       edge_mask: optional (E,) 1/0 mask for padded edge lists.
       include_self: add the vertex's own row to the reduction.
-      backend: "xla" (segment_sum) or "pallas" (seg_agg kernel); None = xla.
+      backend: "xla" (segment_sum) or a Pallas tier ("pallas-tpu" |
+        "pallas-gpu"; legacy "pallas" = platform's native tier); None = xla.
         Normally resolved by the execution planner (core/plan.py).
     """
     assert op in AGGREGATORS, op
@@ -74,9 +76,10 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
     if w is not None:
         gathered = gathered * w[:, None].astype(gathered.dtype)
 
-    if backend == "pallas":
+    if backend is not None and is_pallas(backend):
         from repro.kernels import ops as kops
-        summed = kops.seg_agg(gathered, g.dst, v)
+        summed = kops.seg_agg(gathered, g.dst, v,
+                              backend=resolve_backend(backend))
     else:
         summed = jax.ops.segment_sum(gathered, g.dst, num_segments=v)
 

@@ -10,21 +10,26 @@ ONCE per (graph, model, device) and then replayed on every forward/backward:
     (Reddit 602->128: 4.7x fewer aggregation bytes), and honors semantic
     pins (GIN's interior ReLU forces aggregate-first).
   * **Collision-free aggregation backend (paper F3).**  XLA
-    ``segment_sum`` vs the Pallas one-hot-MXU ``seg_agg`` kernel, chosen
-    by platform ("auto" = Pallas on TPU, XLA elsewhere); interpret mode
-    is auto-detected off-TPU (``backend.default_interpret``) instead of
-    the old hardcoded ``interpret=True``.
+    ``segment_sum`` vs a specialized Pallas kernel tier, chosen by
+    platform ("auto" = pallas-tpu on TPU, pallas-gpu on GPU, XLA on CPU --
+    ``backend.resolve_backend``); interpret mode is auto-detected per tier
+    (``backend.interpret_for``) instead of the old hardcoded
+    ``interpret=True``, so every tier validates on a CPU container.
   * **Inter-phase dataflow fusion (paper F5, §5.1-3).**  The fused
     aggregate->combine tile executor needs a ``BlockedGraph`` regrouping
     of the edge list and a VMEM-budgeted ``tile_m``; the plan builds both
     once (cached per graph -- see ``_blocked_for``) instead of per call.
     GIN layers fuse aggregation with the *first* MLP matmul (previously
     the fused path was silently ignored for GIN).
-  * **1-D shard partition (DESIGN.md §8.5).**  With a mesh, the plan owns
+  * **Shard partition (DESIGN.md §8.5).**  With a 1-D mesh, the plan owns
     the ``partition_1d`` vertex partition and routes layers through the
     ring / all-gather halo aggregation, with ordering still chosen by the
     same cost model (combine-first shrinks the *collective* term by the
-    same in/out ratio).
+    same in/out ratio).  With a 2-D mesh (two named axes, e.g.
+    ``jax.make_mesh((4, 2), ("node", "feat"))``), the plan builds the
+    ``partition_2d`` node x feature partition instead and routes layers
+    through ``distributed_gcn_layer_2d`` -- per-device halo bytes shrink a
+    further Q-fold (the multi-host tier; see docs/planner.md).
 
 Public surface:
 
@@ -49,7 +54,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import phases
-from repro.core.backend import (AUTO, XLA, resolve_backend,
+from repro.core.backend import (AUTO, PALLAS_GPU, PALLAS_TPU, XLA,
+                                interpret_for, resolve_backend,
                                 resolve_interpret)
 from repro.core.dataflow import (BlockedGraph, block_graph, fused_gcn_layer,
                                  suggest_tile_m)
@@ -72,7 +78,8 @@ class LayerPlan:
     agg_op: str               # "sum" | "mean" | "max"
     include_self: bool
     order: str                # COMBINE_FIRST | AGGREGATE_FIRST (resolved)
-    backend: str              # "xla" | "pallas" (resolved, never "auto")
+    backend: str              # "xla" | "pallas-tpu" | "pallas-gpu"
+                              # (resolved, never "auto"/"pallas")
     fused: bool               # inter-phase dataflow fusion (F5)
     tile_m: int               # fused tile rows (0 when unfused)
     blocked: Optional[BlockedGraph]  # shared BlockedGraph (None when unfused)
@@ -95,14 +102,16 @@ class GraphExecutionPlan:
 
     def __init__(self, g: Graph, layers: Sequence[LayerPlan], *,
                  interpret: bool, mesh=None, partition=None,
-                 strategy: str = "ring", axis: str = "data"):
+                 strategy: str = "ring", axis: str = "data",
+                 axes: Tuple[str, str] = ("node", "feat")):
         self.g = g
         self.layers: Tuple[LayerPlan, ...] = tuple(layers)
         self.interpret = interpret
         self.mesh = mesh
-        self.partition = partition
+        self.partition = partition   # None | PartitionedGraph | Partition2D
         self.strategy = strategy
-        self.axis = axis
+        self.axis = axis             # 1-D partition: the single mesh axis
+        self.axes = axes             # 2-D partition: (node, feature) axes
 
     # -- properties ---------------------------------------------------------
 
@@ -113,6 +122,14 @@ class GraphExecutionPlan:
     @property
     def distributed(self) -> bool:
         return self.partition is not None
+
+    @property
+    def partition_kind(self) -> str:
+        """"none" | "1d" | "2d" -- which shard partition the plan owns."""
+        from repro.graph.partition import Partition2D
+        if self.partition is None:
+            return "none"
+        return "2d" if isinstance(self.partition, Partition2D) else "1d"
 
     # -- parameter helpers --------------------------------------------------
 
@@ -159,17 +176,30 @@ class GraphExecutionPlan:
         return _execute_layer(self.g, lp, x, weights, bias_post=bias_post)
 
     def run_model(self, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
-        """Full forward: planned layers with ReLU between them."""
+        """Full forward: planned layers with ReLU between them.
+
+        Distributed plans accept ``x`` in the natural (V, F) layout and pad
+        it into the partition layout (rows for 1-D; rows and feature
+        columns for 2-D -- pad columns stay exact zeros through every
+        layer), trimming the padding off the final output.
+        """
         v = self.g.num_vertices
+        two_d = self.partition_kind == "2d"
         if self.distributed and x.shape[0] == v:
-            from repro.core.distributed import pad_features
-            x = pad_features(x, self.partition.block_size,
-                             self.partition.num_shards)
+            if two_d:
+                from repro.core.distributed import pad_features_2d
+                x = pad_features_2d(x, self.partition)
+            else:
+                from repro.core.distributed import pad_features
+                x = pad_features(x, self.partition.block_size,
+                                 self.partition.num_shards)
         h = x
         for i in range(self.num_layers):
             h = self.run_layer(params[f"conv{i}"], h, layer=i)
             if i < self.num_layers - 1:
                 h = jax.nn.relu(h)
+        if two_d:
+            return h[:v, :self.layers[-1].dout]
         return h[:v] if self.distributed else h
 
     def run_phases(self, x: jnp.ndarray, weights, *, layer: int = 0,
@@ -186,11 +216,16 @@ class GraphExecutionPlan:
                               bias_post=bias_post)
 
     def _run_distributed(self, lp: LayerPlan, x, weights, bias_post):
-        from repro.core.distributed import distributed_gcn_layer
+        from repro.core.distributed import (distributed_gcn_layer,
+                                            distributed_gcn_layer_2d)
         (w, b_inline), = weights  # build_plan guarantees single-matmul layers
         bias = bias_post if bias_post is not None else b_inline
         if bias is None:
             bias = jnp.zeros((w.shape[1],), x.dtype)
+        if self.partition_kind == "2d":
+            return distributed_gcn_layer_2d(
+                self.partition, x, w, bias, self.g.in_deg, self.mesh,
+                order=lp.order, strategy=self.strategy, axes=self.axes)
         return distributed_gcn_layer(
             self.partition, x, w, bias, self.g.in_deg, self.mesh,
             order=lp.order, strategy=self.strategy, axis=self.axis)
@@ -209,6 +244,7 @@ class GraphExecutionPlan:
                 "fused": lp.fused, "tile_m": lp.tile_m,
                 "interpret": self.interpret,
                 "distributed": self.distributed,
+                "partition": self.partition_kind,
                 "agg_bytes": oc.agg_bytes, "agg_flops": oc.agg_flops,
             })
         return out
@@ -358,14 +394,36 @@ def _plan_layer(g: Graph, index: int, kind: str, dims: Tuple[int, ...], *,
     tile_m, blocked = 0, None
     if fused:
         avg_deg = g.num_edges / max(1, g.num_vertices)
-        tile_m = suggest_tile_m(dims[0], dims[1], avg_deg)
-        # a tile larger than the graph only pads; clamp to |V| rounded up
-        tile_m = max(8, min(tile_m, -(-g.num_vertices // 8) * 8))
+        tile_m = suggest_tile_m(dims[0], dims[1], avg_deg, backend=backend)
+        # a tile larger than the graph only pads; clamp to |V| rounded up,
+        # keeping the tier's alignment (warp rows on GPU, sublanes on TPU)
+        align = 32 if backend == PALLAS_GPU else 8
+        tile_m = max(align, min(tile_m, -(-g.num_vertices // align) * align))
         blocked = _blocked_for(g, tile_m)
     return LayerPlan(index=index, kind=kind, dims=tuple(int(d) for d in dims),
                      agg_op=agg_op, include_self=include_self, order=order,
                      backend=backend, fused=fused, tile_m=tile_m,
                      blocked=blocked)
+
+
+def _plan_interpret(interpret, backend: str) -> bool:
+    """Plan-level interpret flag: tier-aware for Pallas backends (compiled
+    only on the tier's native platform -- ``backend.interpret_for``),
+    platform default otherwise, explicit override always wins."""
+    if interpret is not None:
+        return bool(interpret)
+    if backend in (PALLAS_TPU, PALLAS_GPU):
+        return interpret_for(backend)
+    return resolve_interpret(None)
+
+
+def _mesh_key(mesh):
+    """Cache key for a mesh: identity PLUS shape/axis names, so an address
+    reused by a differently-shaped mesh can never alias a cached plan."""
+    if mesh is None:
+        return None
+    return (id(mesh), tuple(getattr(mesh, "axis_names", ())),
+            tuple(mesh.devices.shape))
 
 
 def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
@@ -376,29 +434,73 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                ) -> GraphExecutionPlan:
     """Plan a full model (``GCNModelConfig``) over one graph.
 
-    Overrides: ``backend`` ("auto" resolves per platform), ``fused`` /
-    ``ordering`` (default from cfg), ``mesh`` + ``num_shards`` for the 1-D
-    shard partition.  Plans are cached: calling again with the same graph
-    and arguments returns the same plan object (and any rebuilt plan on the
+    Overrides: ``backend`` ("auto" resolves per platform -- see
+    ``core.backend.resolve_backend``), ``fused`` / ``ordering`` (default
+    from cfg), ``mesh`` (+ optionally ``num_shards``) for the shard
+    partition.  Plans are cached: calling again with the same graph and
+    arguments returns the same plan object (and any rebuilt plan on the
     same graph reuses the cached BlockedGraph).
+
+    The ``mesh=`` / ``num_shards=`` contract:
+
+      * ``mesh=None`` (default): a local, single-device plan;
+        ``num_shards`` / ``strategy`` / ``axis`` are ignored.
+      * 1-D ``mesh`` (one named axis): the 1-D vertex partition.
+        ``num_shards`` defaults to the mesh size when 0; ``axis`` names the
+        mesh axis to shard over (default "data").
+      * 2-D ``mesh`` (two named axes, (node, feature) in order): the 2-D
+        node x feature partition (``graph.partition.partition_2d``); shard
+        counts come from the mesh shape, ``num_shards``/``axis`` are
+        ignored.  ``strategy`` ("ring" | "allgather") picks the node-axis
+        halo pattern in both distributed forms.
+
+    Worked example (local planning, CPU container)::
+
+        >>> spec = reduced_graph(CORA, 220, 24)
+        >>> g, x = make_synthetic_graph(spec), make_features(spec)
+        >>> plan = build_plan(g, PAPER_MODELS["gcn"], spec.feature_len,
+        ...                   spec.num_classes)         # backend="auto"
+        >>> plan.describe()[0]["backend"]               # xla on CPU
+        'xla'
+        >>> out = plan.run_model(plan.init(jax.random.PRNGKey(0)), x)
+
+    Worked example (2-D multi-host partition, 8 devices)::
+
+        >>> mesh = jax.make_mesh((4, 2), ("node", "feat"))
+        >>> plan = build_plan(g, cfg, spec.feature_len, spec.num_classes,
+        ...                   mesh=mesh)                # 4 node x 2 feat
+        >>> plan.partition_kind
+        '2d'
+        >>> with mesh:
+        ...     out = plan.run_model(params, x)         # (V, num_classes)
     """
     agg = cfg.aggregator
     use_fused = cfg.fused if fused is None else bool(fused)
     req_order = cfg.ordering if ordering is None else ordering
     spec_key = (cfg.name, cfg.conv, agg, tuple(cfg.hidden_dims),
                 cfg.num_layers, int(in_dim), int(num_classes), backend,
-                use_fused, req_order, id(mesh), num_shards, strategy, axis,
-                interpret)
+                use_fused, req_order, _mesh_key(mesh), num_shards, strategy,
+                axis, interpret)
 
     def builder():
-        if mesh is not None and num_shards > 0:
+        axes = ("node", "feat")
+        if mesh is not None:
             if cfg.conv == "gin":
                 raise ValueError(
                     "distributed plans support single-matmul convs "
                     "(gcn/sage); GIN's interior nonlinearity needs the "
                     "local path")
-            from repro.graph.partition import partition_1d
-            partition = partition_1d(g, num_shards, edge_balanced=False)
+            axis_names = tuple(getattr(mesh, "axis_names", ()))
+            if len(axis_names) == 2:                       # 2-D: node x feat
+                from repro.graph.partition import partition_2d
+                axes = axis_names
+                p_nodes = int(mesh.shape[axis_names[0]])
+                q_feats = int(mesh.shape[axis_names[1]])
+                partition = partition_2d(g, p_nodes, q_feats)
+            else:                                          # 1-D vertex shard
+                from repro.graph.partition import partition_1d
+                shards = num_shards or int(mesh.devices.size)
+                partition = partition_1d(g, shards, edge_balanced=False)
             lay_backend, lay_fused = XLA, False  # shard_map path is XLA
         else:
             partition = None
@@ -416,15 +518,31 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                 backend=lay_backend, fused=lay_fused))
             d = dout
         return GraphExecutionPlan(
-            g, layers, interpret=resolve_interpret(interpret), mesh=mesh,
-            partition=partition, strategy=strategy, axis=axis)
+            g, layers, interpret=_plan_interpret(interpret,
+                                                 layers[0].backend),
+            mesh=mesh, partition=partition, strategy=strategy, axis=axis,
+            axes=axes)
 
     return _cached_plan(g, spec_key, builder)
 
 
 def plan_for_conv(conv, g: Graph) -> GraphExecutionPlan:
     """Single-layer plan for a standalone conv (GCNConv / SAGEConv / GINConv
-    ``apply`` without a model-level plan)."""
+    ``apply`` without a model-level plan).
+
+    The conv's own ``ordering`` / ``backend`` / ``fused`` attributes are the
+    requested decisions; this resolves them once per (conv spec, graph) and
+    caches the plan, so repeated ``conv.apply(params, g, x)`` calls pay no
+    planning cost.
+
+    Worked example::
+
+        >>> conv = GCNConv(din=24, dout=8)      # backend="auto"
+        >>> plan = plan_for_conv(conv, g)
+        >>> plan.num_layers, plan.layers[0].kind
+        (1, 'gcn')
+        >>> out = plan.run_layer(conv_params, x)  # == conv.apply(...)
+    """
     kind = type(conv).__name__.replace("Conv", "").lower()
     dims = (conv.din, conv.hidden, conv.dout) if kind == "gin" \
         else (conv.din, conv.dout)
@@ -436,7 +554,8 @@ def plan_for_conv(conv, g: Graph) -> GraphExecutionPlan:
     def builder():
         lp = _plan_layer(g, 0, kind, dims, agg_op=agg_op,
                          ordering=conv.ordering, backend=backend, fused=fused)
-        return GraphExecutionPlan(g, [lp], interpret=resolve_interpret(None))
+        return GraphExecutionPlan(g, [lp],
+                                  interpret=_plan_interpret(None, lp.backend))
 
     return _cached_plan(g, spec_key, builder)
 
@@ -444,7 +563,21 @@ def plan_for_conv(conv, g: Graph) -> GraphExecutionPlan:
 def plan_for_phases(g: Graph, weights, *, order: Optional[str] = None,
                     agg_op: str = "mean", backend: str = AUTO,
                     fused: bool = False) -> GraphExecutionPlan:
-    """Single-layer plan for a raw weight list (``phase_ordered_layer``)."""
+    """Single-layer plan for a raw weight list (``phase_ordered_layer``).
+
+    ``weights`` is a list of (W, b) tuples; the layer dims are inferred
+    from the weight shapes.  ``order=None`` lets the scheduler's cost model
+    decide (paper F2): it picks combine-first whenever the projection
+    shrinks the feature length the sparse phase must move.
+
+    Worked example::
+
+        >>> w = jnp.zeros((24, 8))              # 24 -> 8 shrinks
+        >>> plan = plan_for_phases(g, [(w, None)], agg_op="mean")
+        >>> plan.layers[0].order
+        'combine_first'
+        >>> out = plan.run_phases(x, [(w, None)], activation="none")
+    """
     dims = tuple([int(w.shape[0]) for (w, _) in weights] +
                  [int(weights[-1][0].shape[1])])
     spec_key = ("phase", dims, order, agg_op, backend, fused)
@@ -452,6 +585,7 @@ def plan_for_phases(g: Graph, weights, *, order: Optional[str] = None,
     def builder():
         lp = _plan_layer(g, 0, "phase", dims, agg_op=agg_op,
                          ordering=order or AUTO, backend=backend, fused=fused)
-        return GraphExecutionPlan(g, [lp], interpret=resolve_interpret(None))
+        return GraphExecutionPlan(g, [lp],
+                                  interpret=_plan_interpret(None, lp.backend))
 
     return _cached_plan(g, spec_key, builder)

@@ -1,10 +1,20 @@
-"""1-D destination-block graph partitioning for distributed aggregation.
+"""1-D and 2-D graph partitioning for distributed aggregation.
 
-Each device owns a contiguous block of destination vertices (all edges whose
-dst falls in the block).  Blocks are *edge-balanced*: boundaries are chosen so
-every shard carries ~|E|/P edges, not ~|V|/P vertices -- heavy-tailed degree
-distributions otherwise leave one shard with most of the work (the cluster
-analogue of the paper's load-imbalance remarks).
+**1-D (node)**: each device owns a contiguous block of destination vertices
+(all edges whose dst falls in the block).  Blocks are *edge-balanced*:
+boundaries are chosen so every shard carries ~|E|/P edges, not ~|V|/P
+vertices -- heavy-tailed degree distributions otherwise leave one shard with
+most of the work (the cluster analogue of the paper's load-imbalance
+remarks).
+
+**2-D (node x feature)**: a P-way node partition crossed with a Q-way split
+of the feature axis (``partition_2d``).  Every (p, q) device owns node block
+p's rows restricted to feature block q, so the halo exchange along the node
+axis moves rows that are only ``F/Q`` wide -- per-device halo bytes shrink
+by Q relative to the 1-D partition at the same world size, which is how the
+paper's Table 4 collective term keeps shrinking once a single node axis
+saturates (multi-host meshes: node axis across hosts, feature axis across
+the devices within each host).
 
 Shards are padded to identical static shapes so the whole structure stacks
 into (P, ...) arrays consumable by shard_map.
@@ -45,6 +55,13 @@ class PartitionedGraph(NamedTuple):
 
 def partition_1d(g: Graph, num_shards: int, edge_balanced: bool = True
                  ) -> PartitionedGraph:
+    """1-D destination-vertex partition of ``g`` into ``num_shards`` blocks.
+
+    ``edge_balanced=True`` picks block boundaries equalizing edge counts
+    (feeds the analytic load model); ``edge_balanced=False`` gives the
+    uniform layout the shard_map execution paths require
+    (core.distributed._require_uniform).
+    """
     src = np.asarray(g.src)
     dst = np.asarray(g.dst)  # already sorted by dst
     v = g.num_vertices
@@ -93,3 +110,50 @@ def edge_balance(pg: PartitionedGraph) -> float:
     """max/mean edge load across shards (1.0 = perfect)."""
     loads = np.asarray(pg.mask).sum(axis=1)
     return float(loads.max() / max(loads.mean(), 1e-9))
+
+
+class Partition2D(NamedTuple):
+    """2-D (node x feature) partition: P node shards x Q feature shards.
+
+    The graph structure is only partitioned along the node axis (``nodes``,
+    a uniform :class:`PartitionedGraph`); the feature axis is a dense
+    columnwise split whose block size depends on the per-layer feature
+    length, so it is computed at execution time via ``feature_block``.
+    """
+
+    nodes: PartitionedGraph
+    feat_shards: int
+
+    @property
+    def node_shards(self) -> int:
+        return self.nodes.num_shards
+
+    @property
+    def block_size(self) -> int:
+        """Vertex rows per node shard (padded) -- mirrors PartitionedGraph."""
+        return self.nodes.block_size
+
+    @property
+    def num_vertices(self) -> int:
+        return self.nodes.num_vertices
+
+    def feature_block(self, feature_len: int) -> int:
+        """Columns per feature shard for one layer's feature length
+        (ceil-divided; callers zero-pad to ``feat_shards * feature_block``)."""
+        return -(-int(feature_len) // self.feat_shards)
+
+
+def partition_2d(g: Graph, node_shards: int, feat_shards: int
+                 ) -> Partition2D:
+    """Partition ``g`` for a (node_shards x feat_shards) device mesh.
+
+    The node axis reuses the *uniform* 1-D partition (the shard_map layout
+    requirement -- see core.distributed._require_uniform); the feature axis
+    needs no host-side structure beyond its cardinality.
+    """
+    if node_shards < 1 or feat_shards < 1:
+        raise ValueError(f"need positive shard counts, got "
+                         f"{node_shards}x{feat_shards}")
+    return Partition2D(nodes=partition_1d(g, node_shards,
+                                          edge_balanced=False),
+                       feat_shards=feat_shards)

@@ -1,0 +1,166 @@
+"""Pallas GPU kernels: row-blocked segmented aggregation (+ fused combine).
+
+The paper characterizes GCN aggregation on a V100: the scatter kernel's
+atomicAdd serializes whenever two warps hit the same destination row, and
+the aggregated matrix makes a full HBM round-trip before Combination.
+Accel-GCN's answer (arXiv 2308.11825) is *row-partitioned* aggregation:
+assign each destination row block to one thread block outright, stream its
+edges with coalesced loads, and keep the accumulator on-chip.
+
+These kernels are that design expressed in Pallas, and they differ from the
+TPU tier (kernels/seg_agg.py, kernels/fused_agg_combine.py) exactly where
+the memory hierarchies differ:
+
+  * **No sequential grid accumulation.**  The TPU kernels run a
+    ``(dest_blocks, edge_chunks)`` grid whose second dimension is
+    "arbitrary" (sequential) and accumulate into a VMEM scratch buffer
+    across grid steps.  GPU grid steps are *independent thread blocks* --
+    accumulating across them needs the very atomics the paper indicts.  So
+    here the grid is ``(dest_blocks,)`` and each program loops over its
+    edge chunks with ``fori_loop``, carrying the accumulator in registers:
+    one CTA owns one output block, collisions cannot exist.
+  * **Coalesced edge-block loads.**  Edges arrive pre-grouped by
+    destination block (the same ``BlockedGraph`` layout the TPU tier uses),
+    so every chunk load is a dense ``(tile_e, F)`` slab -- contiguous along
+    the feature (last) axis, which is the coalescing axis for a warp.
+  * **Occupancy-aware tiling.**  ``tile_m`` defaults come from
+    ``core.dataflow.suggest_tile_m(..., backend="pallas-gpu")``, which fits
+    the working set into a *fraction* of the SM's shared-memory carveout
+    (``GPU_SMEM_PER_SM / GPU_TARGET_CTAS_PER_SM``) instead of the TPU's
+    half-VMEM budget: a GPU hides HBM latency with multiple resident CTAs,
+    not one giant tile.
+  * **Fused epilogue.**  The fused variant multiplies the register
+    accumulator by the weight tile before it ever leaves the SM -- the
+    paper's F5 dataflow fusion -- with W read once per CTA (it lives in L2
+    across the grid, the GPU analogue of the TPU kernels' VMEM-pinned W).
+
+Off-GPU the kernels run in Pallas interpret mode
+(``core.backend.interpret_for("pallas-gpu")``), so a CPU-only container
+still validates their numerics; on a real GPU they lower through
+Pallas/Triton.  Only generic ``pl`` APIs are used -- no ``pltpu`` scratch
+or TPU compiler params -- precisely so the same body serves both.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.backend import PALLAS_GPU, resolve_interpret
+
+
+def _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m: int, tile_e: int,
+                  f: int) -> jnp.ndarray:
+    """Register-resident reduction of one destination block's edge chunks."""
+    emax = seg_ref.shape[-1]
+    nchunks = emax // tile_e
+
+    def body(c, acc):
+        sl = pl.ds(c * tile_e, tile_e)
+        seg = seg_ref[0, sl]            # (tile_e,) local dest row ids
+        msk = mask_ref[0, sl]           # (tile_e,)
+        rows = rows_ref[0, sl, :]       # (tile_e, F) coalesced slab
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_m, tile_e), 0)
+        onehot = jnp.where(row_ids == seg[None, :], msk[None, :], 0.0)
+        return acc + jax.lax.dot(
+            onehot.astype(jnp.float32), rows.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    acc0 = jnp.zeros((tile_m, f), jnp.float32)
+    return jax.lax.fori_loop(0, nchunks, body, acc0)
+
+
+def _seg_agg_gpu_kernel(seg_ref, mask_ref, rows_ref, out_ref, *,
+                        tile_m: int, tile_e: int):
+    f = rows_ref.shape[-1]
+    acc = _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m, tile_e, f)
+    out_ref[0] = acc.astype(out_ref.dtype)
+
+
+def _fused_gpu_kernel(seg_ref, mask_ref, rows_ref, w_ref, out_ref, *,
+                      tile_m: int, tile_e: int):
+    f = rows_ref.shape[-1]
+    acc = _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m, tile_e, f)
+    # F5 fusion point: the aggregate never leaves the SM before the GEMM.
+    out_ref[0] = jax.lax.dot(
+        acc, w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret"))
+def seg_agg_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
+                        mask: jnp.ndarray, *, tile_m: int, tile_e: int = 128,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Row-blocked segmented sum, one thread block per destination block.
+
+    Args:
+      rows:      (nblocks, emax, F) pre-gathered edge rows grouped by
+                 destination block (core.dataflow.block_graph layout).
+      seg_local: (nblocks, emax) int32 destination row id LOCAL to the block.
+      mask:      (nblocks, emax) 1/0 edge validity.
+      tile_m:    output rows per block (static; warp-multiple).
+      tile_e:    edge chunk per ``fori_loop`` step (static; emax must be a
+                 multiple -- smaller than the TPU default because the chunk
+                 slab shares the SM with ``GPU_TARGET_CTAS_PER_SM`` peers).
+      interpret: None = auto (compiled on GPU, interpreted elsewhere --
+                 ``core.backend.interpret_for("pallas-gpu")``).
+
+    Returns (nblocks * tile_m, F).
+    """
+    interpret = resolve_interpret(interpret, backend=PALLAS_GPU)
+    nblocks, emax, f = rows.shape
+    assert emax % tile_e == 0, (emax, tile_e)
+
+    out = pl.pallas_call(
+        functools.partial(_seg_agg_gpu_kernel, tile_m=tile_m, tile_e=tile_e),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, emax), lambda b: (b, 0)),       # seg ids
+            pl.BlockSpec((1, emax), lambda b: (b, 0)),       # mask
+            pl.BlockSpec((1, emax, f), lambda b: (b, 0, 0)),  # rows
+        ],
+        out_specs=pl.BlockSpec((1, tile_m, f), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, tile_m, f), rows.dtype),
+        interpret=interpret,
+        name="seg_agg_gpu",
+    )(seg_local.reshape(nblocks, emax), mask.reshape(nblocks, emax), rows)
+    return out.reshape(nblocks * tile_m, f)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret"))
+def fused_agg_combine_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
+                                  mask: jnp.ndarray, w: jnp.ndarray, *,
+                                  tile_m: int, tile_e: int = 128,
+                                  interpret: Optional[bool] = None
+                                  ) -> jnp.ndarray:
+    """out[block b] = (sum_seg rows[b]) @ w, fused inside one thread block.
+
+    Same contract as the TPU tier's ``fused_agg_combine_blocked`` but with
+    the register accumulator + in-kernel edge loop described in the module
+    docstring.  Returns (nblocks * tile_m, F_out) in w.dtype.
+    """
+    interpret = resolve_interpret(interpret, backend=PALLAS_GPU)
+    nblocks, emax, f_in = rows.shape
+    f_out = w.shape[1]
+    assert w.shape[0] == f_in, (w.shape, f_in)
+    assert emax % tile_e == 0, (emax, tile_e)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_gpu_kernel, tile_m=tile_m, tile_e=tile_e),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, emax), lambda b: (b, 0)),
+            pl.BlockSpec((1, emax), lambda b: (b, 0)),
+            pl.BlockSpec((1, emax, f_in), lambda b: (b, 0, 0)),
+            pl.BlockSpec((f_in, f_out), lambda b: (0, 0)),  # W: one L2 read
+        ],
+        out_specs=pl.BlockSpec((1, tile_m, f_out), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, tile_m, f_out), w.dtype),
+        interpret=interpret,
+        name="fused_agg_combine_gpu",
+    )(seg_local.reshape(nblocks, emax), mask.reshape(nblocks, emax), rows, w)
+    return out.reshape(nblocks * tile_m, f_out)

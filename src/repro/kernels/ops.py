@@ -15,11 +15,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import PALLAS_GPU, PALLAS_TPU
 from repro.core.backend import default_interpret as _interpret
+from repro.core.backend import interpret_for, resolve_backend
 from repro.core.characterize import VMEM_BYTES
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_agg_combine import fused_agg_combine_blocked
+from repro.kernels.gpu_agg import (fused_agg_combine_gpu_blocked,
+                                   seg_agg_gpu_blocked)
 from repro.kernels.seg_agg import seg_agg_blocked
 
 
@@ -32,15 +36,28 @@ def _round_up(x: int, m: int) -> int:
 # ---------------------------------------------------------------------------
 
 
+def _seg_agg_entry(backend: str):
+    """Pick the tier's blocked kernel (TPU sequential-grid vs GPU row-owned).
+    ``backend`` must already be resolved (the callers below resolve the
+    legacy "pallas" alias so entry and interpret mode can never disagree)."""
+    return seg_agg_gpu_blocked if backend == PALLAS_GPU else seg_agg_blocked
+
+
 def seg_agg(rows: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
-            tile_m: int = 128, tile_e: int = 512) -> jnp.ndarray:
+            tile_m: int = 128, tile_e: int = 512,
+            backend: str = PALLAS_TPU) -> jnp.ndarray:
     """Drop-in segment_sum(rows, seg_ids) using the Pallas kernel.
 
     Requires ``seg_ids`` sorted (destination-sorted edges -- the framework
     invariant).  Host-side regrouping is cached per (ids, shape) is NOT done
     here: for repeated use on a fixed graph prefer ``seg_agg_pregrouped`` via
-    core.dataflow.block_graph.
+    core.dataflow.block_graph.  ``backend`` selects the kernel tier
+    ("pallas-tpu" | "pallas-gpu"; "pallas"/"auto" resolve per platform --
+    see core/backend.py).
     """
+    backend = resolve_backend(backend)
+    if backend == PALLAS_GPU:
+        tile_e = min(tile_e, 128)  # SM-resident chunk, not a VMEM slab
     e, f = rows.shape
     seg_np = np.asarray(jax.device_get(seg_ids))
     nblocks = _round_up(num_segments, tile_m) // tile_m
@@ -55,17 +72,22 @@ def seg_agg(rows: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
     seg_l[blk, offs] = seg_np - blk * tile_m
     mask[blk, offs] = 1.0
     bs_rows = bs_rows.at[jnp.asarray(blk), jnp.asarray(offs)].set(rows)
-    out = seg_agg_blocked(bs_rows, jnp.asarray(seg_l), jnp.asarray(mask),
-                          tile_m=tile_m, tile_e=tile_e,
-                          interpret=_interpret())
+    out = _seg_agg_entry(backend)(
+        bs_rows, jnp.asarray(seg_l), jnp.asarray(mask),
+        tile_m=tile_m, tile_e=tile_e, interpret=interpret_for(backend))
     return out[:num_segments]
 
 
 def seg_agg_pregrouped(rows_blocked, seg_local, mask, tile_m: int,
-                       tile_e: int = 512) -> jnp.ndarray:
+                       tile_e: int = 512,
+                       backend: str = PALLAS_TPU) -> jnp.ndarray:
     """Kernel entry for already block-grouped inputs (BlockedGraph layout)."""
-    return seg_agg_blocked(rows_blocked, seg_local, mask, tile_m=tile_m,
-                           tile_e=tile_e, interpret=_interpret())
+    backend = resolve_backend(backend)
+    if backend == PALLAS_GPU:
+        tile_e = min(tile_e, 128)
+    return _seg_agg_entry(backend)(
+        rows_blocked, seg_local, mask, tile_m=tile_m, tile_e=tile_e,
+        interpret=interpret_for(backend))
 
 
 # ---------------------------------------------------------------------------
@@ -74,20 +96,30 @@ def seg_agg_pregrouped(rows_blocked, seg_local, mask, tile_m: int,
 
 
 def fused_agg_combine(src, dst_local, mask, x, w, *, tile_m: int,
-                      tile_e: int = 0) -> jnp.ndarray:
+                      tile_e: int = 0,
+                      backend: str = PALLAS_TPU) -> jnp.ndarray:
     """Gather x rows by ``src`` (XLA DMA gather), then fused reduce+GEMM.
 
     src/dst_local/mask: (nblocks, emax) BlockedGraph layout.
     x: (V, F_in); w: (F_in, F_out).  Returns (nblocks*tile_m, F_out).
+    ``backend`` selects the kernel tier: "pallas-tpu" (sequential edge-chunk
+    grid + VMEM scratch) or "pallas-gpu" (one CTA per block, register
+    accumulator -- kernels/gpu_agg.py); "pallas"/"auto" resolve per platform.
     """
+    backend = resolve_backend(backend)
     nblocks, emax = src.shape
     f_in, f_out = w.shape
     if tile_e == 0:
-        # VMEM budget: rows chunk + W + acc within half VMEM.
-        budget = VMEM_BYTES // 2
-        fixed = (f_in * f_out + tile_m * f_in + tile_m * f_out) * 4
-        tile_e = max(256, min(2048, (budget - fixed) // max(f_in * 4, 1)))
-        tile_e = max(256, (tile_e // 256) * 256)
+        if backend == PALLAS_GPU:
+            # edge chunk shares the SM with GPU_TARGET_CTAS_PER_SM peers;
+            # keep the (tile_e, F_in) slab small and warp-aligned
+            tile_e = 128
+        else:
+            # VMEM budget: rows chunk + W + acc within half VMEM.
+            budget = VMEM_BYTES // 2
+            fixed = (f_in * f_out + tile_m * f_in + tile_m * f_out) * 4
+            tile_e = max(256, min(2048, (budget - fixed) // max(f_in * 4, 1)))
+            tile_e = max(256, (tile_e // 256) * 256)
     emax_p = _round_up(emax, tile_e)
     if emax_p != emax:
         pad = ((0, 0), (0, emax_p - emax))
@@ -95,8 +127,10 @@ def fused_agg_combine(src, dst_local, mask, x, w, *, tile_m: int,
         dst_local = jnp.pad(dst_local, pad)
         mask = jnp.pad(mask, pad)
     rows = jnp.take(x, src.reshape(-1), axis=0).reshape(nblocks, emax_p, -1)
-    return fused_agg_combine_blocked(rows, dst_local, mask, w, tile_m=tile_m,
-                                     tile_e=tile_e, interpret=_interpret())
+    entry = (fused_agg_combine_gpu_blocked if backend == PALLAS_GPU
+             else fused_agg_combine_blocked)
+    return entry(rows, dst_local, mask, w, tile_m=tile_m, tile_e=tile_e,
+                 interpret=interpret_for(backend))
 
 
 # ---------------------------------------------------------------------------

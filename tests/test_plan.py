@@ -10,15 +10,18 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.config import CORA, GraphSpec, reduced_graph
+from repro.core import backend as backend_mod
 from repro.core import phases
-from repro.core.backend import default_interpret, resolve_backend
+from repro.core.backend import (default_interpret, interpret_for,
+                                resolve_backend)
 from repro.core.plan import (build_plan, clear_plan_cache, plan_for_conv,
                              plan_for_phases)
 from repro.core.scheduler import AGGREGATE_FIRST, COMBINE_FIRST
 from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.models.gcn import PAPER_MODELS, make_paper_model
 
-BACKENDS = ("xla", "pallas")  # pallas runs in interpret mode off-TPU
+# non-native tiers run in interpret mode off their platform
+BACKENDS = ("xla", "pallas-tpu", "pallas-gpu")
 ORDERINGS = (COMBINE_FIRST, AGGREGATE_FIRST)  # both legal for GCN (mean, 1-mlp)
 
 
@@ -163,11 +166,45 @@ def test_interpret_autodetect(monkeypatch):
 
 def test_backend_auto_resolution():
     assert resolve_backend("xla") == "xla"
-    assert resolve_backend("pallas") == "pallas"
-    expected = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert resolve_backend("pallas-tpu") == "pallas-tpu"
+    assert resolve_backend("pallas-gpu") == "pallas-gpu"
+    plat = jax.default_backend()
+    expected = {"tpu": "pallas-tpu", "gpu": "pallas-gpu"}.get(plat, "xla")
     assert resolve_backend("auto") == expected
+    # legacy alias: the platform's native Pallas tier
+    assert resolve_backend("pallas") == (
+        "pallas-gpu" if plat == "gpu" else "pallas-tpu")
     with pytest.raises(ValueError):
         resolve_backend("cuda")
+
+
+@pytest.mark.parametrize("plat,auto,alias", [
+    ("cpu", "xla", "pallas-tpu"),
+    ("gpu", "pallas-gpu", "pallas-gpu"),
+    ("tpu", "pallas-tpu", "pallas-tpu"),
+])
+def test_backend_resolution_mocked_platforms(monkeypatch, plat, auto, alias):
+    """resolve_backend picks the platform's tier (paper F3 per platform);
+    every tier is a distinct string so plans record WHICH kernel family ran."""
+    monkeypatch.setattr(backend_mod, "platform", lambda: plat)
+    assert resolve_backend("auto") == auto
+    assert resolve_backend("pallas") == alias
+    # explicit tiers are never rewritten, even cross-platform
+    assert resolve_backend("pallas-gpu") == "pallas-gpu"
+    assert resolve_backend("pallas-tpu") == "pallas-tpu"
+    assert resolve_backend("xla") == "xla"
+
+
+@pytest.mark.parametrize("plat", ["cpu", "gpu", "tpu"])
+def test_interpret_per_tier_mocked_platforms(monkeypatch, plat):
+    """A Pallas tier compiles only on its native platform; anywhere else it
+    interprets (so a CPU container still validates GPU/TPU kernel numerics)."""
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    monkeypatch.setattr(backend_mod, "platform", lambda: plat)
+    assert interpret_for("pallas-tpu") == (plat != "tpu")
+    assert interpret_for("pallas-gpu") == (plat != "gpu")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert interpret_for("pallas-tpu") and interpret_for("pallas-gpu")
 
 
 def test_no_raw_impl_blocked_flags():
@@ -191,6 +228,43 @@ def test_describe_reports_decisions(data):
                 "agg_bytes"} <= set(row)
     # layer 2 shrinks 128->7: the cost model must pick combine_first
     assert d[-1]["order"] == COMBINE_FIRST
+
+
+def test_gpu_tile_picker_is_occupancy_aware():
+    """The GPU tier's suggested tile is warp-aligned and small enough to
+    keep several CTAs resident per SM; the TPU tier fills half of VMEM."""
+    from repro.core.dataflow import suggest_tile_m
+    tpu = suggest_tile_m(128, 128, 8.0)
+    gpu = suggest_tile_m(128, 128, 8.0, backend="pallas-gpu")
+    assert gpu % 32 == 0 and 32 <= gpu <= 256
+    assert tpu > gpu  # one giant sequential tile vs many resident CTAs
+
+
+def test_partition_2d_structure(data):
+    """partition_2d: node axis is the uniform 1-D partition; feature axis is
+    a runtime columnwise split (ceil-divided block per feature length)."""
+    from repro.graph.partition import partition_1d, partition_2d
+    spec, g, _ = data
+    p2 = partition_2d(g, 4, 2)
+    assert p2.node_shards == 4 and p2.feat_shards == 2
+    ref = partition_1d(g, 4, edge_balanced=False)
+    assert p2.block_size == ref.block_size
+    assert np.array_equal(np.asarray(p2.nodes.vtx_start),
+                          np.asarray(ref.vtx_start))
+    assert p2.feature_block(24) == 12
+    assert p2.feature_block(7) == 4   # ceil(7/2): pad columns are zeros
+    with pytest.raises(ValueError):
+        partition_2d(g, 0, 2)
+
+
+def test_plan_2d_mesh_requires_two_axes(data):
+    """partition_kind reflects the mesh rank; a local plan reports "none"."""
+    spec, g, _ = data
+    plan = build_plan(g, PAPER_MODELS["gcn"], spec.feature_len,
+                      spec.num_classes)
+    assert plan.partition_kind == "none"
+    d = plan.describe()[0]
+    assert d["partition"] == "none"
 
 
 def test_build_plan_rejects_traced_graph(data):
