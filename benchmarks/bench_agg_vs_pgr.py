@@ -16,49 +16,59 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import bench_graph, emit, timeit
 from repro.core.phases import aggregate
-from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.graph.reorder import degree_reorder, reuse_distance_stats
 from repro.models.pagerank import pagerank
+from repro.profile.bench import BenchSpec, run_specs
 
 
-def run():
-    spec = bench_graph("reddit", max_vertices=8192, max_feature=602)
-    g = make_synthetic_graph(spec)
-    x = make_features(spec)
+def _locality(ctx, _):
+    g, x = ctx.g, ctx.x
+    t_agg = ctx.time(jax.jit(lambda xx: aggregate(g, xx, op="mean")), x)
+    t_pgr = ctx.time(jax.jit(lambda: pagerank(g, iters=1)))
 
-    agg_fn = jax.jit(lambda xx: aggregate(g, xx, op="mean"))
-    t_agg = timeit(agg_fn, x)
-    pgr_fn = jax.jit(lambda: pagerank(g, iters=1))
-    t_pgr = timeit(pgr_fn)
+    ctx.emit("fig2/locality", 0.0,
+             agg_contig_bytes_per_access=602 * 4,
+             pgr_contig_bytes_per_access=4,
+             vector_width_utilization_agg=1.0,
+             vector_width_utilization_pgr=round(1 / 128, 4))
+    ctx.emit("fig2/parallelism", 0.0,
+             agg_work_items_per_edge=602,   # intra-vertex lanes
+             pgr_work_items_per_edge=1,
+             agg_us=round(t_agg, 1), pgr_iter_us=round(t_pgr, 1))
+    ctx.emit("fig2/memory_pressure", 0.0,
+             agg_gathers_per_kbyte=round(1024 / (602 * 4), 2),
+             pgr_gathers_per_kbyte=round(1024 / 4, 2),
+             paper_reference="memory throttle 0.225% vs 39.27%")
 
-    emit("fig2/locality", 0.0,
-         agg_contig_bytes_per_access=602 * 4,
-         pgr_contig_bytes_per_access=4,
-         vector_width_utilization_agg=1.0,
-         vector_width_utilization_pgr=round(1 / 128, 4))
-    emit("fig2/parallelism", 0.0,
-         agg_work_items_per_edge=602,   # intra-vertex lanes
-         pgr_work_items_per_edge=1,
-         agg_us=round(t_agg, 1), pgr_iter_us=round(t_pgr, 1))
-    emit("fig2/memory_pressure", 0.0,
-         agg_gathers_per_kbyte=round(1024 / (602 * 4), 2),
-         pgr_gathers_per_kbyte=round(1024 / 4, 2),
-         paper_reference="memory throttle 0.225% vs 39.27%")
 
-    # degree-aware reorder effect (guideline 5.1-1)
+def _reorder(ctx, _):
+    """Degree-aware reorder effect (guideline 5.1-1)."""
+    g = ctx.g
     stream = np.asarray(g.src)[:150_000]
     g2, _ = degree_reorder(g)
     stream2 = np.asarray(g2.src)[:150_000]
     budget = 2048
     before = reuse_distance_stats(stream, budgets=(budget,))
     after = reuse_distance_stats(stream2, budgets=(budget,))
-    emit("guideline/degree_reorder", 0.0,
-         hit_ratio_before=round(before[f"hit_ratio@{budget}"], 3),
-         hit_ratio_after=round(after[f"hit_ratio@{budget}"], 3),
-         mean_dist_before=round(before["mean_reuse_distance"], 1),
-         mean_dist_after=round(after["mean_reuse_distance"], 1))
+    ctx.emit("guideline/degree_reorder", 0.0,
+             hit_ratio_before=round(before[f"hit_ratio@{budget}"], 3),
+             hit_ratio_after=round(after[f"hit_ratio@{budget}"], 3),
+             mean_dist_before=round(before["mean_reuse_distance"], 1),
+             mean_dist_after=round(after["mean_reuse_distance"], 1))
+
+
+SPECS = [
+    BenchSpec(name="fig2/agg_vs_pgr", graph="reddit", max_vertices=8192,
+              max_feature=602, measure=_locality),
+    BenchSpec(name="fig2/reorder", graph="reddit", max_vertices=8192,
+              max_feature=602, measure=_reorder),
+]
+
+
+def run():
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    run_specs(SPECS, csv=BENCH_ARTIFACT_DIR / "bench_agg_vs_pgr.csv")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,9 @@ Expected paper phenomena, asserted in derived columns:
   * GIN (aggregate-first, raw-width features) spends a LARGER share in
     aggregation than GCN/SAG (combine-first, 128-wide rows);
   * combination share grows with dataset feature length (CS > CR > PB).
+
+Declared as one ``BenchSpec`` per dataset sweeping the model axis; the
+shared harness (``repro.profile.bench``) owns timing and CSV emission.
 """
 
 from __future__ import annotations
@@ -15,43 +18,50 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench_graph, emit, timeit
-from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.models.gcn import make_paper_model
+from repro.profile.bench import BenchSpec, run_specs
 
 DATASETS = ("cora", "citeseer", "pubmed", "reddit")
 MODELS = ("gcn", "sage", "gin")
 
 
+def _measure(ctx, model_name):
+    spec, g, x = ctx.spec, ctx.g, ctx.x
+    m = make_paper_model(model_name, spec)
+    p = m.init(jax.random.PRNGKey(0))
+    conv = m.convs[0]
+    order = conv.resolve_order(g)
+    w = p["conv0"]["lin"]["w"] if model_name != "gin" else \
+        p["conv0"]["mlp1"]["w"]
+    agg_len_x = x @ w if order == "combine_first" else x
+
+    gather = jax.jit(lambda h: jnp.take(h, g.src, axis=0))
+    reduce_ = jax.jit(lambda rows: jax.ops.segment_sum(
+        rows, g.dst, num_segments=g.num_vertices))
+    gemm = jax.jit(lambda h: h @ w)
+
+    t_gather = ctx.time(gather, agg_len_x)
+    t_reduce = ctx.time(reduce_, gather(agg_len_x))
+    t_gemm = ctx.time(gemm, x)
+    total = t_gather + t_reduce + t_gemm
+    ctx.emit(f"breakdown/{spec.name}/{model_name}", total,
+             order=order,
+             gather_pct=round(100 * t_gather / total, 1),
+             reduce_pct=round(100 * t_reduce / total, 1),
+             sgemm_pct=round(100 * t_gemm / total, 1),
+             agg_pct=round(100 * (t_gather + t_reduce) / total, 1))
+
+
+SPECS = [
+    BenchSpec(name=f"breakdown/{ds}", graph=ds, max_vertices=4096,
+              sweep=MODELS, measure=_measure)
+    for ds in DATASETS
+]
+
+
 def run():
-    for ds in DATASETS:
-        spec = bench_graph(ds, max_vertices=4096)
-        g = make_synthetic_graph(spec)
-        x = make_features(spec)
-        for name in MODELS:
-            m = make_paper_model(name, spec)
-            p = m.init(jax.random.PRNGKey(0))
-            conv = m.convs[0]
-            order = conv.resolve_order(g)
-            w = p["conv0"]["lin"]["w"] if name != "gin" else \
-                p["conv0"]["mlp1"]["w"]
-            agg_len_x = x @ w if order == "combine_first" else x
-
-            gather = jax.jit(lambda h: jnp.take(h, g.src, axis=0))
-            reduce_ = jax.jit(lambda rows: jax.ops.segment_sum(
-                rows, g.dst, num_segments=g.num_vertices))
-            gemm = jax.jit(lambda h: h @ w)
-
-            t_gather = timeit(gather, agg_len_x)
-            t_reduce = timeit(reduce_, gather(agg_len_x))
-            t_gemm = timeit(gemm, x)
-            total = t_gather + t_reduce + t_gemm
-            emit(f"breakdown/{ds}/{name}", total,
-                 order=order,
-                 gather_pct=round(100 * t_gather / total, 1),
-                 reduce_pct=round(100 * t_reduce / total, 1),
-                 sgemm_pct=round(100 * t_gemm / total, 1),
-                 agg_pct=round(100 * (t_gather + t_reduce) / total, 1))
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    run_specs(SPECS, csv=BENCH_ARTIFACT_DIR / "bench_breakdown.csv")
 
 
 if __name__ == "__main__":

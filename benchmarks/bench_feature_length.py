@@ -4,58 +4,68 @@
     in_len, Aggregation time CONSTANT (combine-first: independent of in_len);
 (b) sweep output length at fixed in=602: both phases ~ linear in out_len.
 
-Sweet spots: the paper sees power-of-2 dips on V100; the TPU analogue is
-128-multiple MXU tile alignment, reported as pad waste (out_len/128 ceil).
+Sweet spots: the paper sees power-of-2 dips on V100; the machine analogue is
+matrix-tile alignment (``machine.matrix_tile``: 128-lane MXU on TPU),
+reported as pad waste (ceil to the tile).  Both sweeps are one BenchSpec
+each -- the sweep axis IS the feature length.
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import bench_graph, emit, timeit
 from repro.core.phases import aggregate, aggregate_cost, combine_cost
-from repro.graph.datasets import make_synthetic_graph
+from repro.profile.bench import BenchSpec, run_specs
+
+IN_LENS = (64, 128, 250, 256, 512, 602, 1024)
+OUT_LENS = (16, 64, 100, 128, 256, 512)
 
 
-def _combine_time(g, x, w):
-    f = jax.jit(lambda xx: xx @ w)
-    return timeit(f, x)
+def _pad_waste(length: int, tile: int) -> float:
+    return round(tile * -(-length // tile) / length - 1, 3)
 
 
-def _aggregate_time(g, h):
-    f = jax.jit(lambda hh: aggregate(g, hh, op="mean"))
-    return timeit(f, h)
-
-
-def run():
-    spec = bench_graph("reddit", max_vertices=4096)
-    g = make_synthetic_graph(spec)
+def _sweep_in(ctx, in_len):
+    """(a) input length sweep, out fixed at 128 (combine first)."""
+    g = ctx.g
     key = jax.random.PRNGKey(0)
-
-    # (a) input length sweep, out fixed at 128 (combine first)
-    for in_len in (64, 128, 250, 256, 512, 602, 1024):
-        x = jax.random.normal(key, (g.num_vertices, in_len))
-        w = jax.random.normal(key, (in_len, 128)) * 0.05
-        t_comb = _combine_time(g, x, w)
-        t_agg = _aggregate_time(g, x @ w)
-        emit(f"fig5a/in_{in_len}", t_comb + t_agg,
+    x = jax.random.normal(key, (g.num_vertices, in_len))
+    w = jax.random.normal(key, (in_len, 128)) * 0.05
+    t_comb = ctx.time(jax.jit(lambda xx: xx @ w), x)
+    t_agg = ctx.time(jax.jit(lambda hh: aggregate(g, hh, op="mean")), x @ w)
+    ctx.emit(f"fig5a/in_{in_len}", t_comb + t_agg,
              comb_us=round(t_comb, 1), agg_us=round(t_agg, 1),
              agg_analytic_bytes=aggregate_cost(g, 128)["bytes"],
-             mxu_pad_waste=round(128 * -(-in_len // 128) / in_len - 1, 3))
+             mxu_pad_waste=_pad_waste(in_len, ctx.machine.matrix_tile))
 
-    # (b) output length sweep, in fixed at 602
+
+def _sweep_out(ctx, out_len):
+    """(b) output length sweep, in fixed at 602."""
+    g = ctx.g
+    key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (g.num_vertices, 602))
-    for out_len in (16, 64, 100, 128, 256, 512):
-        w = jax.random.normal(key, (602, out_len)) * 0.05
-        t_comb = _combine_time(g, x, w)
-        t_agg = _aggregate_time(g, x @ w)
-        emit(f"fig5b/out_{out_len}", t_comb + t_agg,
+    w = jax.random.normal(key, (602, out_len)) * 0.05
+    t_comb = ctx.time(jax.jit(lambda xx: xx @ w), x)
+    t_agg = ctx.time(jax.jit(lambda hh: aggregate(g, hh, op="mean")), x @ w)
+    ctx.emit(f"fig5b/out_{out_len}", t_comb + t_agg,
              comb_us=round(t_comb, 1), agg_us=round(t_agg, 1),
              agg_analytic_bytes=aggregate_cost(g, out_len)["bytes"],
              comb_analytic_flops=combine_cost(g.num_vertices,
                                               (602, out_len))["flops"],
-             mxu_pad_waste=round(128 * -(-out_len // 128) / out_len - 1, 3))
+             mxu_pad_waste=_pad_waste(out_len, ctx.machine.matrix_tile))
+
+
+SPECS = [
+    BenchSpec(name="fig5a", graph="reddit", max_vertices=4096,
+              sweep=IN_LENS, measure=_sweep_in),
+    BenchSpec(name="fig5b", graph="reddit", max_vertices=4096,
+              sweep=OUT_LENS, measure=_sweep_out),
+]
+
+
+def run():
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    run_specs(SPECS, csv=BENCH_ARTIFACT_DIR / "bench_feature_length.csv")
 
 
 if __name__ == "__main__":

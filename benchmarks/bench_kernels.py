@@ -4,7 +4,8 @@ modeled TPU utilization) and the fused-dataflow guideline (paper §5.1-3).
 Interpret-mode timing is meaningless for TPU perf; what we measure:
   * XLA path wall-clock for fused vs unfused dataflow (the HBM-traffic
     effect is visible even on CPU),
-  * analytic VMEM footprint + MXU-alignment of the kernel tilings,
+  * analytic VMEM footprint + MXU-alignment of the kernel tilings against
+    the spec's Machine (``ctx.machine.on_chip_bytes``),
   * numerics of the Pallas kernels at benchmark shapes.
 """
 
@@ -14,21 +15,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_graph, emit, timeit
-from repro.core.characterize import VMEM_BYTES
 from repro.core.plan import plan_for_phases
-from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.kernels import ops
 from repro.kernels.ref import seg_agg_ref
+from repro.profile.bench import BenchSpec, run_specs
 
 
-def run():
-    spec = bench_graph("reddit", max_vertices=4096, max_feature=256)
-    g = make_synthetic_graph(spec)
-    x = make_features(spec)
+def _fused_dataflow(ctx, _):
+    """Fused vs unfused dataflow (XLA backend), both as planner scenarios."""
+    g, x = ctx.g, ctx.x
     w = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * 0.05
-
-    # fused vs unfused dataflow (XLA backend), both as planner scenarios
     weights = [(w, None)]
     fused_plan = plan_for_phases(g, weights, order="combine_first",
                                  agg_op="mean", backend="xla", fused=True)
@@ -38,21 +34,28 @@ def run():
         xx, weights, activation="none"))
     unfused = jax.jit(lambda xx: unfused_plan.run_phases(
         xx, weights, activation="none"))
-    t_f = timeit(fused, x)
-    t_u = timeit(unfused, x)
+    t_f = ctx.time(fused, x)
+    t_u = ctx.time(unfused, x)
     err = float(jnp.abs(fused(x) - unfused(x)).max())
-    emit("kernels/fused_dataflow", t_f,
-         unfused_us=round(t_u, 1), speedup=round(t_u / t_f, 2),
-         max_err=f"{err:.1e}", tile_m=fused_plan.layers[0].tile_m)
+    ctx.emit("kernels/fused_dataflow", t_f,
+             unfused_us=round(t_u, 1),
+             speedup=round(t_u / max(t_f, 1e-9), 2),
+             max_err=f"{err:.1e}", tile_m=fused_plan.layers[0].tile_m)
 
-    # VMEM budgets of the kernel tilings (structural roofline inputs)
-    for (fi, fo, tm, te) in [(602, 128, 128, 512), (256, 128, 256, 512)]:
-        vmem = (fi * fo + tm * fi + tm * fo + te * fi) * 4
-        emit(f"kernels/fused_vmem_f{fi}", 0.0,
-             vmem_bytes=vmem, vmem_frac=round(vmem / VMEM_BYTES, 3),
-             mxu_aligned=bool(fo % 128 == 0 and tm % 8 == 0))
 
-    # Pallas numerics at benchmark shapes (interpret mode)
+def _vmem_budgets(ctx, shape):
+    """VMEM budget of one kernel tiling (structural roofline input)."""
+    fi, fo, tm, te = shape
+    vmem_total = ctx.machine.on_chip_bytes
+    vmem = (fi * fo + tm * fi + tm * fo + te * fi) * 4
+    ctx.emit(f"kernels/fused_vmem_f{fi}", 0.0,
+             vmem_bytes=vmem, vmem_frac=round(vmem / vmem_total, 3),
+             mxu_aligned=bool(fo % ctx.machine.matrix_tile == 0
+                              and tm % ctx.machine.row_align == 0))
+
+
+def _pallas_numerics(ctx, _):
+    """Pallas numerics at benchmark shapes (interpret mode)."""
     rng = np.random.default_rng(0)
     nb, emax, f, tm = 2, 512, 128, 128
     rows = jnp.asarray(rng.standard_normal((nb, emax, f)), jnp.float32)
@@ -61,9 +64,24 @@ def run():
     out = ops.seg_agg_pregrouped(rows, seg, mask, tile_m=tm)
     gseg = (seg + jnp.arange(nb)[:, None] * tm).reshape(-1)
     ref = seg_agg_ref(rows.reshape(-1, f), gseg, mask.reshape(-1), nb * tm)
-    emit("kernels/seg_agg_numerics", 0.0,
-         max_err=f"{float(jnp.abs(out - ref).max()):.1e}",
-         mxu_reduction=True)
+    ctx.emit("kernels/seg_agg_numerics", 0.0,
+             max_err=f"{float(jnp.abs(out - ref).max()):.1e}",
+             mxu_reduction=True)
+
+
+SPECS = [
+    BenchSpec(name="kernels/dataflow", graph="reddit", max_vertices=4096,
+              max_feature=256, measure=_fused_dataflow),
+    BenchSpec(name="kernels/vmem",
+              sweep=((602, 128, 128, 512), (256, 128, 256, 512)),
+              measure=_vmem_budgets),
+    BenchSpec(name="kernels/numerics", measure=_pallas_numerics),
+]
+
+
+def run():
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    run_specs(SPECS, csv=BENCH_ARTIFACT_DIR / "bench_kernels.csv")
 
 
 if __name__ == "__main__":

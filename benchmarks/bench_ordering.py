@@ -12,45 +12,44 @@ Paper reference values: 4.75x accesses, 4.72x ops, 4.76x time.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import bench_graph, emit, timeit
 from repro.config import GRAPHS
+from repro.core.distributed import halo_bytes
 from repro.core.phases import phase_ordered_layer
 from repro.core.plan import plan_for_phases
 from repro.core.scheduler import reduction_ratios
 from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.graph.partition import partition_1d
-from repro.core.distributed import halo_bytes
+from repro.profile.bench import BenchSpec, run_specs
 
 IN_LEN, OUT_LEN = 602, 128
 
 
-def run():
-    # --- full-size analytic table (the actual Table 4 reproduction) -------
+def _analytic_full(ctx, _):
+    """Full-size analytic table (the actual Table 4 reproduction)."""
     full = GRAPHS["reddit"]
     gfull = make_synthetic_graph(
         type(full)(full.name, full.num_vertices, full.feature_len,
                    full.num_edges, full.num_classes))
     r = reduction_ratios(gfull, IN_LEN, OUT_LEN)
     cf, af = r["combine_first"], r["aggregate_first"]
-    emit("table4/full_reddit/analytic", 0.0,
-         agg_bytes_com_first=cf.agg_bytes,
-         agg_bytes_agg_first=af.agg_bytes,
-         agg_flops_com_first=cf.agg_flops,
-         agg_flops_agg_first=af.agg_flops,
-         data_access_reduction=round(r["data_access_reduction"], 2),
-         computation_reduction=round(r["computation_reduction"], 2),
-         paper_reference="4.75x/4.72x")
+    ctx.emit("table4/full_reddit/analytic", 0.0,
+             agg_bytes_com_first=cf.agg_bytes,
+             agg_bytes_agg_first=af.agg_bytes,
+             agg_flops_com_first=cf.agg_flops,
+             agg_flops_agg_first=af.agg_flops,
+             data_access_reduction=round(r["data_access_reduction"], 2),
+             computation_reduction=round(r["computation_reduction"], 2),
+             paper_reference="4.75x/4.72x")
 
-    # --- scaled measured table --------------------------------------------
-    spec = bench_graph("reddit", max_vertices=8192)
-    g = make_synthetic_graph(spec)
+
+def _measured_scaled(ctx, _):
+    """Scaled measured table: both orderings as single-layer plans."""
+    g, spec = ctx.g, ctx.spec
     x = make_features(type(spec)(spec.name, spec.num_vertices, IN_LEN,
                                  spec.num_edges, spec.num_classes))
     w = jax.random.normal(jax.random.PRNGKey(0),
                           (IN_LEN, OUT_LEN)) * 0.05
-    # both orderings as single-layer plans (built once, replayed per call)
     plans = {order: plan_for_phases(g, [(w, None)], order=order,
                                     agg_op="mean")
              for order in ("combine_first", "aggregate_first")}
@@ -60,23 +59,40 @@ def run():
     af_fn = jax.jit(lambda xx: phase_ordered_layer(
         g, xx, [(w, None)], agg_op="mean", activation="none",
         plan=plans["aggregate_first"]))
-    t_cf = timeit(cf_fn, x)
-    t_af = timeit(af_fn, x)
+    t_cf = ctx.time(cf_fn, x)
+    t_af = ctx.time(af_fn, x)
     rs = reduction_ratios(g, IN_LEN, OUT_LEN)
-    emit("table4/scaled_reddit/measured", t_cf,
-         time_com_first_us=round(t_cf, 1), time_agg_first_us=round(t_af, 1),
-         time_reduction=round(t_af / t_cf, 2),
-         analytic_access_reduction=round(rs["data_access_reduction"], 2),
-         planner_pick=plan_for_phases(
-             g, [(w, None)], order=None, agg_op="mean").layers[0].order)
+    ctx.emit("table4/scaled_reddit/measured", t_cf,
+             time_com_first_us=round(t_cf, 1),
+             time_agg_first_us=round(t_af, 1),
+             time_reduction=round(t_af / max(t_cf, 1e-9), 2),
+             analytic_access_reduction=round(rs["data_access_reduction"], 2),
+             planner_pick=plan_for_phases(
+                 g, [(w, None)], order=None, agg_op="mean").layers[0].order)
 
-    # --- distributed restatement: halo bytes -------------------------------
-    pg = partition_1d(g, 16, edge_balanced=False)
+
+def _distributed_halo(ctx, _):
+    """Distributed restatement: halo bytes per ordering."""
+    pg = partition_1d(ctx.g, 16, edge_balanced=False)
     hb_in = halo_bytes(pg, IN_LEN)["min_halo_bytes"]
     hb_out = halo_bytes(pg, OUT_LEN)["min_halo_bytes"]
-    emit("table4/distributed_halo", 0.0,
-         halo_bytes_agg_first=hb_in, halo_bytes_com_first=hb_out,
-         collective_reduction=round(hb_in / hb_out, 2))
+    ctx.emit("table4/distributed_halo", 0.0,
+             halo_bytes_agg_first=hb_in, halo_bytes_com_first=hb_out,
+             collective_reduction=round(hb_in / hb_out, 2))
+
+
+SPECS = [
+    BenchSpec(name="table4/analytic", measure=_analytic_full),
+    BenchSpec(name="table4/measured", graph="reddit", max_vertices=8192,
+              measure=_measured_scaled),
+    BenchSpec(name="table4/halo", graph="reddit", max_vertices=8192,
+              measure=_distributed_halo),
+]
+
+
+def run():
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    run_specs(SPECS, csv=BENCH_ARTIFACT_DIR / "bench_ordering.csv")
 
 
 if __name__ == "__main__":

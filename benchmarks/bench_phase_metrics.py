@@ -4,7 +4,8 @@ Characterizes Aggregation vs Combination (vs PageRank and MLP-MNIST
 baselines) with architecture-neutral metrics:
 
   * bytes / FLOPs / arithmetic intensity + memory-vs-compute classification
-    (Table 3's "Execution Bound" row),
+    (Table 3's "Execution Bound" row) -- swept across Machine presets
+    (the paper's V100 plus TPU v5e and A100), one spec sweep axis,
   * bytes-per-op (Table 3's "DRAM Byte per Operation"),
   * LRU reuse-distance hit ratios at L2-like capacities (Fig. 2(g): the
     6.9% vs 56.2% L2 story, restated capacity-neutrally),
@@ -15,51 +16,55 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_graph, emit
-from repro.core.characterize import MACHINE_BALANCE, phase_report
+from repro.core.characterize import phase_report
 from repro.core.phases import aggregate_cost, combine_cost
-from repro.graph.datasets import make_synthetic_graph
 from repro.graph.reorder import atomic_collision_model, reuse_distance_stats
 from repro.models.mlp import mlp_cost
 from repro.models.pagerank import pagerank_cost
+from repro.profile.bench import BenchSpec, run_specs
+from repro.profile.machine import A100, TPU_V5E, V100
 
 
-def run():
-    spec = bench_graph("reddit", max_vertices=8192)
-    g = make_synthetic_graph(spec)
-
-    # --- Table 3: the hybrid pattern ---------------------------------------
+def _table3(ctx, machine):
+    """Table 3's bound classification, re-evaluated on one Machine."""
+    g = ctx.g
     agg = aggregate_cost(g, feature_len=128)      # SAG post-combination
     comb = combine_cost(g.num_vertices, (602, 128))
-    rep = phase_report(agg, comb)
-    emit("table3/aggregation", 0.0,
-         arithmetic_intensity=round(rep["aggregation"][
-             "arithmetic_intensity"], 4),
-         bytes_per_op=round(rep["aggregation"]["bytes_per_op"], 3),
-         bound=rep["aggregation"]["bound"],
-         bound_v5e=rep["aggregation"]["bound_v5e"],
-         paper_reference="memory-bound, 2.35 B/op")
-    emit("table3/combination", 0.0,
-         arithmetic_intensity=round(rep["combination"][
-             "arithmetic_intensity"], 2),
-         bytes_per_op=round(rep["combination"]["bytes_per_op"], 4),
-         bound=rep["combination"]["bound"],
-         bound_v5e=rep["combination"]["bound_v5e"],
-         paper_reference="compute-bound, 0.01 B/op",
-         v5e_note="balance 240 F/B: lone 602x128 GEMM is memory-bound on "
-                  "v5e -- fuse or widen (see fused_agg_combine)")
+    rep = phase_report(agg, comb, machine=machine)
+    ctx.emit(f"table3/{machine.name}/aggregation", 0.0,
+             arithmetic_intensity=round(rep["aggregation"][
+                 "arithmetic_intensity"], 4),
+             bytes_per_op=round(rep["aggregation"]["bytes_per_op"], 3),
+             bound_paper=rep["aggregation"]["bound"],
+             bound=rep["aggregation"]["bound_machine"],
+             machine_balance=round(machine.balance, 1),
+             paper_reference="memory-bound, 2.35 B/op")
+    ctx.emit(f"table3/{machine.name}/combination", 0.0,
+             arithmetic_intensity=round(rep["combination"][
+                 "arithmetic_intensity"], 2),
+             bytes_per_op=round(rep["combination"]["bytes_per_op"], 4),
+             bound_paper=rep["combination"]["bound"],
+             bound=rep["combination"]["bound_machine"],
+             machine_balance=round(machine.balance, 1),
+             paper_reference="compute-bound, 0.01 B/op",
+             note="a lone 602x128 GEMM flips memory-bound past balance "
+                  "~30 -- fuse or widen (see fused_agg_combine)")
 
-    # --- PageRank / MLP baselines ------------------------------------------
+
+def _baselines(ctx, _):
+    """PageRank / MLP baselines + Fig 2(f,g) locality models."""
+    g = ctx.g
     pgr = pagerank_cost(g)
-    emit("table3/pagerank", 0.0,
-         arithmetic_intensity=round(pgr["arithmetic_intensity"], 4),
-         bytes_per_op=round(1 / max(pgr["arithmetic_intensity"], 1e-9), 2))
+    ctx.emit("table3/pagerank", 0.0,
+             arithmetic_intensity=round(pgr["arithmetic_intensity"], 4),
+             bytes_per_op=round(1 / max(pgr["arithmetic_intensity"], 1e-9),
+                                2))
     mlp = mlp_cost()
-    emit("table3/mlp_mnist", 0.0,
-         arithmetic_intensity=round(mlp["arithmetic_intensity"], 2),
-         param_reuse=mlp["param_reuse"])
+    ctx.emit("table3/mlp_mnist", 0.0,
+             arithmetic_intensity=round(mlp["arithmetic_intensity"], 2),
+             param_reuse=mlp["param_reuse"])
 
-    # --- Fig 2(g): reuse distance (L2 hit-rate restatement) -----------------
+    # --- Fig 2(g): reuse distance (L2 hit-rate restatement) ----------------
     # A 6 MiB L2 holds ~1.5M scalar ranks (PGR) but only ~2.5K 602-float
     # rows.  The scaled graph preserves the BUDGET/|V| ratio of full Reddit
     # (2.6K rows / 233K vertices), so the hit-rate collapse reproduces.
@@ -70,22 +75,38 @@ def run():
     gcn_budget = max(4, int(6 * 2 ** 20 // (602 * 4) * scale))
     pgr_budget = min(int(6 * 2 ** 20 // 4 * scale), g.num_vertices)
     st = reuse_distance_stats(stream, budgets=(gcn_budget, pgr_budget))
-    emit("fig2g/reuse_distance", 0.0,
-         gcn_hit_ratio=round(st[f"hit_ratio@{gcn_budget}"], 3),
-         pgr_hit_ratio=round(st[f"hit_ratio@{pgr_budget}"], 3),
-         gcn_rows_budget=gcn_budget, pgr_rows_budget=pgr_budget,
-         mean_reuse_distance=round(st["mean_reuse_distance"], 1),
-         paper_reference="6.9% vs 56.2%")
+    ctx.emit("fig2g/reuse_distance", 0.0,
+             gcn_hit_ratio=round(st[f"hit_ratio@{gcn_budget}"], 3),
+             pgr_hit_ratio=round(st[f"hit_ratio@{pgr_budget}"], 3),
+             gcn_rows_budget=gcn_budget, pgr_rows_budget=pgr_budget,
+             mean_reuse_distance=round(st["mean_reuse_distance"], 1),
+             paper_reference="6.9% vs 56.2%")
 
-    # --- Fig 2(f): atomic collisions ----------------------------------------
+    # --- Fig 2(f): atomic collisions ---------------------------------------
     dst = np.asarray(g.dst)
     gcn_c = atomic_collision_model(dst, feature_len=602)
     pgr_c = atomic_collision_model(dst, feature_len=1)
-    emit("fig2f/atomic_collisions", 0.0,
-         gcn_txn_per_request=round(gcn_c["atomic_txn_per_request"], 2),
-         pgr_txn_per_request=round(pgr_c["atomic_txn_per_request"], 2),
-         paper_reference="1.1 vs 17.9",
-         tpu_note="sorted-segment layout eliminates the hazard entirely")
+    ctx.emit("fig2f/atomic_collisions", 0.0,
+             gcn_txn_per_request=round(gcn_c["atomic_txn_per_request"], 2),
+             pgr_txn_per_request=round(pgr_c["atomic_txn_per_request"], 2),
+             paper_reference="1.1 vs 17.9",
+             tpu_note="sorted-segment layout eliminates the hazard entirely")
+
+
+SPECS = [
+    # machine sweep: same phases classified on the paper's V100, TPU v5e,
+    # and A100 (analytic -- runs under dry-run too)
+    BenchSpec(name="table3", graph="reddit", max_vertices=8192,
+              sweep=(V100, TPU_V5E, A100), measure=_table3, dry="run",
+              dry_max_vertices=1024),
+    BenchSpec(name="phase_locality", graph="reddit", max_vertices=8192,
+              measure=_baselines),
+]
+
+
+def run():
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    run_specs(SPECS, csv=BENCH_ARTIFACT_DIR / "bench_phase_metrics.csv")
 
 
 if __name__ == "__main__":

@@ -3,17 +3,23 @@ partition.
 
 Every scenario is expressed as a ``build_plan`` override, so this module
 exercises exactly the dispatch layer production code uses -- no hand-built
-kernel calls.  Emits one row per scenario with the plan's decisions
+kernel calls.  One row per scenario carries the plan's decisions
 (order/RESOLVED backend/tile_m/interpret) plus measured wall-clock, and one
-row per model with the decisions the planner takes when left on "auto".
+row per model shows the decisions the planner takes when left on "auto".
 
-``run(dry=True)`` (the ``benchmarks/run.py --dry-run`` path) builds and
-validates every plan, emits the decisions without timing, and *accounts for
-every scenario in the matrix*: anything skipped is reported with a reason,
-and a scenario missing without one raises (scripts/smoke.sh fails).  The
-partition scenarios (1-D and 2-D meshes) run in a subprocess with 8 fake
-host devices so the main process keeps its single real device (the same
-rule tests/test_distributed.py follows).
+Under dry-run (the ``benchmarks/run.py --dry-run`` path / scripts/smoke.sh)
+every scenario additionally runs INSTRUMENTED: the plan executes through
+``plan.instrument(machine=...)``, and the resulting ``WorkloadReport`` is
+schema-validated (``report.validate()``) and cross-checked against
+``plan.describe()`` (``report.mismatches``) -- empty phase records, schema
+violations, or planner drift all fail the smoke gate.  ``post_run``
+accounts for every scenario in the matrix: anything skipped is reported
+with a reason, and a scenario missing without one raises.
+
+The partition scenarios (1-D and 2-D meshes) run in a subprocess with 8
+fake host devices so the main process keeps its single real device (the
+same rule tests/test_distributed.py follows); the child validates a
+WorkloadReport per partition scenario too.
 
 A backend is only *natively* exercised on its own platform; everywhere else
 the Pallas tiers run in interpret mode.  The dry run prints exactly which
@@ -31,12 +37,12 @@ from pathlib import Path
 
 import jax
 
-from benchmarks.common import bench_graph, emit, timeit
 from repro.core.backend import interpret_for, platform
 from repro.core.plan import build_plan
 from repro.core.scheduler import AGGREGATE_FIRST, COMBINE_FIRST
-from repro.graph.datasets import make_features, make_synthetic_graph
-from repro.models.gcn import PAPER_MODELS, make_paper_model
+from repro.models.gcn import make_paper_model
+from repro.profile.bench import BenchSpec, run_specs
+from repro.profile.machine import TPU_V5E
 
 BACKENDS = ("xla", "pallas-tpu", "pallas-gpu")
 ORDERINGS = (None, COMBINE_FIRST, AGGREGATE_FIRST)  # None = cost model
@@ -69,36 +75,67 @@ def expected_matrix():
     return names
 
 
-def _run_local_scenarios(spec, g, x, m, params, dry):
-    validated = []
-    for backend, ordering, fused in itertools.product(BACKENDS, ORDERINGS,
-                                                      FUSION):
-        plan = build_plan(g, m.cfg, spec.feature_len, spec.num_classes,
-                          backend=backend, ordering=ordering, fused=fused)
-        d0 = plan.describe()[0]
-        derived = dict(order=d0["order"], backend=d0["backend"],
-                       fused=d0["fused"], tile_m=d0["tile_m"],
-                       interpret=d0["interpret"], agg_bytes=d0["agg_bytes"])
-        name = _scenario_name(backend, ordering, fused)
-        if dry or backend != "xla":
-            # interpret-mode wall-clock is meaningless; validate + describe
-            out = plan.run_model(params, x) if dry else None
-            if out is not None:
-                assert out.shape == (spec.num_vertices, spec.num_classes)
-            emit(name, 0.0, **derived)
-        else:
-            fn = jax.jit(lambda xx, p=plan: p.run_model(params, xx))
-            emit(name, timeit(fn, x), **derived)
-        validated.append(name)
-    return validated
+def _setup(ctx):
+    m = make_paper_model("gcn", ctx.spec)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _scenario(ctx, point):
+    """One (backend, ordering, fusion) cell of the local matrix."""
+    backend, ordering, fused = point
+    spec, g, x = ctx.spec, ctx.g, ctx.x
+    m, params = ctx.state
+    plan = build_plan(g, m.cfg, spec.feature_len, spec.num_classes,
+                      backend=backend, ordering=ordering, fused=fused)
+    d0 = plan.describe()[0]
+    derived = dict(order=d0["order"], backend=d0["backend"],
+                   fused=d0["fused"], tile_m=d0["tile_m"],
+                   interpret=d0["interpret"], agg_bytes=d0["agg_bytes"])
+    name = _scenario_name(backend, ordering, fused)
+    if ctx.dry:
+        # instrumented validation: run through the plan's real dispatch,
+        # schema-check the WorkloadReport, and fail on planner drift
+        report = plan.instrument(machine=ctx.machine).run_model(params, x)
+        report.validate()
+        drift = report.mismatches(plan)
+        if drift:
+            raise RuntimeError(
+                f"{name}: describe() disagrees with dispatch: {drift}")
+        assert report.output.shape == (spec.num_vertices, spec.num_classes)
+        ctx.emit(name, 0.0, report_phases=len(report.records), **derived)
+    elif backend != "xla":
+        # interpret-mode wall-clock is meaningless; describe only
+        ctx.emit(name, 0.0, **derived)
+    else:
+        fn = jax.jit(lambda xx, p=plan: p.run_model(params, xx))
+        ctx.emit(name, ctx.time(fn, x), **derived)
+
+
+def _auto_decisions(ctx, model_name):
+    """What does the planner decide unaided, per paper model?"""
+    spec, g = ctx.spec, ctx.g
+    mm = make_paper_model(model_name, spec)
+    plan = build_plan(g, mm.cfg, spec.feature_len, spec.num_classes)
+    for d in plan.describe():
+        ctx.emit(f"plan/auto/{model_name}/layer{d['layer']}", 0.0,
+                 order=d["order"], backend=d["backend"], fused=d["fused"],
+                 din=d["din"], dout=d["dout"], agg_bytes=d["agg_bytes"])
 
 
 _PARTITION_CHILD_FLAG = "--partition-child"
 
 
-def _partition_child():
-    """Subprocess body: validate every partition scenario on fake devices."""
+def _partition_child(csv_out: str):
+    """Subprocess body: validate every partition scenario on fake devices,
+    each through an instrumented (WorkloadReport-validated) run.  Rows are
+    written to ``csv_out`` so the parent re-emits them through its own
+    harness context (they land in the parent's CSV artifact, no stdout
+    re-parsing)."""
     import numpy as np
+
+    from repro.profile.bench import BenchContext, bench_graph, write_csv
+    from repro.graph.datasets import make_features, make_synthetic_graph
+
     spec = bench_graph("reddit", max_vertices=256, max_feature=64)
     g = make_synthetic_graph(spec)
     x = make_features(spec)
@@ -106,67 +143,90 @@ def _partition_child():
     params = m.init(jax.random.PRNGKey(0))
     ref = build_plan(g, m.cfg, spec.feature_len,
                      spec.num_classes).run_model(params, x)
+    ctx = BenchContext(bench=None, machine=TPU_V5E, dry=True)
     for kind, shape, names, strategy in PARTITIONS:
         mesh = jax.make_mesh(shape, names)
         plan = build_plan(g, m.cfg, spec.feature_len, spec.num_classes,
                           mesh=mesh, strategy=strategy)
         assert plan.partition_kind == kind, (plan.partition_kind, kind)
         with mesh:
-            out = plan.run_model(params, x)
-        err = float(np.abs(np.asarray(out - ref)).max())
+            report = plan.instrument(machine=TPU_V5E).run_model(params, x)
+        report.validate()
+        drift = report.mismatches(plan)
+        assert not drift, (kind, shape, strategy, drift)
+        err = float(np.abs(np.asarray(report.output - ref)).max())
         assert err < 1e-3, (kind, shape, strategy, err)
         d0 = plan.describe()[0]
-        emit(_partition_name(kind, shape, strategy), 0.0,
-             order=d0["order"], backend=d0["backend"],
-             partition=d0["partition"], max_err=f"{err:.2e}")
+        ctx.emit(_partition_name(kind, shape, strategy), 0.0,
+                 order=d0["order"], backend=d0["backend"],
+                 partition=d0["partition"],
+                 report_phases=len(report.records),
+                 collective_bytes=int(sum(r.collective_bytes
+                                          for r in report.records)),
+                 max_err=f"{err:.2e}")
+    write_csv(ctx.rows, csv_out)
     print("PARTITION-CHILD-OK")
 
 
-def _dry_run_partitions():
-    """Spawn the partition matrix in a subprocess with 8 fake devices."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.pathsep.join(
-        [str(Path(__file__).resolve().parents[1] / "src"),
-         str(Path(__file__).resolve().parents[1])])
-    res = subprocess.run(
-        [sys.executable, "-m", "benchmarks.bench_plan",
-         _PARTITION_CHILD_FLAG],
-        capture_output=True, text=True, env=env, timeout=600)
-    sys.stdout.write(res.stdout)
-    if res.returncode != 0 or "PARTITION-CHILD-OK" not in res.stdout:
-        raise RuntimeError(
-            f"partition dry-run subprocess failed:\n{res.stderr[-3000:]}")
-    return [_partition_name(k, s, st) for k, s, _, st in PARTITIONS]
+def _partitions(ctx, _):
+    """Spawn the partition matrix in a subprocess with 8 fake devices and
+    re-emit its rows here, so they join the parent's CSV artifact and the
+    matrix accounting.  Dry-run only: partition *timing* needs a real
+    multi-device mesh (post_run logs that skip reason)."""
+    if not ctx.dry:
+        return
+    import csv as _csv
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        out = Path(td) / "partition_child.csv"
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.pathsep.join(
+            [str(Path(__file__).resolve().parents[1] / "src"),
+             str(Path(__file__).resolve().parents[1])])
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_plan",
+             _PARTITION_CHILD_FLAG, str(out)],
+            capture_output=True, text=True, env=env, timeout=600)
+        if res.returncode != 0 or "PARTITION-CHILD-OK" not in res.stdout:
+            sys.stdout.write(res.stdout)
+            raise RuntimeError(
+                f"partition dry-run subprocess failed:\n{res.stderr[-3000:]}")
+        with out.open(newline="") as f:
+            child_rows = list(_csv.DictReader(f))
+    for row in child_rows:
+        name = row.pop("name")
+        us = float(row.pop("us_per_call"))
+        ctx.emit(name, us, **row)
 
 
-def run(dry: bool = False):
-    spec = bench_graph("reddit", max_vertices=256 if dry else 2048,
-                       max_feature=128)
-    g = make_synthetic_graph(spec)
-    x = make_features(spec)
-    m = make_paper_model("gcn", spec)
-    params = m.init(jax.random.PRNGKey(0))
+SPECS = [
+    BenchSpec(name="plan/matrix", graph="reddit", max_vertices=2048,
+              max_feature=128, dry_max_vertices=256, machine=TPU_V5E,
+              sweep=tuple(itertools.product(BACKENDS, ORDERINGS, FUSION)),
+              setup=_setup, measure=_scenario, dry="run"),
+    BenchSpec(name="plan/auto", graph="reddit", max_vertices=2048,
+              max_feature=128, dry_max_vertices=256,
+              sweep=("gcn", "sage", "gin"), measure=_auto_decisions,
+              dry="run"),
+    BenchSpec(name="plan/partitions", measure=_partitions, dry="run"),
+]
 
-    validated = _run_local_scenarios(spec, g, x, m, params, dry)
+
+def post_run(rows, dry: bool = False):
+    """Matrix accounting + backend coverage report (fails loudly on gaps).
+
+    Only names in ``expected_matrix()`` count as validated scenarios (the
+    ``plan/auto`` introspection rows are reported but not matrix cells).
+    """
+    matrix = set(expected_matrix())
+    validated = [r["name"] for r in rows if r["name"] in matrix]
     skipped = {}
-    if dry:
-        validated += _dry_run_partitions()
-    else:
+    if not dry:
         for name in (_partition_name(k, s, st) for k, s, _, st in PARTITIONS):
             skipped[name] = "partition timing needs a real multi-device mesh"
 
-    # what does the planner decide unaided, per paper model?
-    for name in ("gcn", "sage", "gin"):
-        mm = make_paper_model(name, spec)
-        plan = build_plan(g, mm.cfg, spec.feature_len, spec.num_classes)
-        for d in plan.describe():
-            emit(f"plan/auto/{name}/layer{d['layer']}", 0.0,
-                 order=d["order"], backend=d["backend"], fused=d["fused"],
-                 din=d["din"], dout=d["dout"], agg_bytes=d["agg_bytes"])
-
-    # coverage report: which tiers ran compiled vs interpret-only, and
-    # whether every matrix scenario is accounted for (fail loudly if not)
     plat = platform()
     compiled = [b for b in BACKENDS
                 if b == "xla" or not interpret_for(b)]
@@ -185,12 +245,18 @@ def run(dry: bool = False):
           f"{len(skipped)} skipped with reasons, 0 silent")
 
 
-def dry_run():
-    run(dry=True)
+def run(dry: bool = False):
+    """Direct-invocation entry (``python -m benchmarks.bench_plan
+    [--dry-run]``); writes the same CSV artifact benchmarks/run.py does."""
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    rows = run_specs(
+        SPECS, dry=dry,
+        csv=BENCH_ARTIFACT_DIR / f"bench_plan{'.dry' if dry else ''}.csv")
+    post_run(rows, dry=dry)
 
 
 if __name__ == "__main__":
     if _PARTITION_CHILD_FLAG in sys.argv:
-        _partition_child()
+        _partition_child(sys.argv[sys.argv.index(_PARTITION_CHILD_FLAG) + 1])
     else:
-        run()
+        run(dry="--dry-run" in sys.argv)

@@ -1,51 +1,45 @@
-"""Shared benchmark utilities: timing, CSV emission, scaled datasets.
+"""DEPRECATED shim over ``repro.profile.bench`` (the shared bench harness).
 
-CPU wall-times here are CORRECTNESS-SHAPED, not TPU predictions: they verify
-relative effects the paper reports (breakdown shares, ordering speedups,
-linear scaling).  TPU-roofline numbers come from the dry-run artifacts
-(benchmarks/roofline.py), never from CPU timing.
+The timing / CSV / scaled-dataset halves every bench module used to import
+from here live in ``repro.profile.bench`` now; bench modules are
+``BenchSpec`` declarations executed by ``repro.profile.bench.run_specs``
+(which owns warmup, timing, the stdout echo, and the CSV artifact under
+``experiments/bench/``).  This module re-exports the primitives for one
+release so external callers keep working.
 
-Datasets are scaled-down replicas (same degree distribution, same
-feature-length RATIOS) sized so the full suite runs in minutes on CPU; the
-analytic tables additionally report the paper's full-size numbers.
+``emit`` still prints the legacy ``name,us,k=v`` line and appends to
+``ROWS``; ``flush_csv`` writes those rows as a real CSV artifact (header
+row, stable column order) -- use it if you drive ``emit`` directly instead
+of going through ``run_specs``.
 """
 
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, List
+from pathlib import Path
+from typing import Dict, List
 
-import jax
-import numpy as np
+# Re-exports (deprecated import path; prefer repro.profile.bench).
+from repro.profile.bench import (BENCH_ARTIFACT_DIR,  # noqa: F401
+                                 bench_graph, csv_columns, format_row,
+                                 make_row, timeit, write_csv)
 
-from repro.config import GRAPHS, GraphSpec, reduced_graph
-
+#: rows collected by direct ``emit`` calls (legacy path)
 ROWS: List[Dict] = []
 
+CSV_DIR = BENCH_ARTIFACT_DIR  # deprecated alias
 
-def emit(name: str, us_per_call: float, **derived):
-    row = {"name": name, "us_per_call": round(us_per_call, 2)}
-    row.update(derived)
+
+def emit(name: str, us_per_call: float, **derived) -> Dict:
+    """DEPRECATED: record+print one row (prefer ``BenchContext.emit``)."""
+    row = make_row(name, us_per_call, **derived)
     ROWS.append(row)
-    extras = ",".join(f"{k}={v}" for k, v in derived.items())
-    print(f"{name},{row['us_per_call']},{extras}")
+    print(format_row(row))
+    return row
 
 
-def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (us) of jitted fn; blocks on result leaves."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times) * 1e6)
-
-
-def bench_graph(name: str, max_vertices: int = 8192,
-                max_feature: int = 100000) -> GraphSpec:
-    """Scaled dataset preserving |E|/|V| and feature length (unless capped)."""
-    return reduced_graph(GRAPHS[name], max_vertices, max_feature)
+def flush_csv(path=None):
+    """Write every ``emit``-ed row as a CSV artifact and clear the buffer."""
+    target = Path(path) if path is not None else CSV_DIR / "emit.csv"
+    out = write_csv(ROWS, target)
+    ROWS.clear()
+    return out

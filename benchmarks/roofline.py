@@ -3,8 +3,8 @@
 Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
 one row per (arch x shape x mesh): the three roofline terms, dominant
 bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, roofline fraction, and
-fits-HBM.  This is a REPORTER -- it never touches jax devices, so it runs
-inside the normal benchmark process.
+fits-HBM.  This is a REPORTER -- it never touches jax devices, so it is a
+graph-less ``BenchSpec`` whose measure only reads artifacts.
 """
 
 from __future__ import annotations
@@ -12,15 +12,15 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import emit
+from repro.profile.bench import BenchSpec, run_specs
 
 DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
 
-def run():
+def _report(ctx, _):
     if not DRYRUN_DIR.exists():
-        emit("roofline/missing", 0.0,
-             note="run `python -m repro.launch.dryrun` first")
+        ctx.emit("roofline/missing", 0.0,
+                 note="run `python -m repro.launch.dryrun` first")
         return
     recs = []
     for p in sorted(DRYRUN_DIR.glob("*.json")):
@@ -30,22 +30,31 @@ def run():
             continue
     for r in recs:
         if r.get("status") != "ok":
-            emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
-                 tag=r.get("tag", "baseline"), status="ERROR",
-                 error=r.get("error", "")[:80])
+            ctx.emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                     tag=r.get("tag", "baseline"), status="ERROR",
+                     error=r.get("error", "")[:80])
             continue
         rl = r["roofline"]
-        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
-             rl["compute_s"] * 1e6,
-             tag=r.get("tag", "baseline"),
-             compute_s=f"{rl['compute_s']:.4f}",
-             memory_s=f"{rl['memory_s']:.4f}",
-             collective_s=f"{rl['collective_s']:.4f}",
-             dominant=rl["dominant"],
-             useful_ratio=round(rl["useful_ratio"], 3),
-             roofline_fraction=round(rl["roofline_fraction"], 4),
-             peak_gib=round(r.get("peak_bytes_per_device", 0) / 2 ** 30, 2),
-             fits_16g=r.get("fits_16g"))
+        ctx.emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                 rl["compute_s"] * 1e6,
+                 tag=r.get("tag", "baseline"),
+                 compute_s=f"{rl['compute_s']:.4f}",
+                 memory_s=f"{rl['memory_s']:.4f}",
+                 collective_s=f"{rl['collective_s']:.4f}",
+                 dominant=rl["dominant"],
+                 useful_ratio=round(rl["useful_ratio"], 3),
+                 roofline_fraction=round(rl["roofline_fraction"], 4),
+                 peak_gib=round(r.get("peak_bytes_per_device", 0) / 2 ** 30,
+                                2),
+                 fits_16g=r.get("fits_16g"))
+
+
+SPECS = [BenchSpec(name="roofline", measure=_report, dry="run")]
+
+
+def run():
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    run_specs(SPECS, csv=BENCH_ARTIFACT_DIR / "roofline.csv")
 
 
 if __name__ == "__main__":

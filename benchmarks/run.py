@@ -1,10 +1,15 @@
 """Benchmark harness entry: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived...`` CSV rows (benchmarks/common.emit).
+Every module is a list of declarative ``BenchSpec``s (``mod.SPECS``)
+executed by the ONE shared harness (``repro.profile.bench.run_specs``),
+which owns warmup/timing, the ``name,us_per_call,derived...`` stdout echo,
+and a per-module CSV artifact under ``experiments/bench/`` (header row,
+stable column order -- what ``experiments/make_tables.py::bench_tables``
+reads instead of re-parsing stdout).
 
   bench_breakdown       Fig. 1  execution-time breakdown
   bench_agg_vs_pgr      Fig. 2  Aggregation vs PageRank + reorder guideline
-  bench_phase_metrics   Fig. 2(f,g)/Table 3  hybrid execution patterns
+  bench_phase_metrics   Fig. 2(f,g)/Table 3  hybrid patterns x Machines
   bench_ordering        Table 4 phase-ordering impact (+distributed halo)
   bench_feature_length  Fig. 5  input/output length sweeps
   bench_kernels         beyond-paper: Pallas kernels + fused dataflow
@@ -14,12 +19,37 @@ Prints ``name,us_per_call,derived...`` CSV rows (benchmarks/common.emit).
 Usage: PYTHONPATH=src python -m benchmarks.run [--dry-run] [module ...]
 
 ``--dry-run`` routes through the execution planner only: every scenario
-plan is built and validated (tiny graphs, no timing) -- the pre-merge
-smoke check (scripts/smoke.sh).
+plan is built, run INSTRUMENTED (a schema-validated ``WorkloadReport`` per
+scenario -- empty phase records or describe()-vs-dispatch drift fail), and
+validated on tiny graphs with no timing -- the pre-merge smoke check
+(scripts/smoke.sh).  A selected module whose specs declare no dry-run
+scenarios is a HARD failure: a scenario silently skipped here would merge
+unvalidated.
 """
 
 import sys
 import traceback
+
+
+def _run_module(name: str, mod, dry: bool) -> None:
+    """Run one module's specs through the shared harness + its post hook."""
+    from repro.profile.bench import BENCH_ARTIFACT_DIR, run_specs
+
+    specs = getattr(mod, "SPECS", None)
+    if not specs:
+        raise RuntimeError(f"{name} declares no SPECS; its scenarios would "
+                           "be silently skipped -- declare BenchSpecs")
+    if dry and not any(s.dry == "run" for s in specs):
+        raise RuntimeError(
+            f"{name} has no dry-run-capable specs; its scenarios would be "
+            "silently skipped -- mark specs dry='run' or drop it from the "
+            "dry-run selection")
+    rows = run_specs(
+        specs, dry=dry,
+        csv=BENCH_ARTIFACT_DIR / f"{name}{'.dry' if dry else ''}.csv")
+    post = getattr(mod, "post_run", None)
+    if post is not None:
+        post(rows, dry=dry)
 
 
 def main() -> None:
@@ -42,41 +72,22 @@ def main() -> None:
         "roofline": roofline,
     }
     if dry:
-        # planner-path smoke: build+validate every scenario plan, no timing.
-        # A selected module without a dry-run mode is a HARD failure -- a
-        # scenario silently skipped here would merge unvalidated
-        # (scripts/smoke.sh counts on this exit code).
         selected = argv or ["bench_plan"]
-        failures = 0
-        for name in selected:
-            print(f"# === {name} (dry) ===")
-            try:
-                mod = modules[name]
-                if hasattr(mod, "dry_run"):
-                    mod.dry_run()
-                else:
-                    raise RuntimeError(
-                        f"{name} has no dry_run(); its scenarios would be "
-                        "silently skipped -- add one or drop it from the "
-                        "dry-run selection")
-            except Exception:  # noqa: BLE001
-                failures += 1
-                traceback.print_exc()
-        if failures:
-            raise SystemExit(f"{failures} dry-run module(s) failed")
-        return
+    else:
+        selected = argv or list(modules)
 
-    selected = argv or list(modules)
     failures = 0
     for name in selected:
-        print(f"# === {name} ===")
+        print(f"# === {name}{' (dry)' if dry else ''} ===")
         try:
-            modules[name].run()
+            _run_module(name, modules[name], dry)
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
     if failures:
-        raise SystemExit(f"{failures} benchmark module(s) failed")
+        raise SystemExit(
+            f"{failures} benchmark module(s) failed"
+            + (" (dry-run)" if dry else ""))
 
 
 if __name__ == '__main__':

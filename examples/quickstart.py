@@ -2,7 +2,9 @@
 
 Builds synthetic Cora, trains a 2-layer GCN with the phase-ordering
 scheduler in `auto` mode, prints the per-phase characterization (paper
-Table 3/4 views), and evaluates accuracy.
+Table 3/4 views) -- including the one-call instrumented WorkloadReport
+(`plan.instrument(machine=...)`, docs/characterization.md) -- and
+evaluates accuracy.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,10 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import CORA, reduced_graph
+from repro.core.plan import build_plan
 from repro.core.scheduler import reduction_ratios
 from repro.graph.datasets import make_features, make_labels, \
     make_synthetic_graph
 from repro.models.gcn import make_paper_model
+from repro.profile import V100
 
 
 def main():
@@ -40,6 +44,11 @@ def main():
     r = reduction_ratios(g, spec.feature_len, 128)
     print(f" ordering wins   : {r['data_access_reduction']:.2f}x fewer "
           f"aggregation bytes (paper Table 4: 4.75x on Reddit)")
+
+    print("\n== instrumented workload report (paper's V100) ==")
+    plan = build_plan(g, model.cfg, spec.feature_len, spec.num_classes)
+    report = plan.instrument(machine=V100).run_model(params, x)
+    print(report.to_markdown())
 
     print("\n== training ==")
     loss_grad = jax.jit(jax.value_and_grad(

@@ -1,5 +1,13 @@
-"""Generate EXPERIMENTS.md markdown tables from dry-run artifacts."""
+"""Generate EXPERIMENTS.md markdown tables from artifacts.
 
+Two artifact families:
+  * ``experiments/dryrun/*.json``  (repro.launch.dryrun): roofline tables.
+  * ``experiments/bench/*.csv``    (the BenchSpec harness,
+    ``repro.profile.bench.write_csv``): per-module benchmark tables,
+    rendered from the CSV artifact -- no stdout re-parsing.
+"""
+
+import csv
 import json
 import sys
 from pathlib import Path
@@ -86,8 +94,41 @@ def dryrun_table(tag="baseline"):
                   f"{extra[1]} | {extra[2]} |")
 
 
+def bench_tables(bench_dir=None):
+    """Render every BenchSpec CSV artifact as a markdown table.
+
+    Consumes the files ``benchmarks/run.py`` writes via
+    ``repro.profile.bench.write_csv`` (header row, stable column order);
+    empty cells pass through as empty table cells.  ``*.dry.csv``
+    validation artifacts (all-zero timings from the smoke gate) are
+    excluded -- only measured runs become tables.
+    """
+    if bench_dir is None:
+        sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
+        from repro.profile.bench import BENCH_ARTIFACT_DIR
+        bench_dir = BENCH_ARTIFACT_DIR
+    paths = [p for p in sorted(Path(bench_dir).glob("*.csv"))
+             if not p.name.endswith(".dry.csv")] \
+        if Path(bench_dir).exists() else []
+    if not paths:
+        print("\n(no bench CSV artifacts; run `python -m benchmarks.run`)")
+        return
+    for p in paths:
+        with p.open(newline="") as f:
+            rows = list(csv.reader(f))
+        if not rows:
+            continue
+        header, body = rows[0], rows[1:]
+        print(f"\n### Benchmarks — {p.stem}\n")
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+        for r in body:
+            print("| " + " | ".join(r) + " |")
+
+
 if __name__ == "__main__":
     tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
     dryrun_table(tag)
     roofline_table("single", tag)
     roofline_table("multi", tag)
+    bench_tables()

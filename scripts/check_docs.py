@@ -26,6 +26,7 @@ PUBLIC_SURFACE = {
         "GraphExecutionPlan", "GraphExecutionPlan.run_model",
         "GraphExecutionPlan.run_layer", "GraphExecutionPlan.run_phases",
         "GraphExecutionPlan.describe", "GraphExecutionPlan.layer_costs",
+        "GraphExecutionPlan.instrument",
     ],
     "repro.core.backend": [
         "resolve_backend", "interpret_for", "default_interpret",
@@ -40,6 +41,20 @@ PUBLIC_SURFACE = {
     ],
     "repro.core.dataflow": ["suggest_tile_m", "fused_gcn_layer"],
     "repro.core.phases": ["aggregate", "combine", "phase_ordered_layer"],
+    "repro.profile.machine": [
+        "Machine", "Machine.tile_budget", "Machine.classify",
+        "get_machine", "machine_for_backend",
+    ],
+    "repro.profile.instrument": [
+        "InstrumentedPlan", "InstrumentedPlan.run_model", "WorkloadReport",
+        "WorkloadReport.to_json", "WorkloadReport.to_markdown",
+        "WorkloadReport.validate", "WorkloadReport.mismatches",
+        "PhaseRecord",
+    ],
+    "repro.profile.bench": [
+        "BenchSpec", "BenchContext", "run_specs", "timeit", "write_csv",
+        "bench_graph",
+    ],
 }
 
 #: docstring must contain these substrings (entry point -> requirements)
@@ -49,13 +64,19 @@ CONTENT_REQUIREMENTS = {
     ("repro.core.plan", "plan_for_phases"): [">>>"],
     ("repro.core.backend", "resolve_backend"): ["auto", "pallas-gpu",
                                                 "pallas-tpu"],
+    ("repro.core.plan", "GraphExecutionPlan.instrument"): [
+        ">>>", "WorkloadReport", "machine"],
 }
 
 REQUIRED_FILES = {
     ROOT / "README.md": ["Quickstart", "smoke.sh",
                          "test_ctx_parallel_attention_sharded"],
     ROOT / "docs" / "planner.md": ["decision table", "pallas-gpu",
-                                   "partition_2d"],
+                                   "partition_2d", "characterization.md"],
+    ROOT / "docs" / "characterization.md": [
+        "Machine", "TPU_V5E", "A100", "V100", "WorkloadReport",
+        "to_markdown", "BenchSpec", "instrument", "workload-report",
+        "balance"],
 }
 
 MIN_DOC_LEN = 40  # a one-word docstring is not documentation

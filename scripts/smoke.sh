@@ -3,10 +3,14 @@
 #   1. tier-1 pytest (ROADMAP.md "Tier-1 verify"),
 #   2. the benchmark harness dry-run, which builds + validates the full
 #      backend x ordering x fusion x partition (1-D and 2-D) matrix through
-#      the GraphExecutionPlan and FAILS if any scenario in the matrix is
-#      skipped without a logged reason,
-#   3. the docs gate (README + docs/planner.md exist, public planner
-#      symbols documented -- scripts/check_docs.py).
+#      the GraphExecutionPlan -- every scenario runs INSTRUMENTED and emits
+#      a WorkloadReport that is schema-validated (empty phase records or
+#      violations fail) and cross-checked against plan.describe() (planner
+#      drift fails) -- and FAILS if any scenario in the matrix is skipped
+#      without a logged reason,
+#   3. the docs gate (README + docs/planner.md + docs/characterization.md
+#      exist, public planner/profile symbols documented --
+#      scripts/check_docs.py).
 #
 # Usage: scripts/smoke.sh [extra pytest args...]
 set -euo pipefail
@@ -22,7 +26,8 @@ python -m pytest -x -q \
   --deselect tests/test_distributed.py::test_ctx_parallel_attention_sharded \
   "$@"
 
-echo "== planner dry-run (backend x ordering x fusion x partition) =="
+echo "== planner dry-run (backend x ordering x fusion x partition;"
+echo "   instrumented: one schema-validated WorkloadReport per scenario) =="
 python -m benchmarks.run --dry-run
 
 echo "== docs gate =="

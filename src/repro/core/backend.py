@@ -122,6 +122,18 @@ def resolve_interpret(interpret=None, backend: Optional[str] = None) -> bool:
     return default_interpret()
 
 
+def default_machine(requested: str = AUTO):
+    """Machine preset matching a (possibly unresolved) backend tier.
+
+    Resolves the tier first (``resolve_backend``), then maps it to the
+    preset the characterization subsystem models it with: ``pallas-gpu`` ->
+    A100, everything else -> TPU_V5E (``repro.profile.machine``).  Lets
+    plan-level code stay machine-implicit until a caller overrides it.
+    """
+    from repro.profile.machine import machine_for_backend
+    return machine_for_backend(resolve_backend(requested))
+
+
 def resolve_backend(requested: str = AUTO) -> str:
     """Map a requested backend to a concrete tier (never "auto"/"pallas").
 

@@ -4,12 +4,18 @@ The paper's V100 counters (L2 hit rate, occupancy, IPC...) do not exist here;
 the architecture-neutral quantities behind them do.  This module derives:
 
   * per-phase FLOPs / bytes / arithmetic intensity  (Table 3),
-  * bound classification against a machine balance point,
+  * bound classification against a ``Machine`` balance point,
   * HLO-level cost extraction (``cost_analysis``) for any jitted step,
   * collective-byte extraction by parsing lowered HLO text (all-gather /
     all-reduce / reduce-scatter / all-to-all / collective-permute),
-  * the three roofline terms for TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
-    ~50 GB/s/link ICI), per DESIGN.md §7.
+  * the three roofline terms, parameterized by a ``repro.profile.Machine``
+    (presets: TPU_V5E / A100 / the paper's V100), per DESIGN.md §7.
+
+Hardware numbers live on ``repro.profile.machine.Machine`` presets;
+``roofline`` / ``phase_report`` take a ``machine=`` argument (default
+``TPU_V5E``, the repo's historical behavior).  The module-level constants
+below are DEPRECATED shims derived from the presets, kept for one release;
+new code should pass a Machine instead.
 """
 
 from __future__ import annotations
@@ -21,26 +27,26 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-# --- TPU v5e hardware constants (per chip) ---------------------------------
-PEAK_FLOPS_BF16 = 197e12      # FLOP/s
-HBM_BW = 819e9                # bytes/s
-ICI_BW_PER_LINK = 50e9        # bytes/s per link
-ICI_LINKS = 4                 # v5e: 4 ICI links per chip (2D torus: +-x, +-y)
-VMEM_BYTES = 128 * 1024 * 1024
-MXU_DIM = 128
+from repro.profile.machine import A100, TPU_V5E, V100, Machine
 
-#: machine balance: FLOPs per byte at which compute and HBM time are equal
-MACHINE_BALANCE = PEAK_FLOPS_BF16 / HBM_BW  # ~240 flop/byte
+# --- DEPRECATED constant shims (use Machine presets; gone next release) ----
+PEAK_FLOPS_BF16 = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW_PER_LINK = TPU_V5E.interconnect_bw
+ICI_LINKS = TPU_V5E.interconnect_links
+VMEM_BYTES = TPU_V5E.on_chip_bytes
+MXU_DIM = TPU_V5E.matrix_tile
 
-# --- GPU (A100-class) hardware constants (per SM) --------------------------
-# Used by the occupancy-aware GPU tile picker (core.dataflow.suggest_tile_m
-# with the pallas-gpu backend): unlike the TPU's one big VMEM, a GPU hides
-# latency by keeping SEVERAL thread blocks resident per SM, so the per-block
-# working set must fit a fraction of the SM's shared-memory/L1 carveout.
-GPU_SMEM_PER_SM = 192 * 1024      # unified SMEM/L1 carveout per SM (bytes)
-GPU_REGFILE_PER_SM = 256 * 1024   # register file per SM (bytes)
-GPU_TARGET_CTAS_PER_SM = 4        # resident CTAs needed to hide HBM latency
-GPU_WARP_ROWS = 32                # threads per warp = natural row granularity
+#: DEPRECATED: TPU_V5E.balance (FLOPs/byte at which compute == HBM time)
+MACHINE_BALANCE = TPU_V5E.balance
+
+# DEPRECATED GPU occupancy shims: these live on the A100 preset now, so
+# ``suggest_tile_m(backend="pallas-gpu")`` consumes one coherent Machine
+# instead of mixing TPU balance points with GPU tile math.
+GPU_SMEM_PER_SM = A100.on_chip_bytes
+GPU_REGFILE_PER_SM = A100.regfile_bytes
+GPU_TARGET_CTAS_PER_SM = A100.target_ctas
+GPU_WARP_ROWS = A100.row_align
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +182,7 @@ class Roofline:
     hbm_bytes: float
     collective_bytes: float
     model_flops: float = 0.0
+    machine: Machine = TPU_V5E
 
     @property
     def dominant(self) -> str:
@@ -197,7 +204,7 @@ class Roofline:
         against us, per the brief.
         """
         useful = self.model_flops or self.flops
-        ideal = useful / PEAK_FLOPS_BF16
+        ideal = useful / self.machine.peak_flops
         return ideal / max(self.step_time_s, 1e-30)
 
     @property
@@ -213,11 +220,13 @@ class Roofline:
             "model_flops": self.model_flops,
             "useful_ratio": (self.model_flops / self.flops) if self.flops else 0,
             "roofline_fraction": self.roofline_fraction,
+            "machine": self.machine.name,
         }
 
 
-def roofline(cost: StepCost, chips: int, model_flops: float = 0.0) -> Roofline:
-    """Three-term roofline per DESIGN.md §7.
+def roofline(cost: StepCost, chips: int, model_flops: float = 0.0,
+             machine: Machine = TPU_V5E) -> Roofline:
+    """Three-term roofline per DESIGN.md §7, against one ``Machine``.
 
     Conventions (verified empirically on this backend, see EXPERIMENTS.md
     §Dry-run methodology): the compiled module is the PER-DEVICE SPMD
@@ -225,16 +234,18 @@ def roofline(cost: StepCost, chips: int, model_flops: float = 0.0) -> Roofline:
     (trip-count-aware, via core.hlo_cost).  Terms are therefore per-device
     quantities over per-chip peaks; ``model_flops`` is the GLOBAL 6ND number
     and is divided by ``chips`` for the useful-compute comparison.
+    ``machine`` supplies the three peaks (default TPU_V5E, the historical
+    constants).
     """
     flops = cost.flops
     byt = cost.hbm_bytes
     coll = float(cost.collective.get("total", 0))
     return Roofline(
-        compute_s=flops / PEAK_FLOPS_BF16,
-        memory_s=byt / HBM_BW,
-        collective_s=coll / (ICI_LINKS * ICI_BW_PER_LINK),
+        compute_s=flops / machine.peak_flops,
+        memory_s=byt / machine.hbm_bw,
+        collective_s=coll / machine.interconnect_total,
         chips=chips, flops=flops, hbm_bytes=byt, collective_bytes=coll,
-        model_flops=model_flops / max(chips, 1))
+        model_flops=model_flops / max(chips, 1), machine=machine)
 
 
 # ---------------------------------------------------------------------------
@@ -242,28 +253,40 @@ def roofline(cost: StepCost, chips: int, model_flops: float = 0.0) -> Roofline:
 # ---------------------------------------------------------------------------
 
 
-#: V100 fp32 balance (15.7 TFLOP/s / 900 GB/s) -- the PAPER's classification
-#: point.  v5e bf16 balance is ~240: a GEMM that is compute-bound on V100
-#: (AI ~50) is memory-bound on v5e unless batched/fused wider -- a real
-#: hardware-adaptation finding, reported alongside (DESIGN.md §2).
-V100_BALANCE = 15.7e12 / 900e9
+#: DEPRECATED: V100.balance (15.7 TFLOP/s / 900 GB/s) -- the PAPER's
+#: classification point.  v5e bf16 balance is ~240: a GEMM that is
+#: compute-bound on V100 (AI ~50) is memory-bound on v5e unless
+#: batched/fused wider -- a real hardware-adaptation finding, reported
+#: alongside (DESIGN.md §2).
+V100_BALANCE = V100.balance
 
 
-def phase_report(agg_cost: dict, comb_cost: dict) -> Dict[str, Any]:
-    """Classify each phase against machine balance (Table 3 reproduction)."""
+def phase_report(agg_cost: dict, comb_cost: dict,
+                 machine: Machine = TPU_V5E) -> Dict[str, Any]:
+    """Classify each phase against machine balance (Table 3 reproduction).
+
+    Each phase is classified twice: against the PAPER's V100 balance
+    (``"bound"`` -- paper-faithful Table 3) and against ``machine``
+    (``"bound_machine"``).  ``"bound_v5e"`` is a deprecated alias kept for
+    one release (always the TPU_V5E classification, independent of
+    ``machine``).
+    """
     def classify(c):
         ai = c["arithmetic_intensity"]
         return {
             "arithmetic_intensity": ai,
             # paper-faithful classification (V100 balance)
-            "bound": "memory" if ai < V100_BALANCE else "compute",
-            # TPU v5e adaptation
-            "bound_v5e": "memory" if ai < MACHINE_BALANCE else "compute",
+            "bound": V100.classify(ai),
+            "bound_machine": machine.classify(ai),
+            # DEPRECATED alias (pre-Machine behavior)
+            "bound_v5e": TPU_V5E.classify(ai),
             "bytes": c["bytes"], "flops": c["flops"],
             # paper's "DRAM bytes per operation"
             "bytes_per_op": c["bytes"] / max(1, c["flops"]),
         }
     return {"aggregation": classify(agg_cost),
             "combination": classify(comb_cost),
-            "machine_balance_v100": V100_BALANCE,
-            "machine_balance_v5e": MACHINE_BALANCE}
+            "machine": machine.name,
+            "machine_balance": machine.balance,
+            "machine_balance_v100": V100.balance,
+            "machine_balance_v5e": TPU_V5E.balance}

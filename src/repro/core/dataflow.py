@@ -33,10 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backend import PALLAS_GPU, is_pallas
-from repro.core.characterize import (GPU_SMEM_PER_SM, GPU_TARGET_CTAS_PER_SM,
-                                     GPU_WARP_ROWS, VMEM_BYTES)
+from repro.core.backend import is_pallas
 from repro.graph.structure import Graph
+from repro.profile.machine import Machine, machine_for_backend
 
 
 class BlockedGraph(NamedTuple):
@@ -98,36 +97,51 @@ def block_graph(g: Graph, tile_m: int) -> BlockedGraph:
 
 
 def suggest_tile_m(in_len: int, out_len: int, avg_deg: float,
-                   dtype_bytes: int = 4, vmem_budget: int = VMEM_BYTES // 2,
-                   backend: str = "pallas-tpu") -> int:
+                   dtype_bytes: int = 4, vmem_budget: Optional[int] = None,
+                   backend: str = "pallas-tpu",
+                   machine: Optional[Machine] = None) -> int:
     """Largest aligned tile whose fused working set fits the on-chip budget.
 
     Working set per block: W (in*out) + accumulator (m*in) + output (m*out)
     + gathered rows stream (avg_deg*m*in, double-buffered factor 2).
 
-    The budget and alignment are *tier-aware* (the paper's F3 point that the
-    winning kernel shape follows the memory hierarchy):
+    The budget and alignment come from one coherent ``machine``
+    (``repro.profile.Machine``; default: the tier's natural preset via
+    ``machine_for_backend`` -- A100 for ``pallas-gpu``, TPU_V5E otherwise),
+    the paper's F3 point that the winning kernel shape follows the memory
+    hierarchy.  The occupancy model is selected by ``machine.kind`` (NOT by
+    the backend string, so an explicit GPU machine is never priced with the
+    TPU formula or vice versa):
 
-      * TPU (default): fit one giant tile into half of VMEM -- a single
-        sequential grid walks the blocks, so bigger tiles only amortize the
-        VMEM-pinned W further.  MXU alignment (multiples of 8 sublanes).
-      * GPU (``backend="pallas-gpu"``): fit the tile into a *fraction* of
-        the SM's shared-memory carveout (``GPU_SMEM_PER_SM /
-        GPU_TARGET_CTAS_PER_SM``), because latency hiding comes from
-        multiple resident CTAs per SM, not tile size; W is excluded from
-        the per-CTA budget (read once, served from L2).  Warp alignment
-        (multiples of 32 rows), capped low to keep the CTA count >= SMs.
+      * ``kind="tpu"``: fit one giant tile into half of VMEM
+        (``machine.tile_budget()``) -- a single sequential grid walks the
+        blocks, so bigger tiles only amortize the VMEM-pinned W further.
+        Sublane alignment (``machine.row_align`` = 8).
+      * ``kind="gpu"``: fit the tile into a *fraction* of the SM's
+        shared-memory carveout (``machine.on_chip_bytes /
+        machine.target_ctas``), because latency hiding comes from multiple
+        resident CTAs per SM, not tile size; W is excluded from the
+        per-CTA budget (read once, served from L2).  Warp alignment
+        (``machine.row_align`` = 32 rows), capped low to keep the CTA
+        count >= SMs.
+
+    ``vmem_budget`` remains as a deprecated TPU-path override; prefer
+    passing a ``machine``.
     """
-    if backend == PALLAS_GPU:
-        budget = GPU_SMEM_PER_SM // GPU_TARGET_CTAS_PER_SM
-        per_row = (in_len + out_len + 2 * avg_deg * in_len) * dtype_bytes
-        m = max(GPU_WARP_ROWS, int(budget / max(per_row, 1)))
-        m = (m // GPU_WARP_ROWS) * GPU_WARP_ROWS
-        return int(max(GPU_WARP_ROWS, min(256, m)))
-    w = in_len * out_len * dtype_bytes
+    if machine is None:
+        machine = machine_for_backend(backend)
     per_row = (in_len + out_len + 2 * avg_deg * in_len) * dtype_bytes
-    m = max(8, int((vmem_budget - w) / max(per_row, 1)))
-    return int(max(8, min(4096, (m // 8) * 8)))
+    if machine.kind == "gpu":
+        warp = machine.row_align
+        budget = machine.tile_budget()
+        m = max(warp, int(budget / max(per_row, 1)))
+        m = (m // warp) * warp
+        return int(max(warp, min(256, m)))
+    align = machine.row_align
+    budget = machine.tile_budget() if vmem_budget is None else vmem_budget
+    w = in_len * out_len * dtype_bytes
+    m = max(align, int((budget - w) / max(per_row, 1)))
+    return int(max(align, min(4096, (m // align) * align)))
 
 
 def fused_gcn_layer(bg: BlockedGraph, x: jnp.ndarray, w: jnp.ndarray,

@@ -151,6 +151,10 @@ class HloCost:
     collectives: Dict[str, float] = field(default_factory=lambda: {
         k: 0.0 for k in COLLECTIVES})
     transcendentals: float = 0.0
+    #: flops from dot/convolution ops only -- the GEMM term the analytic
+    #: combine_cost models, so WorkloadReports can be cross-checked against
+    #: compiled HLO without the (platform-dependent) scatter lowering noise
+    dot_flops: float = 0.0
 
     def __add__(self, o: "HloCost") -> "HloCost":
         return HloCost(
@@ -158,13 +162,15 @@ class HloCost:
             self.bytes_accessed + o.bytes_accessed,
             self.collective_bytes + o.collective_bytes,
             {k: self.collectives[k] + o.collectives[k] for k in COLLECTIVES},
-            self.transcendentals + o.transcendentals)
+            self.transcendentals + o.transcendentals,
+            self.dot_flops + o.dot_flops)
 
     def scale(self, k: float) -> "HloCost":
         return HloCost(self.flops * k, self.bytes_accessed * k,
                        self.collective_bytes * k,
                        {kk: v * k for kk, v in self.collectives.items()},
-                       self.transcendentals * k)
+                       self.transcendentals * k,
+                       self.dot_flops * k)
 
 
 _CALLED = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
@@ -341,6 +347,7 @@ class Analyzer:
                         if idx < len(lhs_dims):
                             kdim *= lhs_dims[idx]
             c.flops += 2.0 * res_elems * kdim
+            c.dot_flops += 2.0 * res_elems * kdim
             return c
 
         if op == "convolution":
@@ -352,6 +359,7 @@ class Analyzer:
             k_spatial = int(np.prod(shp[0][1][2:])) if shp and \
                 len(shp[0][1]) > 2 else 1
             c.flops += 2.0 * res_elems * max(1, k_spatial)
+            c.dot_flops += 2.0 * res_elems * max(1, k_spatial)
             return c
 
         if op in ("exponential", "tanh", "log", "rsqrt", "sqrt", "power",

@@ -39,6 +39,9 @@ Public surface:
   ``plan.run_phases(x, weights, ...)``      raw weight-list layer (the
                                             ``phase_ordered_layer`` path)
   ``plan.describe()`` / ``plan.layer_costs(i)``  decisions + analytic costs
+  ``plan.instrument(machine=...)``  characterization wrapper: one run_model
+                                    yields a typed WorkloadReport
+                                    (repro.profile.instrument)
 
 Layer APIs (``GCNModel.apply``, ``GCNConv.apply``, ``phase_ordered_layer``,
 the distributed example) all dispatch through plans; none of them takes raw
@@ -103,7 +106,7 @@ class GraphExecutionPlan:
     def __init__(self, g: Graph, layers: Sequence[LayerPlan], *,
                  interpret: bool, mesh=None, partition=None,
                  strategy: str = "ring", axis: str = "data",
-                 axes: Tuple[str, str] = ("node", "feat")):
+                 axes: Tuple[str, str] = ("node", "feat"), machine=None):
         self.g = g
         self.layers: Tuple[LayerPlan, ...] = tuple(layers)
         self.interpret = interpret
@@ -112,6 +115,7 @@ class GraphExecutionPlan:
         self.strategy = strategy
         self.axis = axis             # 1-D partition: the single mesh axis
         self.axes = axes             # 2-D partition: (node, feature) axes
+        self.machine = machine       # Optional[repro.profile.Machine]
 
     # -- properties ---------------------------------------------------------
 
@@ -164,18 +168,21 @@ class GraphExecutionPlan:
 
     # -- execution ----------------------------------------------------------
 
-    def run_layer(self, params: Dict, x: jnp.ndarray, *, layer: int = 0
-                  ) -> jnp.ndarray:
+    def run_layer(self, params: Dict, x: jnp.ndarray, *, layer: int = 0,
+                  _probe=None) -> jnp.ndarray:
         """One planned layer from its conv param subtree ({"lin": ...} or
         {"mlp1": ..., "mlp2": ...}).  In distributed plans ``x`` must be
         padded to the partition layout (``run_model`` handles this)."""
         lp = self.layers[layer]
         weights, bias_post = self._split_params(lp, params)
         if self.distributed:
-            return self._run_distributed(lp, x, weights, bias_post)
-        return _execute_layer(self.g, lp, x, weights, bias_post=bias_post)
+            return self._run_distributed(lp, x, weights, bias_post,
+                                         probe=_probe)
+        return _execute_layer(self.g, lp, x, weights, bias_post=bias_post,
+                              probe=_probe)
 
-    def run_model(self, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    def run_model(self, params: Dict, x: jnp.ndarray, *,
+                  _probe=None) -> jnp.ndarray:
         """Full forward: planned layers with ReLU between them.
 
         Distributed plans accept ``x`` in the natural (V, F) layout and pad
@@ -195,7 +202,7 @@ class GraphExecutionPlan:
                                  self.partition.num_shards)
         h = x
         for i in range(self.num_layers):
-            h = self.run_layer(params[f"conv{i}"], h, layer=i)
+            h = self.run_layer(params[f"conv{i}"], h, layer=i, _probe=_probe)
             if i < self.num_layers - 1:
                 h = jax.nn.relu(h)
         if two_d:
@@ -204,7 +211,7 @@ class GraphExecutionPlan:
 
     def run_phases(self, x: jnp.ndarray, weights, *, layer: int = 0,
                    edge_weight=None, activation: str = "relu",
-                   bias_post=None) -> jnp.ndarray:
+                   bias_post=None, _probe=None) -> jnp.ndarray:
         """Raw weight-list execution (the ``phase_ordered_layer`` entry).
 
         ``weights`` is a list of (W, b) tuples with biases applied *inside*
@@ -213,9 +220,10 @@ class GraphExecutionPlan:
         """
         return _execute_layer(self.g, self.layers[layer], x, weights,
                               edge_weight=edge_weight, activation=activation,
-                              bias_post=bias_post)
+                              bias_post=bias_post, probe=_probe)
 
-    def _run_distributed(self, lp: LayerPlan, x, weights, bias_post):
+    def _run_distributed(self, lp: LayerPlan, x, weights, bias_post, *,
+                         probe=None):
         from repro.core.distributed import (distributed_gcn_layer,
                                             distributed_gcn_layer_2d)
         (w, b_inline), = weights  # build_plan guarantees single-matmul layers
@@ -223,12 +231,43 @@ class GraphExecutionPlan:
         if bias is None:
             bias = jnp.zeros((w.shape[1],), x.dtype)
         if self.partition_kind == "2d":
-            return distributed_gcn_layer_2d(
+            thunk = lambda: distributed_gcn_layer_2d(  # noqa: E731
                 self.partition, x, w, bias, self.g.in_deg, self.mesh,
                 order=lp.order, strategy=self.strategy, axes=self.axes)
-        return distributed_gcn_layer(
-            self.partition, x, w, bias, self.g.in_deg, self.mesh,
-            order=lp.order, strategy=self.strategy, axis=self.axis)
+        else:
+            thunk = lambda: distributed_gcn_layer(  # noqa: E731
+                self.partition, x, w, bias, self.g.in_deg, self.mesh,
+                order=lp.order, strategy=self.strategy, axis=self.axis)
+        # halo feature length: what the exchange moves under this ordering
+        agg_len = lp.din if lp.order == AGGREGATE_FIRST else lp.dout
+        return _phase(probe, "distributed", thunk, lp=lp,
+                      feature_len=agg_len)
+
+    def instrument(self, machine=None, warmup: int = 0):
+        """Wrap this plan for characterization (``repro.profile``).
+
+        Returns an ``InstrumentedPlan`` whose ``run_model`` / ``run_layer``
+        / ``run_phases`` execute the SAME dispatch path as this plan while
+        recording per-layer, per-phase FLOPs / bytes / wall time into a
+        ``WorkloadReport`` (with ``to_json()`` / ``to_markdown()``).
+
+        ``machine`` is a ``repro.profile.Machine`` (or registry name, e.g.
+        ``"a100"``); defaults to the plan's own machine or the first layer
+        backend's natural preset.
+
+        Worked example (the one-call characterization path)::
+
+            >>> report = build_plan(g, cfg, in_dim, classes).instrument(
+            ...     machine=A100).run_model(params, x)
+            >>> report.output.shape            # the forward result
+            (220, 7)
+            >>> print(report.to_markdown())    # Table-3/4-style breakdown
+        """
+        from repro.profile.instrument import InstrumentedPlan
+        from repro.profile.machine import get_machine
+        if machine is not None:
+            machine = get_machine(machine)
+        return InstrumentedPlan(self, machine=machine, warmup=warmup)
 
     # -- introspection ------------------------------------------------------
 
@@ -287,36 +326,74 @@ def _can_fuse(lp: LayerPlan, weights, edge_weight) -> bool:
     return b0 is None or lp.order == AGGREGATE_FIRST or lp.agg_op == "mean"
 
 
+def _phase(probe, name: str, thunk, *, lp: LayerPlan, **meta):
+    """Run one phase, optionally observed by an instrumentation probe.
+
+    ``probe`` is the characterization hook (``repro.profile.instrument``):
+    None in production (zero overhead -- the thunk runs directly); when set,
+    ``probe.run`` times the phase and records its analytic cost.  Keeping
+    the hook HERE means reports always describe the dispatch path that
+    actually ran, not a parallel re-implementation.
+    """
+    if probe is None:
+        return thunk()
+    return probe.run(name, thunk, lp=lp, **meta)
+
+
 def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
                    edge_weight=None, activation: str = "relu",
-                   bias_post=None) -> jnp.ndarray:
+                   bias_post=None, probe=None) -> jnp.ndarray:
     """Execute one layer per its plan: fusion > ordering > backend."""
+    mlp_dims = tuple([int(w.shape[0]) for (w, _) in weights] +
+                     [int(weights[-1][0].shape[1])])
     if _can_fuse(lp, weights, edge_weight):
         w0, b0 = weights[0]
+        fused_dims = (int(w0.shape[0]), int(w0.shape[1]))
         if len(weights) == 1:
             # Whole layer fused: aggregate(+)combine never leaves the tile.
             # An inline b0 is exact applied post-aggregation here (that is
             # what _can_fuse admitted), so fold it into the final bias.
             bias = b0 if bias_post is None else (
                 bias_post if b0 is None else b0 + bias_post)
-            return fused_gcn_layer(lp.blocked, x, w0, bias,
-                                   agg_op=_fused_agg_op(lp), in_deg=g.in_deg,
-                                   backend=lp.backend)
+            return _phase(
+                probe, "fused_agg_combine",
+                lambda: fused_gcn_layer(lp.blocked, x, w0, bias,
+                                        agg_op=_fused_agg_op(lp),
+                                        in_deg=g.in_deg, backend=lp.backend),
+                lp=lp, dims=fused_dims)
         # Multi-layer MLP (GIN): fuse aggregation with the FIRST matmul --
         # exact because sum/mean aggregation is linear and the interior
         # nonlinearity only applies after that matmul.
-        h = fused_gcn_layer(lp.blocked, x, w0, b0, agg_op=_fused_agg_op(lp),
-                            in_deg=g.in_deg, backend=lp.backend)
+        h = _phase(
+            probe, "fused_agg_combine",
+            lambda: fused_gcn_layer(lp.blocked, x, w0, b0,
+                                    agg_op=_fused_agg_op(lp),
+                                    in_deg=g.in_deg, backend=lp.backend),
+            lp=lp, dims=fused_dims)
         h = phases._act(activation)(h)
-        h = phases.combine(h, weights[1:], activation=activation)
+        h = _phase(probe, "combine",
+                   lambda hh=h: phases.combine(hh, weights[1:],
+                                               activation=activation),
+                   lp=lp, dims=mlp_dims[1:])
     elif lp.order == COMBINE_FIRST:
-        h = phases.combine(x, weights, activation=activation)
-        h = phases.aggregate(g, h, op=lp.agg_op, edge_weight=edge_weight,
-                             include_self=lp.include_self, backend=lp.backend)
+        h = _phase(probe, "combine",
+                   lambda: phases.combine(x, weights, activation=activation),
+                   lp=lp, dims=mlp_dims)
+        h = _phase(probe, "aggregate",
+                   lambda hh=h: phases.aggregate(
+                       g, hh, op=lp.agg_op, edge_weight=edge_weight,
+                       include_self=lp.include_self, backend=lp.backend),
+                   lp=lp, feature_len=int(h.shape[-1]))
     else:
-        h = phases.aggregate(g, x, op=lp.agg_op, edge_weight=edge_weight,
-                             include_self=lp.include_self, backend=lp.backend)
-        h = phases.combine(h, weights, activation=activation)
+        h = _phase(probe, "aggregate",
+                   lambda: phases.aggregate(
+                       g, x, op=lp.agg_op, edge_weight=edge_weight,
+                       include_self=lp.include_self, backend=lp.backend),
+                   lp=lp, feature_len=int(x.shape[-1]))
+        h = _phase(probe, "combine",
+                   lambda hh=h: phases.combine(hh, weights,
+                                               activation=activation),
+                   lp=lp, dims=mlp_dims)
     if bias_post is not None:
         h = h + bias_post
     return h
@@ -380,21 +457,28 @@ def _cached_plan(g: Graph, spec_key, builder):
 
 def _plan_layer(g: Graph, index: int, kind: str, dims: Tuple[int, ...], *,
                 agg_op: str, ordering: str, backend: str, fused: bool,
-                include_self: bool = True) -> LayerPlan:
-    """Resolve one layer's ordering / backend / fusion decisions."""
+                include_self: bool = True, machine=None) -> LayerPlan:
+    """Resolve one layer's ordering / backend / fusion decisions.
+
+    ``machine`` (``repro.profile.Machine``, optional) parameterizes the two
+    hardware-aware decisions: the ordering cost model prices roofline time
+    on it and ``suggest_tile_m`` sizes the fused tile for its memory
+    hierarchy.  None keeps the tier's natural preset.
+    """
     semantic = AGGREGATE_FIRST if len(dims) > 2 else COMBINE_FIRST
     if ordering in (COMBINE_FIRST, AGGREGATE_FIRST):
         order = ordering if len(dims) <= 2 else AGGREGATE_FIRST  # GIN pinned
     else:
         order = choose_ordering(g, dims[0], dims[-1], agg_op=agg_op,
                                 n_mlp_layers=len(dims) - 1,
-                                semantic_order=semantic)
+                                semantic_order=semantic, machine=machine)
     backend = resolve_backend(backend)
     fused = bool(fused) and agg_op in ("sum", "mean")
     tile_m, blocked = 0, None
     if fused:
         avg_deg = g.num_edges / max(1, g.num_vertices)
-        tile_m = suggest_tile_m(dims[0], dims[1], avg_deg, backend=backend)
+        tile_m = suggest_tile_m(dims[0], dims[1], avg_deg, backend=backend,
+                                machine=machine)
         # a tile larger than the graph only pads; clamp to |V| rounded up,
         # keeping the tier's alignment (warp rows on GPU, sublanes on TPU)
         align = 32 if backend == PALLAS_GPU else 8
@@ -430,14 +514,17 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                backend: str = AUTO, fused: Optional[bool] = None,
                ordering: Optional[str] = None, mesh=None,
                num_shards: int = 0, strategy: str = "ring",
-               axis: str = "data", interpret: Optional[bool] = None
-               ) -> GraphExecutionPlan:
+               axis: str = "data", interpret: Optional[bool] = None,
+               machine=None) -> GraphExecutionPlan:
     """Plan a full model (``GCNModelConfig``) over one graph.
 
     Overrides: ``backend`` ("auto" resolves per platform -- see
     ``core.backend.resolve_backend``), ``fused`` / ``ordering`` (default
     from cfg), ``mesh`` (+ optionally ``num_shards``) for the shard
-    partition.  Plans are cached: calling again with the same graph and
+    partition, ``machine`` (a ``repro.profile.Machine`` or registry name:
+    parameterizes the hardware-aware decisions -- ordering cost model, fused
+    tile sizing -- and becomes the default for ``plan.instrument()``).
+    Plans are cached: calling again with the same graph and
     arguments returns the same plan object (and any rebuilt plan on the
     same graph reuses the cached BlockedGraph).
 
@@ -477,10 +564,13 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
     agg = cfg.aggregator
     use_fused = cfg.fused if fused is None else bool(fused)
     req_order = cfg.ordering if ordering is None else ordering
+    if machine is not None:
+        from repro.profile.machine import get_machine
+        machine = get_machine(machine)
     spec_key = (cfg.name, cfg.conv, agg, tuple(cfg.hidden_dims),
                 cfg.num_layers, int(in_dim), int(num_classes), backend,
                 use_fused, req_order, _mesh_key(mesh), num_shards, strategy,
-                axis, interpret)
+                axis, interpret, machine.name if machine else None)
 
     def builder():
         axes = ("node", "feat")
@@ -515,13 +605,13 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                 else (d, dout)
             layers.append(_plan_layer(
                 g, i, cfg.conv, dims, agg_op=agg, ordering=req_order,
-                backend=lay_backend, fused=lay_fused))
+                backend=lay_backend, fused=lay_fused, machine=machine))
             d = dout
         return GraphExecutionPlan(
             g, layers, interpret=_plan_interpret(interpret,
                                                  layers[0].backend),
             mesh=mesh, partition=partition, strategy=strategy, axis=axis,
-            axes=axes)
+            axes=axes, machine=machine)
 
     return _cached_plan(g, spec_key, builder)
 

@@ -25,6 +25,7 @@ from typing import Optional
 
 from repro.core.phases import aggregate_cost, combine_cost
 from repro.graph.structure import Graph
+from repro.profile.machine import Machine
 
 COMBINE_FIRST = "combine_first"
 AGGREGATE_FIRST = "aggregate_first"
@@ -65,6 +66,23 @@ def ordering_cost(g: Graph, in_len: int, out_len: int, order: str,
         halo_bytes_per_remote_edge=agg_len * dtype_bytes)
 
 
+def ordering_time(oc: OrderingCost, machine: Machine) -> float:
+    """Roofline-modeled seconds for one layer under ``machine``.
+
+    Each phase is ``max(compute, memory)`` time against the machine's peaks
+    and the phases serialize (no inter-phase overlap -- exactly the missed
+    dataflow the paper's F5 fuses away), so this is the cost the planner
+    minimizes when a ``Machine`` is supplied: on a balance-240 TPU the same
+    byte counts price differently than on the paper's balance-17 V100, but
+    the *ordering* decision is driven by the aggregation term either way.
+    """
+    agg = max(oc.agg_flops / machine.peak_flops,
+              oc.agg_bytes / machine.hbm_bw)
+    comb = max(oc.comb_flops / machine.peak_flops,
+               oc.comb_bytes / machine.hbm_bw)
+    return agg + comb
+
+
 def reduction_ratios(g: Graph, in_len: int, out_len: int) -> dict:
     """Paper Table 4's three reduction ratios, analytically."""
     cf = ordering_cost(g, in_len, out_len, COMBINE_FIRST)
@@ -89,16 +107,24 @@ def swap_is_legal(agg_op: str, n_mlp_layers: int) -> bool:
 
 def choose_ordering(g: Graph, in_len: int, out_len: int, agg_op: str = "mean",
                     n_mlp_layers: int = 1,
-                    semantic_order: Optional[str] = None) -> str:
+                    semantic_order: Optional[str] = None,
+                    machine: Optional[Machine] = None) -> str:
     """Pick the cheaper legal ordering for one layer.
 
     ``semantic_order`` is the order the model *definition* implies (GIN:
     aggregate_first).  If swapping is illegal we honor it; otherwise we pick
-    by modeled aggregation bytes -- i.e. combine_first iff out_len < in_len.
+    by modeled cost: with a ``machine`` (``repro.profile.Machine``) the
+    roofline-priced ``ordering_time``, without one the total byte count --
+    i.e. combine_first iff out_len < in_len.  Both criteria agree whenever
+    the aggregation phase is memory-bound (it always is, Table 3), so the
+    machine only changes the *margin*, never flips a legal decision.
     """
     base = semantic_order or COMBINE_FIRST
     if not swap_is_legal(agg_op, n_mlp_layers):
         return base
     cf = ordering_cost(g, in_len, out_len, COMBINE_FIRST)
     af = ordering_cost(g, in_len, out_len, AGGREGATE_FIRST)
+    if machine is not None:
+        return COMBINE_FIRST if ordering_time(cf, machine) <= \
+            ordering_time(af, machine) else AGGREGATE_FIRST
     return COMBINE_FIRST if cf.total_bytes <= af.total_bytes else AGGREGATE_FIRST

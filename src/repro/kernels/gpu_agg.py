@@ -26,7 +26,8 @@ the memory hierarchies differ:
   * **Occupancy-aware tiling.**  ``tile_m`` defaults come from
     ``core.dataflow.suggest_tile_m(..., backend="pallas-gpu")``, which fits
     the working set into a *fraction* of the SM's shared-memory carveout
-    (``GPU_SMEM_PER_SM / GPU_TARGET_CTAS_PER_SM``) instead of the TPU's
+    (the A100 Machine preset's ``on_chip_bytes / target_ctas`` --
+    ``repro.profile.machine``) instead of the TPU's
     half-VMEM budget: a GPU hides HBM latency with multiple resident CTAs,
     not one giant tile.
   * **Fused epilogue.**  The fused variant multiplies the register
@@ -105,7 +106,7 @@ def seg_agg_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
       tile_m:    output rows per block (static; warp-multiple).
       tile_e:    edge chunk per ``fori_loop`` step (static; emax must be a
                  multiple -- smaller than the TPU default because the chunk
-                 slab shares the SM with ``GPU_TARGET_CTAS_PER_SM`` peers).
+                 slab shares the SM with ``A100.target_ctas`` peers).
       interpret: None = auto (compiled on GPU, interpreted elsewhere --
                  ``core.backend.interpret_for("pallas-gpu")``).
 

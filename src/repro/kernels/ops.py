@@ -18,8 +18,8 @@ import numpy as np
 from repro.core.backend import PALLAS_GPU, PALLAS_TPU
 from repro.core.backend import default_interpret as _interpret
 from repro.core.backend import interpret_for, resolve_backend
-from repro.core.characterize import VMEM_BYTES
 from repro.kernels import ref as kref
+from repro.profile.machine import machine_for_backend
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_agg_combine import fused_agg_combine_blocked
 from repro.kernels.gpu_agg import (fused_agg_combine_gpu_blocked,
@@ -111,12 +111,13 @@ def fused_agg_combine(src, dst_local, mask, x, w, *, tile_m: int,
     f_in, f_out = w.shape
     if tile_e == 0:
         if backend == PALLAS_GPU:
-            # edge chunk shares the SM with GPU_TARGET_CTAS_PER_SM peers;
+            # edge chunk shares the SM with A100.target_ctas peers;
             # keep the (tile_e, F_in) slab small and warp-aligned
             tile_e = 128
         else:
-            # VMEM budget: rows chunk + W + acc within half VMEM.
-            budget = VMEM_BYTES // 2
+            # VMEM budget: rows chunk + W + acc within half VMEM
+            # (the TPU tier's Machine tile budget).
+            budget = machine_for_backend(backend).tile_budget()
             fixed = (f_in * f_out + tile_m * f_in + tile_m * f_out) * 4
             tile_e = max(256, min(2048, (budget - fixed) // max(f_in * 4, 1)))
             tile_e = max(256, (tile_e // 256) * 256)

@@ -1,0 +1,224 @@
+"""Declarative benchmark specs + the ONE harness that executes them.
+
+Every ``benchmarks/bench_*.py`` module used to hand-roll the same three
+halves: build a scaled graph, time jitted callables, print ad-hoc CSV rows.
+This module owns all three.  A benchmark is now a ``BenchSpec`` -- one
+(graph x machine x sweep axis) declaration plus a ``measure`` callback that
+only computes and emits -- and ``run_specs`` executes any list of them:
+
+  * scaled-graph construction, cached per (dataset, size) across specs,
+  * warmup/timing (``ctx.time``; a no-op returning 0.0 under ``--dry-run``),
+  * row collection, stdout echo, and the CSV artifact (``write_csv``:
+    header row, stable column order) that ``experiments/make_tables.py``
+    reads instead of re-parsing stdout,
+  * dry-run participation (``BenchSpec.dry``): "run" specs validate their
+    scenarios without timing, "skip" specs are reported and skipped.
+
+Wall-clock conventions are unchanged from the old ``benchmarks/common.py``:
+CPU times are correctness-shaped observables (relative effects), never
+accelerator predictions -- those come from the analytic columns and the
+dry-run roofline artifacts.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.profile.machine import Machine, TPU_V5E
+
+#: where benchmark CSV artifacts land (owned HERE, next to the writer --
+#: benchmarks/run.py and experiments/make_tables.py import it rather than
+#: re-deriving the path)
+BENCH_ARTIFACT_DIR = (Path(__file__).resolve().parents[3] /
+                      "experiments" / "bench")
+
+# ---------------------------------------------------------------------------
+# Timing + rows + CSV (the shared halves every bench module used to copy)
+# ---------------------------------------------------------------------------
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of ``fn(*args)``; blocks on result leaves."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def make_row(name: str, us_per_call: float, **derived) -> Dict[str, Any]:
+    row = {"name": name, "us_per_call": round(us_per_call, 2)}
+    row.update(derived)
+    return row
+
+
+def format_row(row: Dict[str, Any]) -> str:
+    """The harness's stdout echo: ``name,us,k=v,...`` (legacy format)."""
+    extras = ",".join(f"{k}={v}" for k, v in row.items()
+                      if k not in ("name", "us_per_call"))
+    return f"{row['name']},{row['us_per_call']},{extras}"
+
+
+def csv_columns(rows: List[Dict[str, Any]]) -> List[str]:
+    """Stable column order: name, us_per_call, then sorted derived keys."""
+    keys = sorted({k for r in rows for k in r}
+                  - {"name", "us_per_call"})
+    return ["name", "us_per_call"] + keys
+
+
+def write_csv(rows: List[Dict[str, Any]], path) -> Optional[Path]:
+    """Write rows as a real CSV artifact: header row, stable column order,
+    empty cells for missing keys.  Returns the path (None if no rows)."""
+    if not rows:
+        return None
+    import csv
+
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    cols = csv_columns(rows)
+    with path.open("w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=cols, restval="",
+                           extrasaction="raise")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Scaled datasets (cached across specs within a process)
+# ---------------------------------------------------------------------------
+
+_GRAPH_CACHE: Dict[Tuple[str, int, int], Tuple[Any, Any, Any]] = {}
+
+
+def bench_graph(name: str, max_vertices: int = 8192,
+                max_feature: int = 100000):
+    """Scaled dataset spec preserving |E|/|V| and feature length (capped)."""
+    from repro.config import GRAPHS, reduced_graph
+    return reduced_graph(GRAPHS[name], max_vertices, max_feature)
+
+
+def _graph_for(name: str, max_vertices: int, max_feature: int):
+    key = (name, max_vertices, max_feature)
+    hit = _GRAPH_CACHE.get(key)
+    if hit is None:
+        from repro.graph.datasets import make_features, make_synthetic_graph
+        spec = bench_graph(name, max_vertices, max_feature)
+        g = make_synthetic_graph(spec)
+        x = make_features(spec)
+        hit = _GRAPH_CACHE[key] = (spec, g, x)
+    return hit
+
+
+# ---------------------------------------------------------------------------
+# BenchSpec + BenchContext + run_specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BenchSpec:
+    """One declarative benchmark: graph x machine x sweep axis.
+
+    ``measure(ctx, point)`` is called once per sweep point with a
+    ``BenchContext``; it computes and calls ``ctx.emit`` / ``ctx.time`` --
+    no timing or CSV code of its own.  ``setup(ctx)`` (optional) runs once
+    per spec; its return value is available as ``ctx.state``.
+
+    ``dry`` declares dry-run behavior: "run" = execute measure with timing
+    disabled (scenario validation, the smoke gate), "skip" = report and
+    skip (timing-only specs).  ``dry_max_vertices`` optionally shrinks the
+    graph under dry-run so validation stays fast.
+    """
+
+    name: str
+    measure: Callable[["BenchContext", Any], None]
+    graph: Optional[str] = None
+    max_vertices: int = 8192
+    max_feature: int = 100000
+    machine: Machine = TPU_V5E
+    sweep: Tuple = (None,)
+    dry: str = "skip"                       # "run" | "skip"
+    dry_max_vertices: Optional[int] = None
+    setup: Optional[Callable[["BenchContext"], Any]] = None
+
+    def __post_init__(self):
+        assert self.dry in ("run", "skip"), self.dry
+
+
+@dataclass
+class BenchContext:
+    """What a ``measure`` callback sees: data, machine, emit, time."""
+
+    bench: BenchSpec
+    machine: Machine
+    dry: bool
+    rows: List[Dict[str, Any]] = field(default_factory=list)
+    spec: Any = None          # GraphSpec (None for graph-less specs)
+    g: Any = None             # Graph
+    x: Any = None             # features
+    state: Any = None         # BenchSpec.setup result
+
+    def emit(self, name: str, us_per_call: float, **derived
+             ) -> Dict[str, Any]:
+        """Record one result row (echoed to stdout, lands in the CSV)."""
+        row = make_row(name, us_per_call, **derived)
+        self.rows.append(row)
+        print(format_row(row))
+        return row
+
+    def time(self, fn: Callable, *args, warmup: int = 2,
+             iters: int = 5) -> float:
+        """Median wall time (us); 0.0 without executing under dry-run."""
+        if self.dry:
+            return 0.0
+        return timeit(fn, *args, warmup=warmup, iters=iters)
+
+
+def _context(spec: BenchSpec, dry: bool) -> BenchContext:
+    ctx = BenchContext(bench=spec, machine=spec.machine, dry=dry)
+    if spec.graph is not None:
+        mv = spec.max_vertices
+        if dry and spec.dry_max_vertices:
+            mv = min(mv, spec.dry_max_vertices)
+        ctx.spec, ctx.g, ctx.x = _graph_for(spec.graph, mv,
+                                            spec.max_feature)
+    return ctx
+
+
+def run_specs(specs: List[BenchSpec], dry: bool = False,
+              csv=None) -> List[Dict[str, Any]]:
+    """Execute specs through the shared harness; returns all emitted rows.
+
+    Under ``dry=True`` only specs declaring ``dry="run"`` execute (with
+    ``ctx.time`` disabled); the rest are reported as skipped.  ``csv``
+    names the artifact ``write_csv`` produces from the collected rows
+    (the file ``experiments/make_tables.py::bench_tables`` consumes).
+    """
+    all_rows: List[Dict[str, Any]] = []
+    for spec in specs:
+        if dry and spec.dry == "skip":
+            print(f"# skipped: {spec.name} (timing-only spec under dry-run)")
+            continue
+        ctx = _context(spec, dry)
+        if spec.setup is not None:
+            ctx.state = spec.setup(ctx)
+        for point in spec.sweep:
+            spec.measure(ctx, point)
+        all_rows.extend(ctx.rows)
+    if csv is not None:
+        p = write_csv(all_rows, csv)
+        if p is not None:
+            print(f"# csv artifact: {p}")
+    return all_rows

@@ -1,0 +1,418 @@
+"""InstrumentedPlan / WorkloadReport: one forward pass -> Table-3/4 breakdown.
+
+``plan.instrument(machine=A100)`` wraps a ``GraphExecutionPlan`` so that one
+``run_model`` call records, per layer and per *executed* phase, what the
+paper's Tables 3-5 tabulate: phase name, backend tier, ordering, analytic
+FLOPs / bytes / arithmetic intensity, collective bytes (distributed plans),
+and measured wall time -- into a typed ``WorkloadReport`` with ``to_json()``
+and ``to_markdown()`` renderers.
+
+The records come from a probe threaded through the SAME dispatch code the
+plan replays in production (``core.plan._execute_layer``), not a parallel
+re-implementation -- so ``WorkloadReport.mismatches(plan)`` is a real
+regression guard: it cross-checks the decisions ``plan.describe()`` *claims*
+against the phases that actually executed (ordering from the phase sequence,
+backend from the aggregation record, fusion from whether the fused phase
+ran).
+
+Wall times follow the repo-wide convention (benchmarks/common.py): on CPU
+they are correctness-shaped observables, not accelerator predictions; the
+analytic FLOP/byte columns are machine-independent and exact.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.profile.machine import Machine, machine_for_backend
+
+_DTYPE_BYTES = 4  # the framework's f32 feature convention
+
+#: every phase name a record may carry (schema-validated)
+PHASES = ("aggregate", "combine", "fused_agg_combine", "distributed")
+
+SCHEMA = "repro.profile/workload-report"
+SCHEMA_VERSION = 1
+
+
+class WorkloadReportError(ValueError):
+    """A WorkloadReport violated its schema (empty/ill-typed records)."""
+
+
+@dataclass(frozen=True)
+class PhaseRecord:
+    """One executed phase of one layer, with analytic costs + wall time.
+
+    ``feature_len`` is the feature length the phase actually moved (for
+    aggregation phases this is the paper's Table-4 variable: dout under
+    combine-first, din under aggregate-first).  ``bound`` classifies the
+    phase's arithmetic intensity against the report's Machine balance.
+    """
+
+    layer: int
+    phase: str              # one of PHASES
+    order: str
+    backend: str
+    fused: bool
+    feature_len: int
+    flops: float
+    bytes: float
+    collective_bytes: float
+    wall_time_s: float
+    bound: str              # "memory" | "compute" vs the report's Machine
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1.0, self.bytes)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "layer": self.layer, "phase": self.phase, "order": self.order,
+            "backend": self.backend, "fused": self.fused,
+            "feature_len": self.feature_len, "flops": self.flops,
+            "bytes": self.bytes,
+            "arithmetic_intensity": self.arithmetic_intensity,
+            "collective_bytes": self.collective_bytes,
+            "wall_time_s": self.wall_time_s, "bound": self.bound,
+        }
+
+
+class _Probe:
+    """Threaded through ``core.plan._execute_layer`` to observe dispatch.
+
+    ``run(name, thunk, lp=..., **meta)`` executes the phase, blocks on its
+    result for a wall time, derives the phase's analytic cost from the
+    graph + layer plan, and appends a PhaseRecord.  Record order IS
+    execution order (the ordering consistency check depends on that).
+    """
+
+    def __init__(self, plan, machine: Machine):
+        self.plan = plan
+        self.machine = machine
+        self.records: List[PhaseRecord] = []
+
+    def run(self, name: str, thunk, *, lp, **meta):
+        from repro.core.backend import resolve_backend
+        t0 = time.perf_counter()
+        out = thunk()
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        flops, byt, coll, flen = self._cost(name, lp, meta)
+        ai = flops / max(1.0, byt)
+        # backend as the dispatch layer resolves it at call time (the same
+        # resolution phases.aggregate applies) -- NOT lp.backend verbatim,
+        # so a plan that regressed to storing an unresolved alias ("auto" /
+        # "pallas") is caught by mismatches() as describe-vs-dispatch drift
+        self.records.append(PhaseRecord(
+            layer=lp.index, phase=name, order=lp.order,
+            backend=resolve_backend(lp.backend) if name != "combine"
+            else "xla",
+            fused=(name == "fused_agg_combine"),
+            feature_len=int(flen), flops=float(flops), bytes=float(byt),
+            collective_bytes=float(coll), wall_time_s=float(dt),
+            bound=self.machine.classify(ai)))
+        return out
+
+    # -- analytic per-phase costs (same models the scheduler prices) --------
+
+    def _cost(self, name, lp, meta):
+        from repro.core.phases import aggregate_cost, combine_cost
+        g = self.plan.g
+        v = g.num_vertices
+        if name == "aggregate":
+            flen = meta["feature_len"]
+            c = aggregate_cost(g, flen, include_self=lp.include_self)
+            return c["flops"], c["bytes"], 0.0, flen
+        if name == "combine":
+            dims = meta["dims"]
+            c = combine_cost(v, dims)
+            return c["flops"], c["bytes"], 0.0, dims[-1]
+        if name == "fused_agg_combine":
+            # aggregate + first matmul in one tile: the (V, din) intermediate
+            # never round-trips HBM, so its write+read bytes are subtracted.
+            din, dout = meta["dims"]
+            agg = aggregate_cost(g, din, include_self=lp.include_self)
+            comb = combine_cost(v, (din, dout))
+            saved = 2 * v * din * _DTYPE_BYTES
+            byt = max(agg["bytes"] + comb["bytes"] - saved, 1)
+            return agg["flops"] + comb["flops"], byt, 0.0, din
+        if name == "distributed":
+            # whole layer behind shard_map; collective term from the halo
+            # model at the feature length the exchange actually moves.
+            flen = meta["feature_len"]
+            agg = aggregate_cost(g, flen, include_self=lp.include_self)
+            comb = combine_cost(v, lp.dims)
+            coll = self._halo_bytes(flen)
+            return (agg["flops"] + comb["flops"],
+                    agg["bytes"] + comb["bytes"], coll, flen)
+        raise ValueError(f"unknown phase {name!r}")
+
+    def _halo_bytes(self, feature_len: int) -> float:
+        from repro.core.distributed import halo_bytes, halo_bytes_2d
+        if self.plan.partition_kind == "2d":
+            return float(halo_bytes_2d(self.plan.partition,
+                                       feature_len)["min_halo_bytes"])
+        if self.plan.partition_kind == "1d":
+            return float(halo_bytes(self.plan.partition,
+                                    feature_len)["min_halo_bytes"])
+        return 0.0
+
+
+# ---------------------------------------------------------------------------
+# WorkloadReport
+# ---------------------------------------------------------------------------
+
+
+_FIELD_TYPES = {
+    "layer": int, "phase": str, "order": str, "backend": str, "fused": bool,
+    "feature_len": int, "flops": (int, float), "bytes": (int, float),
+    "arithmetic_intensity": (int, float), "collective_bytes": (int, float),
+    "wall_time_s": (int, float), "bound": str,
+}
+
+
+def validate_report_dict(d: Dict[str, Any]) -> List[str]:
+    """Structural validation of a report in dict form; returns problems.
+
+    Works on freshly rendered ``to_dict()`` output AND on deserialized
+    ``to_json()`` artifacts -- the totals-vs-phases cross-check is only
+    meaningful for the latter (a live report recomputes totals from its
+    records, a JSON file can be edited or truncated independently).
+    """
+    problems: List[str] = []
+    if d.get("schema") != SCHEMA or d.get("version") != SCHEMA_VERSION:
+        problems.append("schema header mismatch")
+    phases_list = d.get("phases", [])
+    if not phases_list:
+        problems.append("empty phase records")
+    for i, rec in enumerate(phases_list):
+        for k, t in _FIELD_TYPES.items():
+            if k not in rec:
+                problems.append(f"phases[{i}]: missing field {k!r}")
+            elif not isinstance(rec[k], t) or isinstance(rec[k], bool) \
+                    and t is not bool:
+                problems.append(
+                    f"phases[{i}].{k}: bad type {type(rec[k]).__name__}")
+        if rec.get("phase") not in PHASES:
+            problems.append(f"phases[{i}]: unknown phase "
+                            f"{rec.get('phase')!r}")
+        if rec.get("bound") not in ("memory", "compute"):
+            problems.append(f"phases[{i}]: bad bound {rec.get('bound')!r}")
+        for k in ("flops", "bytes", "collective_bytes", "wall_time_s"):
+            if isinstance(rec.get(k), (int, float)) and rec[k] < 0:
+                problems.append(f"phases[{i}].{k}: negative")
+    tot = d.get("totals", {})
+    for k in ("flops", "bytes", "collective_bytes"):
+        if k not in tot:
+            problems.append(f"totals.{k}: missing")
+            continue
+        s = sum(r[k] for r in phases_list
+                if isinstance(r.get(k), (int, float)))
+        if abs(s - tot[k]) > 1e-6 * max(1.0, abs(s)):
+            problems.append(f"totals.{k} != sum of phases")
+    return problems
+
+
+@dataclass
+class WorkloadReport:
+    """Typed per-phase characterization of one instrumented forward pass.
+
+    ``records`` are in execution order.  ``output`` carries the forward
+    result (so ``plan.instrument(...).run_model(...)`` is one call that
+    yields BOTH the model output and the report); it is excluded from
+    ``to_dict``/``to_json``.
+    """
+
+    machine: Machine
+    plan_summary: Dict[str, Any]
+    records: List[PhaseRecord]
+    output: Any = None
+
+    # -- aggregation ---------------------------------------------------------
+
+    def totals(self) -> Dict[str, float]:
+        """Summed FLOPs / bytes / collective bytes / wall time over phases."""
+        return {
+            "flops": sum(r.flops for r in self.records),
+            "bytes": sum(r.bytes for r in self.records),
+            "collective_bytes": sum(r.collective_bytes
+                                    for r in self.records),
+            "wall_time_s": sum(r.wall_time_s for r in self.records),
+        }
+
+    def layer_records(self, layer: int) -> List[PhaseRecord]:
+        return [r for r in self.records if r.layer == layer]
+
+    # -- renderers -----------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        m = self.machine
+        return {
+            "schema": SCHEMA,
+            "version": SCHEMA_VERSION,
+            "machine": {"name": m.name, "kind": m.kind,
+                        "peak_flops": m.peak_flops, "hbm_bw": m.hbm_bw,
+                        "balance": m.balance},
+            "plan": dict(self.plan_summary),
+            "phases": [r.to_dict() for r in self.records],
+            "totals": self.totals(),
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        """Stable JSON rendering (sorted keys) of ``to_dict``."""
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    def to_markdown(self) -> str:
+        """Paper-style per-phase breakdown table (Tables 3/4 in one view)."""
+        m = self.machine
+        tot = self.totals()
+        t_all = max(tot["wall_time_s"], 1e-12)
+        lines = [
+            f"## Workload report — {m.name}",
+            "",
+            f"Machine: {m.name} ({m.kind}): peak "
+            f"{m.peak_flops / 1e12:.1f} TFLOP/s, HBM "
+            f"{m.hbm_bw / 1e9:.0f} GB/s, balance {m.balance:.1f} FLOP/B",
+            f"Plan: {self.plan_summary.get('num_layers', '?')} layer(s), "
+            f"partition={self.plan_summary.get('partition', 'none')}, "
+            f"interpret={self.plan_summary.get('interpret')}",
+            "",
+            "| layer | phase | order | backend | FLOPs | bytes | AI (F/B) "
+            "| bound | collective B | time (us) | time % |",
+            "|---|---|---|---|---|---|---|---|---|---|---|",
+        ]
+        for r in self.records:
+            lines.append(
+                f"| {r.layer} | {r.phase} | {r.order} | {r.backend} | "
+                f"{r.flops:.3e} | {r.bytes:.3e} | "
+                f"{r.arithmetic_intensity:.2f} | {r.bound} | "
+                f"{r.collective_bytes:.3g} | {r.wall_time_s * 1e6:.1f} | "
+                f"{100 * r.wall_time_s / t_all:.1f} |")
+        lines.append(
+            f"| total |  |  |  | {tot['flops']:.3e} | {tot['bytes']:.3e} | "
+            f"{tot['flops'] / max(1.0, tot['bytes']):.2f} |  | "
+            f"{tot['collective_bytes']:.3g} | "
+            f"{tot['wall_time_s'] * 1e6:.1f} | 100.0 |")
+        return "\n".join(lines)
+
+    # -- validation ----------------------------------------------------------
+
+    def validate(self) -> "WorkloadReport":
+        """Raise ``WorkloadReportError`` on schema violations.
+
+        Checked (``validate_report_dict``): non-empty phase records, every
+        record field present with the right type, phase/bound vocabulary,
+        non-negative costs, totals consistent with the records.  Returns
+        self so call sites can chain
+        (``plan.instrument().run_model(p, x).validate()``).
+        """
+        problems = validate_report_dict(self.to_dict())
+        if problems:
+            raise WorkloadReportError(
+                "WorkloadReport schema violations: " + "; ".join(problems))
+        return self
+
+    def mismatches(self, plan) -> List[str]:
+        """Cross-check ``plan.describe()`` against the dispatched phases.
+
+        What is genuinely *observed* (not copied from the plan) and
+        therefore guarded: the executed phase sequence (ordering -- the
+        combine/aggregate records are appended in execution order),
+        whether the fused path actually ran (``run_phases`` with an inline
+        bias may legitimately fall back at call time -- that fallback is
+        exactly the drift this reports; model-path plans must always come
+        back clean), and the call-time backend *resolution* (a plan
+        storing an unresolved "auto"/"pallas" alias disagrees with what
+        dispatch resolves).  Kernel-entry tier selection below this layer
+        is covered by tests/test_plan.py's mocked-platform tests, not
+        here.  Empty list == describe() is truthful.
+        """
+        out: List[str] = []
+        for d in plan.describe():
+            recs = self.layer_records(d["layer"])
+            if not recs:
+                continue
+            seq = [r.phase for r in recs]
+            fused_ran = "fused_agg_combine" in seq
+            if bool(d["fused"]) != fused_ran:
+                out.append(f"layer {d['layer']}: describe fused={d['fused']} "
+                           f"but executed phases {seq}")
+            agg = [r for r in recs
+                   if r.phase in ("aggregate", "fused_agg_combine",
+                                  "distributed")]
+            for r in agg:
+                if r.backend != d["backend"]:
+                    out.append(f"layer {d['layer']}: describe backend="
+                               f"{d['backend']} but {r.phase} used "
+                               f"{r.backend}")
+            if not fused_ran and "aggregate" in seq and "combine" in seq:
+                observed = ("combine_first"
+                            if seq.index("combine") < seq.index("aggregate")
+                            else "aggregate_first")
+                if observed != d["order"]:
+                    out.append(f"layer {d['layer']}: describe order="
+                               f"{d['order']} but executed {seq}")
+        return out
+
+
+# ---------------------------------------------------------------------------
+# InstrumentedPlan
+# ---------------------------------------------------------------------------
+
+
+class InstrumentedPlan:
+    """A ``GraphExecutionPlan`` whose runs yield ``WorkloadReport``s.
+
+    Built by ``plan.instrument(machine=...)``; ``machine`` defaults to the
+    plan's own (``build_plan(..., machine=)``) or the first layer backend's
+    natural preset.  Each ``run_*`` executes the plan's REAL dispatch path
+    eagerly (per-phase wall times need phase boundaries, so no whole-model
+    jit) and returns a fresh report whose ``.output`` is the forward result.
+    """
+
+    def __init__(self, plan, machine: Optional[Machine] = None,
+                 warmup: int = 0):
+        self.plan = plan
+        self.machine = machine or getattr(plan, "machine", None) or \
+            machine_for_backend(plan.layers[0].backend)
+        self.warmup = warmup
+
+    def _summary(self) -> Dict[str, Any]:
+        p = self.plan
+        return {
+            "num_layers": p.num_layers,
+            "partition": p.partition_kind,
+            "interpret": p.interpret,
+            "layers": p.describe(),
+        }
+
+    def _report(self, probe: _Probe, out) -> WorkloadReport:
+        return WorkloadReport(machine=self.machine,
+                              plan_summary=self._summary(),
+                              records=probe.records, output=out)
+
+    def run_model(self, params, x) -> WorkloadReport:
+        """Instrumented full forward; returns the WorkloadReport (the model
+        output rides along as ``report.output``)."""
+        for _ in range(self.warmup):
+            jax.block_until_ready(self.plan.run_model(params, x))
+        probe = _Probe(self.plan, self.machine)
+        out = self.plan.run_model(params, x, _probe=probe)
+        return self._report(probe, out)
+
+    def run_layer(self, params, x, *, layer: int = 0) -> WorkloadReport:
+        """Instrumented single layer (conv param subtree)."""
+        probe = _Probe(self.plan, self.machine)
+        out = self.plan.run_layer(params, x, layer=layer, _probe=probe)
+        return self._report(probe, out)
+
+    def run_phases(self, x, weights, **kw) -> WorkloadReport:
+        """Instrumented raw weight-list layer (``plan.run_phases``)."""
+        probe = _Probe(self.plan, self.machine)
+        out = self.plan.run_phases(x, weights, _probe=probe, **kw)
+        return self._report(probe, out)

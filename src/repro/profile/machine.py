@@ -1,0 +1,147 @@
+"""Machine: one dataclass describing the hardware a characterization targets.
+
+The paper characterizes GCNs on a V100 and derives guidelines from that
+machine's balance point; PRs 2-3 added a TPU tier and a GPU tier but left the
+hardware numbers as module-level constants in ``core/characterize.py`` (TPU
+v5e) plus a bag of ``GPU_*`` occupancy constants.  This module replaces both:
+every roofline term, bound classification, tile picker, and ordering cost
+model takes a ``Machine`` value instead of importing globals, so the same
+analysis runs against any accelerator by passing a different preset.
+
+Presets::
+
+    TPU_V5E   197 TFLOP/s bf16, 819 GB/s HBM, 4x50 GB/s ICI, 128 MiB VMEM
+    A100      312 TFLOP/s bf16, 1555 GB/s HBM, 12x25 GB/s NVLink,
+              192 KiB SMEM/L1 carveout per SM (the GPU occupancy model)
+    V100      15.7 TFLOP/s fp32, 900 GB/s HBM -- the PAPER's machine; its
+              balance point (~17.4 F/B) is the classification threshold
+              behind Table 3's "Execution Bound" row.
+
+``machine_for_backend`` maps a resolved backend tier (``core.backend``) to
+its natural preset so plan-level code can stay machine-implicit until a
+caller overrides it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class Machine:
+    """Hardware description consumed by the characterization subsystem.
+
+    Attributes:
+      name: registry key ("tpu-v5e" | "a100" | "v100" | ...).
+      kind: accelerator family, "tpu" | "gpu" (selects the occupancy model
+        ``suggest_tile_m`` applies).
+      peak_flops: peak matmul FLOP/s at the native precision the repo
+        models (bf16 tensor/MXU for v5e/A100, fp32 CUDA cores for the
+        paper's V100 numbers).
+      hbm_bw: HBM bandwidth, bytes/s.
+      interconnect_bw: per-link chip interconnect bandwidth, bytes/s
+        (ICI link on TPU, NVLink lane on GPU).
+      interconnect_links: number of such links per chip.
+      on_chip_bytes: the fast scratch a fused tile must fit -- whole VMEM
+        on TPU, the unified SMEM/L1 carveout per SM on GPU.
+      regfile_bytes: register file per SM (GPU occupancy input; 0 on TPU).
+      target_ctas: resident CTAs per SM needed to hide HBM latency (GPU
+        occupancy input; 0 on TPU, where one sequential grid walks blocks).
+      row_align: natural row granularity of a tile (8 sublanes on TPU,
+        32 warp threads on GPU).
+      matrix_tile: systolic/tensor tile edge for pad-waste accounting
+        (128 MXU lanes on TPU).
+    """
+
+    name: str
+    kind: str
+    peak_flops: float
+    hbm_bw: float
+    interconnect_bw: float
+    interconnect_links: int
+    on_chip_bytes: int
+    regfile_bytes: int = 0
+    target_ctas: int = 0
+    row_align: int = 8
+    matrix_tile: int = 128
+
+    def __post_init__(self):
+        assert self.kind in ("tpu", "gpu"), self.kind
+
+    @property
+    def balance(self) -> float:
+        """Machine balance: FLOPs per HBM byte at which compute and memory
+        time are equal.  AI below this is memory-bound (paper Table 3)."""
+        return self.peak_flops / self.hbm_bw
+
+    @property
+    def interconnect_total(self) -> float:
+        """Aggregate interconnect bandwidth (all links), bytes/s."""
+        return self.interconnect_bw * self.interconnect_links
+
+    def tile_budget(self) -> int:
+        """On-chip bytes one fused tile may claim: half of VMEM on TPU
+        (the other half double-buffers), an SM-carveout share per resident
+        CTA on GPU (latency hiding comes from CTA count, not tile size)."""
+        if self.kind == "gpu":
+            return self.on_chip_bytes // max(1, self.target_ctas)
+        return self.on_chip_bytes // 2
+
+    def classify(self, arithmetic_intensity: float) -> str:
+        """"memory" | "compute" bound classification against this balance."""
+        return "memory" if arithmetic_intensity < self.balance else "compute"
+
+
+#: TPU v5e, per chip (the repo's default modeling target since PR 1).
+TPU_V5E = Machine(
+    name="tpu-v5e", kind="tpu",
+    peak_flops=197e12, hbm_bw=819e9,
+    interconnect_bw=50e9, interconnect_links=4,     # 2-D torus: +-x, +-y
+    on_chip_bytes=128 * 1024 * 1024,                # VMEM
+    row_align=8, matrix_tile=128)
+
+#: A100-SXM4 (bf16 tensor cores).  The occupancy fields are what the GPU
+#: tile picker consumes: per-SM SMEM/L1 carveout shared by ``target_ctas``
+#: resident blocks, warp-aligned rows.
+A100 = Machine(
+    name="a100", kind="gpu",
+    peak_flops=312e12, hbm_bw=1555e9,
+    interconnect_bw=25e9, interconnect_links=12,    # NVLink 3
+    on_chip_bytes=192 * 1024,                       # unified SMEM/L1 per SM
+    regfile_bytes=256 * 1024, target_ctas=4,
+    row_align=32, matrix_tile=16)
+
+#: V100 with the PAPER's numbers (fp32 CUDA-core peak / 900 GB/s HBM2):
+#: balance ~17.4 F/B, the threshold behind Table 3's bound classification.
+V100 = Machine(
+    name="v100", kind="gpu",
+    peak_flops=15.7e12, hbm_bw=900e9,
+    interconnect_bw=25e9, interconnect_links=6,     # NVLink 2
+    on_chip_bytes=128 * 1024,                       # unified SMEM/L1 per SM
+    regfile_bytes=256 * 1024, target_ctas=4,
+    row_align=32, matrix_tile=16)
+
+MACHINES: Dict[str, Machine] = {m.name: m for m in (TPU_V5E, A100, V100)}
+
+
+def get_machine(name_or_machine) -> Machine:
+    """Resolve a registry name (or pass a Machine through) to a Machine."""
+    if isinstance(name_or_machine, Machine):
+        return name_or_machine
+    try:
+        return MACHINES[name_or_machine]
+    except KeyError:
+        raise ValueError(f"unknown machine {name_or_machine!r}; "
+                         f"known: {sorted(MACHINES)}") from None
+
+
+def machine_for_backend(backend: Optional[str]) -> Machine:
+    """Natural Machine preset for a resolved backend tier.
+
+    ``pallas-gpu`` -> A100 (GPU occupancy math must never mix TPU balance
+    points -- the bug this replaces); everything else -> TPU_V5E, the repo's
+    default modeling target.  Callers wanting the paper's machine pass
+    ``V100`` explicitly.
+    """
+    return A100 if backend == "pallas-gpu" else TPU_V5E
