@@ -47,8 +47,13 @@ def main():
 
     print("\n== instrumented workload report (paper's V100) ==")
     plan = build_plan(g, model.cfg, spec.feature_len, spec.num_classes)
-    report = plan.instrument(machine=V100).run_model(params, x)
+    report = plan.instrument(machine=V100).run_model(params, x,
+                                                     compiled=True)
     print(report.to_markdown())
+
+    # the production path: ONE jitted callable, bit-for-bit == eager
+    fwd = plan.compile()
+    assert bool(jnp.array_equal(fwd(params, x), report.output))
 
     print("\n== training ==")
     loss_grad = jax.jit(jax.value_and_grad(

@@ -26,8 +26,13 @@ PUBLIC_SURFACE = {
         "GraphExecutionPlan", "GraphExecutionPlan.run_model",
         "GraphExecutionPlan.run_layer", "GraphExecutionPlan.run_phases",
         "GraphExecutionPlan.describe", "GraphExecutionPlan.layer_costs",
-        "GraphExecutionPlan.instrument",
+        "GraphExecutionPlan.instrument", "GraphExecutionPlan.compile",
+        "CompiledPlan",
     ],
+    "repro.graph.reorder": [
+        "degree_reorder", "choose_reorder", "reuse_distance_stats",
+    ],
+    "repro.kernels.ops": ["seg_agg", "seg_agg_planned"],
     "repro.core.backend": [
         "resolve_backend", "interpret_for", "default_interpret",
         "pallas_tier",
@@ -59,24 +64,30 @@ PUBLIC_SURFACE = {
 
 #: docstring must contain these substrings (entry point -> requirements)
 CONTENT_REQUIREMENTS = {
-    ("repro.core.plan", "build_plan"): [">>>", "mesh", "num_shards"],
+    ("repro.core.plan", "build_plan"): [">>>", "mesh", "num_shards",
+                                        "reorder", "degree", "auto"],
     ("repro.core.plan", "plan_for_conv"): [">>>"],
     ("repro.core.plan", "plan_for_phases"): [">>>"],
     ("repro.core.backend", "resolve_backend"): ["auto", "pallas-gpu",
                                                 "pallas-tpu"],
     ("repro.core.plan", "GraphExecutionPlan.instrument"): [
         ">>>", "WorkloadReport", "machine"],
+    ("repro.core.plan", "GraphExecutionPlan.compile"): [
+        ">>>", "donate", "retrace", "layer"],
+    ("repro.kernels.ops", "seg_agg"): ["seg_agg_planned", "host"],
 }
 
 REQUIRED_FILES = {
     ROOT / "README.md": ["Quickstart", "smoke.sh",
                          "test_ctx_parallel_attention_sharded"],
     ROOT / "docs" / "planner.md": ["decision table", "pallas-gpu",
-                                   "partition_2d", "characterization.md"],
+                                   "partition_2d", "characterization.md",
+                                   "plan.compile", "reorder",
+                                   "degree_reorder"],
     ROOT / "docs" / "characterization.md": [
         "Machine", "TPU_V5E", "A100", "V100", "WorkloadReport",
         "to_markdown", "BenchSpec", "instrument", "workload-report",
-        "balance"],
+        "balance", "compiled"],
 }
 
 MIN_DOC_LEN = 40  # a one-word docstring is not documentation

@@ -2,14 +2,18 @@
 # Pre-merge smoke check (the documented gate for every PR):
 #   1. tier-1 pytest (ROADMAP.md "Tier-1 verify"),
 #   2. the benchmark harness dry-run, which builds + validates the full
-#      backend x ordering x fusion x partition (1-D and 2-D) matrix through
-#      the GraphExecutionPlan -- every scenario runs INSTRUMENTED and emits
-#      a WorkloadReport that is schema-validated (empty phase records or
-#      violations fail) and cross-checked against plan.describe() (planner
-#      drift fails) -- and FAILS if any scenario in the matrix is skipped
-#      without a logged reason,
+#      backend x ordering x fusion x reorder x partition (1-D and 2-D)
+#      matrix through the GraphExecutionPlan -- every scenario runs
+#      INSTRUMENTED and emits a WorkloadReport that is schema-validated
+#      (empty phase records or violations fail) and cross-checked against
+#      plan.describe() (planner drift fails), every scenario ALSO checks
+#      the compiled contract (plan.compile() output bit-for-bit equal to
+#      eager dispatch, no retrace on the second call), the plan/compiled
+#      cells land the eager-vs-compiled speedup CSV under
+#      experiments/bench/ -- and the run FAILS if any scenario in the
+#      matrix is skipped without a logged reason,
 #   3. the docs gate (README + docs/planner.md + docs/characterization.md
-#      exist, public planner/profile symbols documented --
+#      exist, public planner/profile/reorder symbols documented --
 #      scripts/check_docs.py).
 #
 # Usage: scripts/smoke.sh [extra pytest args...]
@@ -26,8 +30,9 @@ python -m pytest -x -q \
   --deselect tests/test_distributed.py::test_ctx_parallel_attention_sharded \
   "$@"
 
-echo "== planner dry-run (backend x ordering x fusion x partition;"
-echo "   instrumented: one schema-validated WorkloadReport per scenario) =="
+echo "== planner dry-run (backend x ordering x fusion x reorder x partition;"
+echo "   instrumented: one schema-validated WorkloadReport per scenario,"
+echo "   compiled contract: bitwise eager equality + no retrace) =="
 python -m benchmarks.run --dry-run
 
 echo "== docs gate =="

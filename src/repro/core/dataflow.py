@@ -45,6 +45,10 @@ class BlockedGraph(NamedTuple):
     dstl:  (nblocks, emax) int32 destination row LOCAL to the block.
     mask:  (nblocks, emax) f32.
     tile_m: rows per block; num_vertices: real vertex count.
+    eidx:  (nblocks, emax) int32 ORIGINAL edge index of each slot (pad
+           slots point at edge 0 and are masked) -- lets traced per-edge
+           data (edge weights) be regrouped into this layout with one
+           gather, no host round-trip (kernels/ops.seg_agg_planned).
     """
 
     src: jnp.ndarray
@@ -52,6 +56,7 @@ class BlockedGraph(NamedTuple):
     mask: jnp.ndarray
     tile_m: int
     num_vertices: int
+    eidx: Optional[jnp.ndarray] = None
 
     @property
     def nblocks(self) -> int:
@@ -89,11 +94,13 @@ def block_graph(g: Graph, tile_m: int) -> BlockedGraph:
     bs = np.zeros((nblocks, emax), np.int32)
     bd = np.zeros((nblocks, emax), np.int32)
     bm = np.zeros((nblocks, emax), np.float32)
+    be = np.zeros((nblocks, emax), np.int32)
     bs[blk, offs] = src
     bd[blk, offs] = dst - blk * tile_m
     bm[blk, offs] = 1.0
+    be[blk, offs] = np.arange(len(src), dtype=np.int32)
     return BlockedGraph(jnp.asarray(bs), jnp.asarray(bd), jnp.asarray(bm),
-                        tile_m, v)
+                        tile_m, v, jnp.asarray(be))
 
 
 def suggest_tile_m(in_len: int, out_len: int, avg_deg: float,
@@ -171,11 +178,13 @@ def fused_gcn_layer(bg: BlockedGraph, x: jnp.ndarray, w: jnp.ndarray,
         out = blocks.reshape(bg.nblocks * bg.tile_m, w.shape[1])
 
     out = out[: bg.num_vertices]
-    # self contribution + mean normalization (linear, applied post-GEMM)
+    # self contribution + mean normalization (linear, applied post-GEMM;
+    # reciprocal-multiply keeps eager == compiled bitwise -- see
+    # phases.aggregate)
     if agg_op == "mean":
         assert in_deg is not None
-        out = (out + x[: bg.num_vertices] @ w) / (
-            in_deg.astype(out.dtype) + 1.0)[:, None]
+        out = (out + x[: bg.num_vertices] @ w) * (
+            1.0 / (in_deg.astype(out.dtype) + 1.0))[:, None]
     elif agg_op == "sum_self":
         out = out + x[: bg.num_vertices] @ w
     if bias is not None:

@@ -206,12 +206,14 @@ def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
     agg = aggregate_ring if strategy == "ring" else aggregate_allgather
     deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
     deg = pad_features(deg, pg.block_size, pg.num_shards)
-    deg = jnp.where(deg == 0, 1.0, deg)
+    # reciprocal-multiply normalization (not broadcast division) so the
+    # jitted plan.compile() path stays bit-for-bit equal to eager dispatch
+    rdeg = 1.0 / jnp.where(deg == 0, 1.0, deg)
     if order == "combine_first":
         h = x @ w
-        out = (agg(pg, h, mesh, axis) + h) / deg
+        out = (agg(pg, h, mesh, axis) + h) * rdeg
     else:
-        out = ((agg(pg, x, mesh, axis) + x) / deg) @ w
+        out = ((agg(pg, x, mesh, axis) + x) * rdeg) @ w
     return out + bias
 
 
@@ -275,17 +277,19 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
 
     deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
     deg = pad_features(deg, block, nsh)
-    deg = jnp.where(deg == 0, 1.0, deg)
+    # reciprocal of the (rows, 1) degree column: multiplied, never divided
+    # (bitwise eager/compiled equality -- see distributed_gcn_layer)
+    rdeg = 1.0 / jnp.where(deg == 0, 1.0, deg)
 
     expect = (nsh * block, q_sh * fb_in)
     if x.shape != expect:
         raise ValueError(f"x must be in the padded 2-D layout {expect}, "
                          f"got {tuple(x.shape)} (see pad_features_2d)")
 
-    def fn(x_blk, src, dstl, msk, deg_blk, wp_, bp_):
+    def fn(x_blk, src, dstl, msk, rdeg_blk, wp_, bp_):
         x_loc = x_blk.reshape(block, fb_in)
         srcl, dl, ml = src[0], dstl[0], msk[0]
-        dg = deg_blk[0]
+        rdg = rdeg_blk[0]
         qi = jax.lax.axis_index(feat_ax)
 
         def w_block(fb):
@@ -301,10 +305,10 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
 
         if order == "combine_first":
             hq = combine(x_loc)                          # (block, fb_out)
-            out = (local(hq, srcl, dl, ml, block, nsh, node_ax) + hq) / dg
+            out = (local(hq, srcl, dl, ml, block, nsh, node_ax) + hq) * rdg
         else:
             agg = local(x_loc, srcl, dl, ml, block, nsh, node_ax)
-            out = combine((agg + x_loc) / dg)
+            out = combine((agg + x_loc) * rdg)
         out = out + jax.lax.dynamic_slice(bp_, (qi * fb_out,), (fb_out,))
         return out.reshape(1, block, 1, fb_out)
 
@@ -315,7 +319,7 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
                   P(None, None), P(None)),
         out_specs=P(node_ax, None, feat_ax, None), check_rep=False,
     )(x.reshape(nsh, block, q_sh, fb_in), pg.src, pg.dst_local, pg.mask,
-      deg.reshape(nsh, block, 1), wp, bp)
+      rdeg.reshape(nsh, block, 1), wp, bp)
     return out.reshape(nsh * block, q_sh * fb_out)
 
 

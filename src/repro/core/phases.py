@@ -41,7 +41,8 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
               edge_weight: Optional[jnp.ndarray] = None,
               edge_mask: Optional[jnp.ndarray] = None,
               include_self: bool = True,
-              backend: Optional[str] = None) -> jnp.ndarray:
+              backend: Optional[str] = None,
+              layout=None) -> jnp.ndarray:
     """h_v = reduce_{u in N(v) (+ v)} x_u              (paper Eq. 1/2 inner term)
 
     Args:
@@ -55,15 +56,25 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
       backend: "xla" (segment_sum) or a Pallas tier ("pallas-tpu" |
         "pallas-gpu"; legacy "pallas" = platform's native tier); None = xla.
         Normally resolved by the execution planner (core/plan.py).
+      layout: plan-owned ``core.dataflow.BlockedGraph`` for the Pallas
+        tiers.  With a layout the Pallas dispatch is TRACE-PURE
+        (``kernels.ops.seg_agg_planned``: the O(E) regrouping was done once
+        at plan-build time); without one, one-off Pallas calls fall back to
+        the slow ad-hoc ``kernels.ops.seg_agg``, which regroups on the host
+        per call and cannot run under jit.  Plans always pass it
+        (``LayerPlan.agg_layout``).
     """
     assert op in AGGREGATORS, op
     v, f = x.shape
-    gathered = jnp.take(x, g.src, axis=0)  # (E, F) -- the indexSelect kernel
     w = None
     if edge_weight is not None:
         w = edge_weight
     if edge_mask is not None:
         w = edge_mask if w is None else w * edge_mask
+
+    use_pallas = backend is not None and is_pallas(backend)
+    if op == "max" or not use_pallas:
+        gathered = jnp.take(x, g.src, axis=0)  # (E, F) -- indexSelect kernel
 
     if op == "max":
         if w is not None:
@@ -73,21 +84,31 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
         out = jnp.maximum(out, self_term)
         return jnp.where(jnp.isfinite(out), out, 0.0)
 
-    if w is not None:
-        gathered = gathered * w[:, None].astype(gathered.dtype)
-
-    if backend is not None and is_pallas(backend):
+    if use_pallas:
         from repro.kernels import ops as kops
-        summed = kops.seg_agg(gathered, g.dst, v,
-                              backend=resolve_backend(backend))
+        if layout is not None:
+            summed = kops.seg_agg_planned(layout, x, w,
+                                          backend=resolve_backend(backend))
+        else:
+            gathered = jnp.take(x, g.src, axis=0)
+            if w is not None:
+                gathered = gathered * w[:, None].astype(gathered.dtype)
+            summed = kops.seg_agg(gathered, g.dst, v,
+                                  backend=resolve_backend(backend))
     else:
+        if w is not None:
+            gathered = gathered * w[:, None].astype(gathered.dtype)
         summed = jax.ops.segment_sum(gathered, g.dst, num_segments=v)
 
     if include_self:
         summed = summed + x
     if op == "mean":
         denom = g.in_deg.astype(x.dtype) + (1.0 if include_self else 0.0)
-        summed = summed / jnp.maximum(denom, 1.0)[:, None]
+        # reciprocal-multiply, not broadcast division: XLA's jitted fusion
+        # rewrites (V,F)/(V,1) division non-bitwise-reproducibly vs eager;
+        # the (V,1) reciprocal + multiply is identical in both, which is
+        # what keeps plan.compile() bit-for-bit equal to the eager path
+        summed = summed * (1.0 / jnp.maximum(denom, 1.0))[:, None]
     return summed
 
 

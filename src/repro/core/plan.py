@@ -31,10 +31,25 @@ ONCE per (graph, model, device) and then replayed on every forward/backward:
     through ``distributed_gcn_layer_2d`` -- per-device halo bytes shrink a
     further Q-fold (the multi-host tier; see docs/planner.md).
 
+  * **Locality reordering (paper F4, §5.1 guideline 1).**  Built with
+    ``reorder="degree"`` (or ``"auto"``, priced by ``choose_reorder``
+    against the plan's ``Machine``), the plan renumbers vertices once at
+    build time (``graph.reorder.degree_reorder``) so high-degree rows
+    cluster; features are permuted at ingress and logits un-permuted at
+    egress *inside* the traced forward -- callers always see the natural
+    vertex order.
+
+Every dispatch path is TRACE-PURE: all host-side work (block regrouping,
+reordering, partitioning) happens at plan-build time, so the whole forward
+compiles.  ``plan.compile()`` returns the single jitted callable
+(``CompiledPlan``, with a retrace guard); ``run_model(..., compiled=True)``
+is the sugar.
+
 Public surface:
 
   ``build_plan(g, cfg, in_dim, num_classes, ...)``  -> GraphExecutionPlan
   ``plan.run_model(params, x)``     full forward through all planned layers
+  ``plan.compile(donate=...)``      ONE jitted callable for the forward
   ``plan.run_layer(params_i, x, layer=i)``  one layer (conv param subtree)
   ``plan.run_phases(x, weights, ...)``      raw weight-list layer (the
                                             ``phase_ordered_layer`` path)
@@ -55,10 +70,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import phases
 from repro.core.backend import (AUTO, PALLAS_GPU, PALLAS_TPU, XLA,
-                                interpret_for, resolve_backend,
+                                interpret_for, is_pallas, resolve_backend,
                                 resolve_interpret)
 from repro.core.dataflow import (BlockedGraph, block_graph, fused_gcn_layer,
                                  suggest_tile_m)
@@ -86,6 +102,10 @@ class LayerPlan:
     fused: bool               # inter-phase dataflow fusion (F5)
     tile_m: int               # fused tile rows (0 when unfused)
     blocked: Optional[BlockedGraph]  # shared BlockedGraph (None when unfused)
+    #: plan-owned blocked layout for UNFUSED Pallas aggregation -- built for
+    #: every Pallas-tier layer so the seg_agg dispatch is trace-pure
+    #: (kernels/ops.seg_agg_planned), including call-time fusion fallbacks.
+    agg_layout: Optional[BlockedGraph] = None
 
     @property
     def din(self) -> int:
@@ -106,8 +126,10 @@ class GraphExecutionPlan:
     def __init__(self, g: Graph, layers: Sequence[LayerPlan], *,
                  interpret: bool, mesh=None, partition=None,
                  strategy: str = "ring", axis: str = "data",
-                 axes: Tuple[str, str] = ("node", "feat"), machine=None):
-        self.g = g
+                 axes: Tuple[str, str] = ("node", "feat"), machine=None,
+                 reorder: str = "none", perm=None):
+        self.g = g                   # the EXECUTION graph (renumbered when
+                                     # reorder="degree")
         self.layers: Tuple[LayerPlan, ...] = tuple(layers)
         self.interpret = interpret
         self.mesh = mesh
@@ -116,6 +138,18 @@ class GraphExecutionPlan:
         self.axis = axis             # 1-D partition: the single mesh axis
         self.axes = axes             # 2-D partition: (node, feature) axes
         self.machine = machine       # Optional[repro.profile.Machine]
+        self.reorder = reorder       # "none" | "degree" (resolved)
+        # perm[old_id] = new_id (graph.reorder.degree_reorder contract);
+        # inv[new_id] = old_id.  Device constants the traced ingress/egress
+        # gathers close over -- never recomputed per call.
+        if perm is not None:
+            perm = np.asarray(perm)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(len(perm))
+            self.perm, self.inv = jnp.asarray(perm), jnp.asarray(inv)
+        else:
+            self.perm = self.inv = None
+        self._compiled: Dict = {}    # (donate, layer) -> CompiledPlan
 
     # -- properties ---------------------------------------------------------
 
@@ -134,6 +168,16 @@ class GraphExecutionPlan:
         if self.partition is None:
             return "none"
         return "2d" if isinstance(self.partition, Partition2D) else "1d"
+
+    @property
+    def compile_supported(self) -> bool:
+        """True when every layer's dispatch is trace-pure -- i.e. every
+        Pallas-tier layer owns a plan-built blocked layout, so
+        ``plan.compile()`` traces with zero host transfers.  Plans built by
+        the public entry points always qualify; False only for hand-built
+        plans missing ``agg_layout``."""
+        return all(not is_pallas(lp.backend) or lp.agg_layout is not None
+                   for lp in self.layers)
 
     # -- parameter helpers --------------------------------------------------
 
@@ -171,8 +215,10 @@ class GraphExecutionPlan:
     def run_layer(self, params: Dict, x: jnp.ndarray, *, layer: int = 0,
                   _probe=None) -> jnp.ndarray:
         """One planned layer from its conv param subtree ({"lin": ...} or
-        {"mlp1": ..., "mlp2": ...}).  In distributed plans ``x`` must be
-        padded to the partition layout (``run_model`` handles this)."""
+        {"mlp1": ..., "mlp2": ...}).  Operates in the plan's EXECUTION
+        layout: in distributed plans ``x`` must be padded to the partition
+        layout, in reordered plans rows follow the renumbered vertex ids
+        (``run_model`` handles both via its ingress/egress)."""
         lp = self.layers[layer]
         weights, bias_post = self._split_params(lp, params)
         if self.distributed:
@@ -181,33 +227,117 @@ class GraphExecutionPlan:
         return _execute_layer(self.g, lp, x, weights, bias_post=bias_post,
                               probe=_probe)
 
-    def run_model(self, params: Dict, x: jnp.ndarray, *,
-                  _probe=None) -> jnp.ndarray:
-        """Full forward: planned layers with ReLU between them.
-
-        Distributed plans accept ``x`` in the natural (V, F) layout and pad
-        it into the partition layout (rows for 1-D; rows and feature
-        columns for 2-D -- pad columns stay exact zeros through every
-        layer), trimming the padding off the final output.
-        """
+    def _ingress(self, x: jnp.ndarray, *, _probe=None) -> jnp.ndarray:
+        """Natural (V, F) features -> the plan's execution layout: the
+        planned vertex renumbering (reorder), then the partition padding.
+        Pure gathers/pads over plan-time constants -- trace-pure."""
         v = self.g.num_vertices
-        two_d = self.partition_kind == "2d"
+        if self.inv is not None:
+            if x.shape[0] != v:
+                raise ValueError(
+                    f"reordered plans take features in the natural (V, F) "
+                    f"layout; got {tuple(x.shape)} for V={v}")
+            x = jnp.take(x, self.inv, axis=0)  # x_new[j] = x_old[inv[j]]
+            if _probe is not None:
+                _probe.note_reorder()
         if self.distributed and x.shape[0] == v:
-            if two_d:
+            if self.partition_kind == "2d":
                 from repro.core.distributed import pad_features_2d
                 x = pad_features_2d(x, self.partition)
             else:
                 from repro.core.distributed import pad_features
                 x = pad_features(x, self.partition.block_size,
                                  self.partition.num_shards)
-        h = x
+        return x
+
+    def _egress(self, h: jnp.ndarray) -> jnp.ndarray:
+        """Execution layout -> natural order: trim partition padding, then
+        un-apply the vertex renumbering (out_old[i] = h_new[perm[i]])."""
+        v = self.g.num_vertices
+        if self.partition_kind == "2d":
+            h = h[:v, :self.layers[-1].dout]
+        elif self.distributed:
+            h = h[:v]
+        if self.perm is not None:
+            h = jnp.take(h, self.perm, axis=0)
+        return h
+
+    def run_model(self, params: Dict, x: jnp.ndarray, *,
+                  _probe=None, compiled: bool = False) -> jnp.ndarray:
+        """Full forward: planned layers with ReLU between them.
+
+        Accepts ``x`` in the natural (V, F) layout.  Distributed plans pad
+        it into the partition layout (rows for 1-D; rows and feature
+        columns for 2-D -- pad columns stay exact zeros through every
+        layer) and trim the padding off the final output; reordered plans
+        permute rows at ingress and un-permute the logits at egress, all
+        inside the (traceable) forward.
+
+        ``compiled=True`` routes through ``plan.compile()`` -- the cached
+        single jitted callable -- instead of the eager per-phase loop.
+        """
+        if compiled:
+            if _probe is not None:
+                raise ValueError(
+                    "per-phase instrumentation needs eager phase "
+                    "boundaries; InstrumentedPlan times the compiled "
+                    "path separately (run_model(..., compiled=True))")
+            return self.compile()(params, x)
+        h = self._ingress(x, _probe=_probe)
         for i in range(self.num_layers):
             h = self.run_layer(params[f"conv{i}"], h, layer=i, _probe=_probe)
             if i < self.num_layers - 1:
                 h = jax.nn.relu(h)
-        if two_d:
-            return h[:v, :self.layers[-1].dout]
-        return h[:v] if self.distributed else h
+        return self._egress(h)
+
+    def compile(self, *, donate: bool = False,
+                layer: Optional[int] = None) -> "CompiledPlan":
+        """ONE jitted callable for the planned forward (the production
+        entry point).
+
+        Local plans trace ``run_model`` under ``jax.jit``; distributed
+        plans trace the same path, whose shard_map halo bodies carry their
+        mesh explicitly -- either way the result is a single compiled
+        executable with zero host transfers inside the traced region (all
+        host-side work -- block regrouping, reordering, partitioning --
+        happened at plan-build time).  Exact eager equivalence and a
+        retrace-count guard are part of the contract: the returned
+        ``CompiledPlan`` counts traces (``num_traces``) and raises if a
+        second trace happens for an input signature it has already seen.
+
+        Args:
+          donate: donate the feature buffer to the computation
+            (``jax.jit(donate_argnums=...)``) -- frees the input's memory
+            on accelerators for inference serving; leave False when the
+            caller reuses ``x``.
+          layer: compile a single planned layer instead of the full model
+            (``(conv_params, h) -> h'`` in the plan's execution layout) --
+            what per-layer compiled timing in ``repro.profile`` uses.
+
+        Compiled callables are cached per (donate, layer) on the plan, so
+        ``plan.compile()(params, x)`` in a loop never re-jits.
+
+        Worked example::
+
+            >>> plan = build_plan(g, cfg, in_dim, classes)
+            >>> fwd = plan.compile()
+            >>> out = fwd(params, x)          # traces + compiles once
+            >>> out = fwd(params, x)          # cached executable
+            >>> fwd.num_traces
+            1
+        """
+        if not self.compile_supported:
+            raise ValueError(
+                "plan.compile() needs trace-pure dispatch on every layer; "
+                "a Pallas-tier layer is missing its plan-owned blocked "
+                "layout (build plans through build_plan/plan_for_* rather "
+                "than by hand)")
+        key = (bool(donate), layer)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = self._compiled[key] = CompiledPlan(self, donate=donate,
+                                                    layer=layer)
+        return fn
 
     def run_phases(self, x: jnp.ndarray, weights, *, layer: int = 0,
                    edge_weight=None, activation: str = "relu",
@@ -217,10 +347,29 @@ class GraphExecutionPlan:
         ``weights`` is a list of (W, b) tuples with biases applied *inside*
         the combination MLP (``phases.combine`` semantics); ``bias_post``
         is an optional extra bias added after aggregation (conv semantics).
+        Like ``run_model``, takes and returns the natural vertex order: on
+        a reordered plan rows are permuted in and un-permuted out (but
+        per-edge ``edge_weight`` is rejected there -- the caller's edge
+        order does not survive the renumbering's re-sort).
         """
-        return _execute_layer(self.g, self.layers[layer], x, weights,
-                              edge_weight=edge_weight, activation=activation,
-                              bias_post=bias_post, probe=_probe)
+        if self.perm is not None:
+            if edge_weight is not None:
+                raise ValueError(
+                    "edge_weight is indexed by the caller's edge order, "
+                    "which a reordered plan re-sorts; use reorder='none' "
+                    "or fold the weights into the graph at plan build")
+            # reorder permute ONLY -- run_phases always executes the local
+            # path, so partition padding (_ingress's other job) must not
+            # apply even on distributed plans
+            x = jnp.take(x, self.inv, axis=0)
+            if _probe is not None:
+                _probe.note_reorder()
+        h = _execute_layer(self.g, self.layers[layer], x, weights,
+                           edge_weight=edge_weight, activation=activation,
+                           bias_post=bias_post, probe=_probe)
+        if self.perm is not None:
+            h = jnp.take(h, self.perm, axis=0)
+        return h
 
     def _run_distributed(self, lp: LayerPlan, x, weights, bias_post, *,
                          probe=None):
@@ -272,8 +421,18 @@ class GraphExecutionPlan:
     # -- introspection ------------------------------------------------------
 
     def describe(self) -> List[Dict]:
-        """One dict per layer: every planned decision + modeled agg cost."""
+        """One dict per layer: every planned decision + modeled agg cost.
+
+        ``reorder`` is the resolved locality decision ("none" | "degree")
+        and ``compiled`` the trace-purity capability (``plan.compile()``
+        works iff True -- always, for plans built by the public entry
+        points).  N.B. one-off Pallas aggregation on an UN-planned graph
+        (``kernels.ops.seg_agg`` without a layout) still pays host-side
+        regrouping per call and cannot trace -- route repeated work
+        through a plan.
+        """
         out = []
+        compiled_ok = self.compile_supported
         for lp in self.layers:
             oc = ordering_cost(self.g, lp.din, lp.dout, lp.order)
             out.append({
@@ -284,6 +443,7 @@ class GraphExecutionPlan:
                 "interpret": self.interpret,
                 "distributed": self.distributed,
                 "partition": self.partition_kind,
+                "reorder": self.reorder, "compiled": compiled_ok,
                 "agg_bytes": oc.agg_bytes, "agg_flops": oc.agg_flops,
             })
         return out
@@ -298,6 +458,57 @@ class GraphExecutionPlan:
             "combination": phases.combine_cost(self.g.num_vertices, lp.dims),
             "ordering_cost": ordering_cost(self.g, lp.din, lp.dout, lp.order),
         }
+
+
+class CompiledPlan:
+    """A plan's forward as ONE jitted callable, with a retrace guard.
+
+    Built by ``plan.compile()``.  ``__call__(params, x)`` runs the compiled
+    executable; the first call per input signature traces (``num_traces``
+    counts), and a re-trace for a signature that was already traced raises
+    ``RuntimeError`` -- the guard that catches accidental cache-busting
+    (e.g. weak types or recreated plans) instead of silently recompiling
+    every step.
+    """
+
+    def __init__(self, plan: "GraphExecutionPlan", *, donate: bool = False,
+                 layer: Optional[int] = None):
+        self.plan = plan
+        self.donate = donate
+        self.layer = layer
+        self._num_traces = 0
+        self._seen = set()
+
+        def fwd(params, x):
+            self._num_traces += 1   # runs at TRACE time only
+            if layer is None:
+                return plan.run_model(params, x)
+            return plan.run_layer(params, x, layer=layer)
+
+        self._fn = jax.jit(fwd, donate_argnums=(1,) if donate else ())
+
+    @property
+    def num_traces(self) -> int:
+        """How many times the callable has been traced (compiled)."""
+        return self._num_traces
+
+    @staticmethod
+    def _signature(params, x):
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        return (tuple(x.shape), str(getattr(x, "dtype", type(x))), treedef,
+                tuple((tuple(p.shape), str(p.dtype)) for p in leaves))
+
+    def __call__(self, params, x):
+        sig = self._signature(params, x)
+        before = self._num_traces
+        out = self._fn(params, x)
+        if self._num_traces > before and sig in self._seen:
+            raise RuntimeError(
+                "plan.compile() retraced for an input signature it already "
+                "compiled -- something is busting the jit cache (weak "
+                "types? fresh arrays with different dtypes?)")
+        self._seen.add(sig)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -382,13 +593,15 @@ def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
         h = _phase(probe, "aggregate",
                    lambda hh=h: phases.aggregate(
                        g, hh, op=lp.agg_op, edge_weight=edge_weight,
-                       include_self=lp.include_self, backend=lp.backend),
+                       include_self=lp.include_self, backend=lp.backend,
+                       layout=lp.agg_layout),
                    lp=lp, feature_len=int(h.shape[-1]))
     else:
         h = _phase(probe, "aggregate",
                    lambda: phases.aggregate(
                        g, x, op=lp.agg_op, edge_weight=edge_weight,
-                       include_self=lp.include_self, backend=lp.backend),
+                       include_self=lp.include_self, backend=lp.backend,
+                       layout=lp.agg_layout),
                    lp=lp, feature_len=int(x.shape[-1]))
         h = _phase(probe, "combine",
                    lambda hh=h: phases.combine(hh, weights,
@@ -408,9 +621,13 @@ _BLOCKED_CACHE: Dict = {}   # (graph_key, tile_m)   -> (src_ref, BlockedGraph)
 _CACHE_LIMIT = 64
 
 
+_REORDER_CACHE: Dict = {}   # graph_key -> (src_ref, reordered Graph, perm)
+
+
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _BLOCKED_CACHE.clear()
+    _REORDER_CACHE.clear()
 
 
 def _graph_key(g: Graph):
@@ -444,6 +661,22 @@ def _blocked_for(g: Graph, tile_m: int) -> BlockedGraph:
     return bg
 
 
+def _reordered_for(g: Graph):
+    """Degree-reordered twin of ``g`` (cached): the O(V log V + E) renumber
+    runs once per graph; every plan spec (fused/unfused, any backend) on
+    the same graph shares one reordered copy -- and therefore one
+    BlockedGraph cache line per tile."""
+    key = _graph_key(g)
+    hit = _REORDER_CACHE.get(key)
+    if hit is not None and hit[0] is g.src:
+        return hit[1], hit[2]
+    from repro.graph.reorder import degree_reorder
+    _evict_oldest(_REORDER_CACHE)
+    g2, perm = degree_reorder(g)
+    _REORDER_CACHE[key] = (g.src, g2, perm)
+    return g2, perm
+
+
 def _cached_plan(g: Graph, spec_key, builder):
     key = (_graph_key(g), spec_key)
     hit = _PLAN_CACHE.get(key)
@@ -475,19 +708,25 @@ def _plan_layer(g: Graph, index: int, kind: str, dims: Tuple[int, ...], *,
     backend = resolve_backend(backend)
     fused = bool(fused) and agg_op in ("sum", "mean")
     tile_m, blocked = 0, None
+    align = 32 if backend == PALLAS_GPU else 8
     if fused:
         avg_deg = g.num_edges / max(1, g.num_vertices)
         tile_m = suggest_tile_m(dims[0], dims[1], avg_deg, backend=backend,
                                 machine=machine)
         # a tile larger than the graph only pads; clamp to |V| rounded up,
         # keeping the tier's alignment (warp rows on GPU, sublanes on TPU)
-        align = 32 if backend == PALLAS_GPU else 8
         tile_m = max(align, min(tile_m, -(-g.num_vertices // align) * align))
         blocked = _blocked_for(g, tile_m)
+    agg_layout = None
+    if backend in (PALLAS_TPU, PALLAS_GPU):
+        # plan-owned layout for the UNFUSED seg_agg path (also the fusion
+        # fallback's), so dispatch never regroups on the host (trace-pure)
+        atile = max(align, min(128, -(-g.num_vertices // align) * align))
+        agg_layout = _blocked_for(g, atile)
     return LayerPlan(index=index, kind=kind, dims=tuple(int(d) for d in dims),
                      agg_op=agg_op, include_self=include_self, order=order,
                      backend=backend, fused=fused, tile_m=tile_m,
-                     blocked=blocked)
+                     blocked=blocked, agg_layout=agg_layout)
 
 
 def _plan_interpret(interpret, backend: str) -> bool:
@@ -515,7 +754,7 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                ordering: Optional[str] = None, mesh=None,
                num_shards: int = 0, strategy: str = "ring",
                axis: str = "data", interpret: Optional[bool] = None,
-               machine=None) -> GraphExecutionPlan:
+               machine=None, reorder: str = "none") -> GraphExecutionPlan:
     """Plan a full model (``GCNModelConfig``) over one graph.
 
     Overrides: ``backend`` ("auto" resolves per platform -- see
@@ -523,10 +762,29 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
     from cfg), ``mesh`` (+ optionally ``num_shards``) for the shard
     partition, ``machine`` (a ``repro.profile.Machine`` or registry name:
     parameterizes the hardware-aware decisions -- ordering cost model, fused
-    tile sizing -- and becomes the default for ``plan.instrument()``).
+    tile sizing, the ``reorder="auto"`` pricing -- and becomes the default
+    for ``plan.instrument()``).
     Plans are cached: calling again with the same graph and
     arguments returns the same plan object (and any rebuilt plan on the
     same graph reuses the cached BlockedGraph).
+
+    The ``reorder=`` contract (paper §5.1 guideline 1 as a planned
+    decision):
+
+      * ``"none"`` (default): execute in the caller's vertex numbering.
+      * ``"degree"``: apply ``graph.reorder.degree_reorder`` ONCE at plan
+        build (cached per graph); the plan stores perm/inverse, permutes
+        features at ingress and un-permutes logits at egress *inside* the
+        (traced) forward -- callers always pass and receive the natural
+        vertex order, and ``plan.compile()`` bakes the gathers into the
+        compiled executable.
+      * ``"auto"``: decide from ``graph.reorder.choose_reorder`` --
+        reuse-distance stats of the gather stream priced against the
+        plan's ``machine`` (its on-chip row budget at ``in_dim``); picks
+        "degree" only when the renumbering materially improves the modeled
+        hit ratio.
+
+    ``plan.describe()`` reports the resolved decision per layer.
 
     The ``mesh=`` / ``num_shards=`` contract:
 
@@ -567,12 +825,30 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
     if machine is not None:
         from repro.profile.machine import get_machine
         machine = get_machine(machine)
+    if reorder not in ("none", "degree", "auto"):
+        raise ValueError(f"unknown reorder {reorder!r}; expected "
+                         "'none' | 'degree' | 'auto'")
     spec_key = (cfg.name, cfg.conv, agg, tuple(cfg.hidden_dims),
                 cfg.num_layers, int(in_dim), int(num_classes), backend,
                 use_fused, req_order, _mesh_key(mesh), num_shards, strategy,
-                axis, interpret, machine.name if machine else None)
+                axis, interpret, machine.name if machine else None, reorder)
 
     def builder():
+        # -- locality reorder decision (F4 / §5.1-1), before anything that
+        #    depends on the vertex numbering (partition, blocked layouts)
+        g_exec, perm, decision = g, None, reorder
+        if decision != "none":
+            g2, p = _reordered_for(g)
+            if decision == "auto":
+                from repro.graph.reorder import choose_reorder
+                from repro.profile.machine import machine_for_backend
+                dec_machine = machine or machine_for_backend(
+                    resolve_backend(XLA if mesh is not None else backend))
+                decision = choose_reorder(g, g2, p, int(in_dim),
+                                          dec_machine)
+            if decision == "degree":
+                g_exec, perm = g2, p
+
         axes = ("node", "feat")
         if mesh is not None:
             if cfg.conv == "gin":
@@ -586,11 +862,11 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                 axes = axis_names
                 p_nodes = int(mesh.shape[axis_names[0]])
                 q_feats = int(mesh.shape[axis_names[1]])
-                partition = partition_2d(g, p_nodes, q_feats)
+                partition = partition_2d(g_exec, p_nodes, q_feats)
             else:                                          # 1-D vertex shard
                 from repro.graph.partition import partition_1d
                 shards = num_shards or int(mesh.devices.size)
-                partition = partition_1d(g, shards, edge_balanced=False)
+                partition = partition_1d(g_exec, shards, edge_balanced=False)
             lay_backend, lay_fused = XLA, False  # shard_map path is XLA
         else:
             partition = None
@@ -604,26 +880,30 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
             dims = (d, cfg.hidden_dims[-1], dout) if cfg.conv == "gin" \
                 else (d, dout)
             layers.append(_plan_layer(
-                g, i, cfg.conv, dims, agg_op=agg, ordering=req_order,
+                g_exec, i, cfg.conv, dims, agg_op=agg, ordering=req_order,
                 backend=lay_backend, fused=lay_fused, machine=machine))
             d = dout
         return GraphExecutionPlan(
-            g, layers, interpret=_plan_interpret(interpret,
-                                                 layers[0].backend),
+            g_exec, layers, interpret=_plan_interpret(interpret,
+                                                      layers[0].backend),
             mesh=mesh, partition=partition, strategy=strategy, axis=axis,
-            axes=axes, machine=machine)
+            axes=axes, machine=machine, reorder=decision, perm=perm)
 
     return _cached_plan(g, spec_key, builder)
 
 
-def plan_for_conv(conv, g: Graph) -> GraphExecutionPlan:
+def plan_for_conv(conv, g: Graph, *, machine=None) -> GraphExecutionPlan:
     """Single-layer plan for a standalone conv (GCNConv / SAGEConv / GINConv
     ``apply`` without a model-level plan).
 
     The conv's own ``ordering`` / ``backend`` / ``fused`` attributes are the
     requested decisions; this resolves them once per (conv spec, graph) and
     caches the plan, so repeated ``conv.apply(params, g, x)`` calls pay no
-    planning cost.
+    planning cost.  ``machine`` (a ``repro.profile.Machine`` or registry
+    name) parameterizes the hardware-aware decisions exactly as in
+    ``build_plan`` -- ordering cost model and fused tile sizing -- and is
+    part of the cache key (previously it was silently dropped and
+    standalone convs always planned with preset defaults).
 
     Worked example::
 
@@ -639,26 +919,34 @@ def plan_for_conv(conv, g: Graph) -> GraphExecutionPlan:
     agg_op = "sum" if kind == "gin" else "mean"
     backend = getattr(conv, "backend", AUTO)
     fused = bool(getattr(conv, "fused", False))
-    spec_key = ("conv", kind, dims, conv.ordering, backend, fused)
+    if machine is not None:
+        from repro.profile.machine import get_machine
+        machine = get_machine(machine)
+    spec_key = ("conv", kind, dims, conv.ordering, backend, fused,
+                machine.name if machine else None)
 
     def builder():
         lp = _plan_layer(g, 0, kind, dims, agg_op=agg_op,
-                         ordering=conv.ordering, backend=backend, fused=fused)
+                         ordering=conv.ordering, backend=backend,
+                         fused=fused, machine=machine)
         return GraphExecutionPlan(g, [lp],
-                                  interpret=_plan_interpret(None, lp.backend))
+                                  interpret=_plan_interpret(None, lp.backend),
+                                  machine=machine)
 
     return _cached_plan(g, spec_key, builder)
 
 
 def plan_for_phases(g: Graph, weights, *, order: Optional[str] = None,
                     agg_op: str = "mean", backend: str = AUTO,
-                    fused: bool = False) -> GraphExecutionPlan:
+                    fused: bool = False, machine=None) -> GraphExecutionPlan:
     """Single-layer plan for a raw weight list (``phase_ordered_layer``).
 
     ``weights`` is a list of (W, b) tuples; the layer dims are inferred
     from the weight shapes.  ``order=None`` lets the scheduler's cost model
     decide (paper F2): it picks combine-first whenever the projection
-    shrinks the feature length the sparse phase must move.
+    shrinks the feature length the sparse phase must move.  ``machine``
+    (a ``repro.profile.Machine`` or registry name) parameterizes the
+    hardware-aware decisions as in ``build_plan`` and keys the cache.
 
     Worked example::
 
@@ -670,12 +958,18 @@ def plan_for_phases(g: Graph, weights, *, order: Optional[str] = None,
     """
     dims = tuple([int(w.shape[0]) for (w, _) in weights] +
                  [int(weights[-1][0].shape[1])])
-    spec_key = ("phase", dims, order, agg_op, backend, fused)
+    if machine is not None:
+        from repro.profile.machine import get_machine
+        machine = get_machine(machine)
+    spec_key = ("phase", dims, order, agg_op, backend, fused,
+                machine.name if machine else None)
 
     def builder():
         lp = _plan_layer(g, 0, "phase", dims, agg_op=agg_op,
-                         ordering=order or AUTO, backend=backend, fused=fused)
+                         ordering=order or AUTO, backend=backend,
+                         fused=fused, machine=machine)
         return GraphExecutionPlan(g, [lp],
-                                  interpret=_plan_interpret(None, lp.backend))
+                                  interpret=_plan_interpret(None, lp.backend),
+                                  machine=machine)
 
     return _cached_plan(g, spec_key, builder)

@@ -112,6 +112,53 @@ def reuse_distance_stats(access_stream: np.ndarray,
     return out
 
 
+def choose_reorder(g: Graph, g_reordered: Graph, perm: np.ndarray,
+                   feature_len: int, machine, threshold: float = 0.02,
+                   max_stream: int = 20000) -> str:
+    """Decide ``"degree"`` vs ``"none"`` from reuse-distance stats (§5.1-1).
+
+    Prices the paper's L2 observation against a concrete ``machine``
+    (``repro.profile.Machine``): the budget is the number of
+    ``feature_len``-float rows the machine's fast on-chip memory
+    (``machine.on_chip_bytes``) can hold, and the metric is the LRU hit
+    ratio of the gather stream (``reuse_distance_stats``) under that
+    budget.  Degree reordering is chosen iff it improves the hit ratio by
+    more than ``threshold`` (absolute) -- i.e. only when the renumbering
+    actually shortens reuse distances *at this machine's capacity*; tiny
+    graphs whose working set already fits stay at ``"none"``.
+
+    ``max_stream`` caps the analyzed stream (the Bennett-Kruskal analysis
+    is O(N log N) host work).  Crucially both orderings are evaluated on
+    the SAME edge population: up to ``max_stream`` edges the full streams,
+    beyond that one uniform edge sample traversed in each graph's own
+    execution (dst-sorted) order -- ``perm`` (``degree_reorder``'s
+    ``perm[old_id] = new_id``) maps the sampled original edges to their
+    positions in the reordered stream.  Comparing each graph's stream
+    *prefix* instead would be biased: the reordered prefix holds exactly
+    the hub destinations.  Used by ``build_plan(..., reorder="auto")``.
+    """
+    rows = max(1, int(machine.on_chip_bytes) // max(4 * feature_len, 4))
+    src = np.asarray(g.src)
+    e = len(src)
+    if e <= max_stream:
+        base_stream = src
+        re_stream = np.asarray(g_reordered.src)
+    else:
+        perm = np.asarray(perm)
+        sel = np.zeros(e, bool)
+        sel[np.random.default_rng(0).choice(e, max_stream,
+                                            replace=False)] = True
+        base_stream = src[sel]
+        # the same edges at their positions in the reordered execution
+        # order (edges re-sort by new destination id, stable)
+        order2 = np.argsort(perm[np.asarray(g.dst)], kind="stable")
+        re_stream = perm[src][order2][sel[order2]]
+    base = reuse_distance_stats(base_stream, budgets=(rows,))
+    re = reuse_distance_stats(re_stream, budgets=(rows,))
+    gain = re[f"hit_ratio@{rows}"] - base[f"hit_ratio@{rows}"]
+    return "degree" if gain > threshold else "none"
+
+
 def atomic_collision_model(dst: np.ndarray, feature_len: int,
                            warp: int = 32) -> Dict[str, float]:
     """Paper Fig.2(f) model: atomic transactions per request under a warp model.

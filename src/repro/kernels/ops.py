@@ -46,12 +46,19 @@ def _seg_agg_entry(backend: str):
 def seg_agg(rows: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
             tile_m: int = 128, tile_e: int = 512,
             backend: str = PALLAS_TPU) -> jnp.ndarray:
-    """Drop-in segment_sum(rows, seg_ids) using the Pallas kernel.
+    """Drop-in segment_sum(rows, seg_ids) -- the SLOW ad-hoc fallback.
 
     Requires ``seg_ids`` sorted (destination-sorted edges -- the framework
-    invariant).  Host-side regrouping is cached per (ids, shape) is NOT done
-    here: for repeated use on a fixed graph prefer ``seg_agg_pregrouped`` via
-    core.dataflow.block_graph.  ``backend`` selects the kernel tier
+    invariant).  This entry performs the O(E) block regrouping on the HOST
+    on *every call* (``device_get`` + numpy), so it cannot be traced
+    (``jax.jit`` / ``grad`` raise) and it re-pays the regrouping cost per
+    invocation.  It exists only for one-off calls on un-planned graphs.
+
+    Repeated-graph callers must go through the plan-owned blocked layout
+    instead: ``GraphExecutionPlan`` builds it once per (graph, tile_m)
+    (``core.plan._blocked_for``) and dispatches ``seg_agg_planned`` --
+    trace-pure, zero host transfers.  ``phases.aggregate(..., layout=...)``
+    is the phase-level door.  ``backend`` selects the kernel tier
     ("pallas-tpu" | "pallas-gpu"; "pallas"/"auto" resolve per platform --
     see core/backend.py).
     """
@@ -59,6 +66,12 @@ def seg_agg(rows: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
     if backend == PALLAS_GPU:
         tile_e = min(tile_e, 128)  # SM-resident chunk, not a VMEM slab
     e, f = rows.shape
+    if isinstance(seg_ids, jax.core.Tracer):
+        raise ValueError(
+            "seg_agg regroups edges on the host and cannot run inside "
+            "jit/grad; build a GraphExecutionPlan (its plan-owned blocked "
+            "layout dispatches the trace-pure seg_agg_planned) or call "
+            "seg_agg_planned with a core.dataflow.block_graph layout")
     seg_np = np.asarray(jax.device_get(seg_ids))
     nblocks = _round_up(num_segments, tile_m) // tile_m
     blk = seg_np // tile_m
@@ -88,6 +101,46 @@ def seg_agg_pregrouped(rows_blocked, seg_local, mask, tile_m: int,
     return _seg_agg_entry(backend)(
         rows_blocked, seg_local, mask, tile_m=tile_m, tile_e=tile_e,
         interpret=interpret_for(backend))
+
+
+def seg_agg_planned(bg, x: jnp.ndarray, edge_weight=None, *,
+                    tile_e: int = 512,
+                    backend: str = PALLAS_TPU) -> jnp.ndarray:
+    """Trace-pure segmented aggregation over a plan-owned blocked layout.
+
+    ``bg`` is a ``core.dataflow.BlockedGraph`` (with ``eidx``) built ONCE at
+    plan time; everything here is jnp gathers and the Pallas kernel, so the
+    whole call traces under ``jax.jit``/``grad`` with zero host transfers --
+    the production replacement for the ad-hoc ``seg_agg`` regrouping.
+
+    x: (V, F) vertex features; ``edge_weight``: optional (E,) per-edge
+    scalar, regrouped into the blocked layout via ``bg.eidx`` (one gather).
+    Returns (V, F) -- ``sum_{(u,v) in E} w_uv * x_u`` per destination v.
+    """
+    backend = resolve_backend(backend)
+    if backend == PALLAS_GPU:
+        tile_e = min(tile_e, 128)
+    nblocks, emax = bg.src.shape
+    rows = jnp.take(x, bg.src.reshape(-1), axis=0).reshape(
+        nblocks, emax, x.shape[-1])
+    if edge_weight is not None:
+        if bg.eidx is None:
+            raise ValueError("BlockedGraph built without eidx cannot "
+                             "regroup edge weights; rebuild via block_graph")
+        w_blk = jnp.take(edge_weight, bg.eidx.reshape(-1),
+                         axis=0).reshape(nblocks, emax)
+        rows = rows * w_blk[..., None].astype(rows.dtype)
+    emax_p = _round_up(emax, tile_e)
+    seg_l, mask = bg.dstl, bg.mask
+    if emax_p != emax:
+        pad = ((0, 0), (0, emax_p - emax))
+        rows = jnp.pad(rows, pad + ((0, 0),))
+        seg_l = jnp.pad(seg_l, pad)
+        mask = jnp.pad(mask, pad)
+    out = _seg_agg_entry(backend)(
+        rows, seg_l, mask, tile_m=bg.tile_m, tile_e=tile_e,
+        interpret=interpret_for(backend))
+    return out[:bg.num_vertices]
 
 
 # ---------------------------------------------------------------------------

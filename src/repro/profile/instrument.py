@@ -15,6 +15,11 @@ against the phases that actually executed (ordering from the phase sequence,
 backend from the aggregation record, fusion from whether the fused phase
 ran).
 
+``run_model(..., compiled=True)`` additionally times the plan's COMPILED
+path (``plan.compile()`` -- whole forward and per layer) and attaches the
+wall times to the report, so one call states the eager-vs-compiled speedup
+per layer alongside the per-phase breakdown.
+
 Wall times follow the repo-wide convention (benchmarks/common.py): on CPU
 they are correctness-shaped observables, not accelerator predictions; the
 analytic FLOP/byte columns are machine-independent and exact.
@@ -95,6 +100,14 @@ class _Probe:
         self.plan = plan
         self.machine = machine
         self.records: List[PhaseRecord] = []
+        self.reorder_applied = False   # set by the plan's ingress permute
+
+    def note_reorder(self) -> None:
+        """Called by ``GraphExecutionPlan._ingress`` when the planned vertex
+        renumbering is actually applied -- the observation
+        ``WorkloadReport.mismatches`` checks describe()'s ``reorder``
+        against."""
+        self.reorder_applied = True
 
     def run(self, name: str, thunk, *, lp, **meta):
         from repro.core.backend import resolve_backend
@@ -215,6 +228,15 @@ def validate_report_dict(d: Dict[str, Any]) -> List[str]:
                 if isinstance(r.get(k), (int, float)))
         if abs(s - tot[k]) > 1e-6 * max(1.0, abs(s)):
             problems.append(f"totals.{k} != sum of phases")
+    comp = d.get("compiled")
+    if comp is not None:            # optional: compiled-timing reports only
+        if not isinstance(comp.get("model_s"), (int, float)) \
+                or comp["model_s"] < 0:
+            problems.append("compiled.model_s: missing/negative")
+        layers_s = comp.get("layers_s", [])
+        if not isinstance(layers_s, list) or any(
+                not isinstance(t, (int, float)) or t < 0 for t in layers_s):
+            problems.append("compiled.layers_s: ill-typed")
     return problems
 
 
@@ -232,6 +254,14 @@ class WorkloadReport:
     plan_summary: Dict[str, Any]
     records: List[PhaseRecord]
     output: Any = None
+    #: compiled wall times when the run also measured ``plan.compile()``:
+    #: {"model_s": float, "layers_s": [float per layer]} (None otherwise)
+    compiled_times: Optional[Dict[str, Any]] = None
+    #: whether the plan's ingress reorder permute was observed executing
+    reorder_applied: bool = False
+    #: which instrumented entry produced the records ("model" sees the
+    #: full ingress/egress path; "layer"/"phases" skip it)
+    entry: str = "model"
 
     # -- aggregation ---------------------------------------------------------
 
@@ -248,11 +278,35 @@ class WorkloadReport:
     def layer_records(self, layer: int) -> List[PhaseRecord]:
         return [r for r in self.records if r.layer == layer]
 
+    def eager_layer_time(self, layer: int) -> float:
+        """Summed eager wall time of one layer's recorded phases."""
+        return sum(r.wall_time_s for r in self.layer_records(layer))
+
+    def compiled_speedup(self) -> Optional[Dict[str, Any]]:
+        """Eager-vs-compiled speedups when compiled times were measured.
+
+        Returns ``{"model": eager_total/compiled_model, "layers": [per
+        layer]}`` -- the paper-style "how much does removing the eager
+        dispatch + phase barriers buy" number -- or None for eager-only
+        reports.  CPU-container caveat as everywhere in ``repro.profile``:
+        wall times are correctness-shaped observables, not accelerator
+        predictions.
+        """
+        ct = self.compiled_times
+        if not ct:
+            return None
+        eager_total = sum(r.wall_time_s for r in self.records)
+        layers = []
+        for i, ls in enumerate(ct.get("layers_s", [])):
+            layers.append(self.eager_layer_time(i) / max(ls, 1e-12))
+        return {"model": eager_total / max(ct["model_s"], 1e-12),
+                "layers": layers}
+
     # -- renderers -----------------------------------------------------------
 
     def to_dict(self) -> Dict[str, Any]:
         m = self.machine
-        return {
+        out = {
             "schema": SCHEMA,
             "version": SCHEMA_VERSION,
             "machine": {"name": m.name, "kind": m.kind,
@@ -262,6 +316,10 @@ class WorkloadReport:
             "phases": [r.to_dict() for r in self.records],
             "totals": self.totals(),
         }
+        if self.compiled_times is not None:
+            out["compiled"] = {**self.compiled_times,
+                               "speedup": self.compiled_speedup()}
+        return out
 
     def to_json(self, indent: int = 2) -> str:
         """Stable JSON rendering (sorted keys) of ``to_dict``."""
@@ -298,6 +356,17 @@ class WorkloadReport:
             f"{tot['flops'] / max(1.0, tot['bytes']):.2f} |  | "
             f"{tot['collective_bytes']:.3g} | "
             f"{tot['wall_time_s'] * 1e6:.1f} | 100.0 |")
+        sp = self.compiled_speedup()
+        if sp is not None:
+            ct = self.compiled_times
+            per_layer = ", ".join(
+                f"layer {i}: {s:.2f}x" for i, s in enumerate(sp["layers"]))
+            lines += [
+                "",
+                f"Compiled (plan.compile): {ct['model_s'] * 1e6:.1f} us vs "
+                f"eager {t_all * 1e6:.1f} us — {sp['model']:.2f}x"
+                + (f" ({per_layer})" if per_layer else ""),
+            ]
         return "\n".join(lines)
 
     # -- validation ----------------------------------------------------------
@@ -326,14 +395,31 @@ class WorkloadReport:
         whether the fused path actually ran (``run_phases`` with an inline
         bias may legitimately fall back at call time -- that fallback is
         exactly the drift this reports; model-path plans must always come
-        back clean), and the call-time backend *resolution* (a plan
+        back clean), the call-time backend *resolution* (a plan
         storing an unresolved "auto"/"pallas" alias disagrees with what
-        dispatch resolves).  Kernel-entry tier selection below this layer
-        is covered by tests/test_plan.py's mocked-platform tests, not
-        here.  Empty list == describe() is truthful.
+        dispatch resolves), whether the planned ``reorder`` permute
+        actually ran at ingress (observed only by ``run_model`` -- the
+        entry that owns ingress/egress), and the ``compiled`` capability
+        (a report carrying compiled times contradicts a describe() that
+        claims ``plan.compile()`` is unsupported).  Kernel-entry tier
+        selection below this layer is covered by tests/test_plan.py's
+        mocked-platform tests, not here.  Empty list == describe() is
+        truthful.
         """
         out: List[str] = []
         for d in plan.describe():
+            if self.entry == "model" and "reorder" in d:
+                observed_reorder = "degree" if self.reorder_applied \
+                    else "none"
+                if d["reorder"] != observed_reorder:
+                    out.append(
+                        f"layer {d['layer']}: describe reorder="
+                        f"{d['reorder']} but ingress observed "
+                        f"{observed_reorder}")
+            if self.compiled_times is not None and \
+                    d.get("compiled") is False:
+                out.append(f"layer {d['layer']}: describe compiled=False "
+                           "but a compiled run was measured")
             recs = self.layer_records(d["layer"])
             if not recs:
                 continue
@@ -391,28 +477,69 @@ class InstrumentedPlan:
             "layers": p.describe(),
         }
 
-    def _report(self, probe: _Probe, out) -> WorkloadReport:
+    def _report(self, probe: _Probe, out, entry: str) -> WorkloadReport:
         return WorkloadReport(machine=self.machine,
                               plan_summary=self._summary(),
-                              records=probe.records, output=out)
+                              records=probe.records, output=out,
+                              reorder_applied=probe.reorder_applied,
+                              entry=entry)
 
-    def run_model(self, params, x) -> WorkloadReport:
+    @staticmethod
+    def _time(fn, *args) -> float:
+        """Median wall seconds of ``fn(*args)`` via the ONE shared timing
+        harness (``repro.profile.bench.timeit``, warmup absorbs the jit
+        trace/compile) -- compiled and bench numbers share a protocol."""
+        from repro.profile.bench import timeit
+        return timeit(fn, *args, warmup=1, iters=3) / 1e6
+
+    def _compiled_times(self, params, x) -> Dict[str, Any]:
+        """Wall times of ``plan.compile()`` -- the whole forward plus each
+        planned layer compiled standalone (``plan.compile(layer=i)``), so
+        the report can state eager-vs-compiled speedup per layer.  The
+        replay walks the same ingress/layer/ReLU sequence ``run_model``
+        executes, in the plan's execution layout."""
+        plan = self.plan
+        model_s = self._time(plan.compile(), params, x)
+        layers_s = []
+        h = plan._ingress(x)
+        for i in range(plan.num_layers):
+            sub = params[f"conv{i}"]
+            fl = plan.compile(layer=i)
+            layers_s.append(self._time(fl, sub, h))
+            h = fl(sub, h)
+            if i < plan.num_layers - 1:
+                h = jax.nn.relu(h)
+        return {"model_s": model_s, "layers_s": layers_s}
+
+    def run_model(self, params, x, *, compiled: bool = False
+                  ) -> WorkloadReport:
         """Instrumented full forward; returns the WorkloadReport (the model
-        output rides along as ``report.output``)."""
+        output rides along as ``report.output``).
+
+        ``compiled=True`` additionally measures the ``plan.compile()`` path
+        (whole model and per layer) and attaches the wall times as
+        ``report.compiled_times`` -- ``report.compiled_speedup()`` /
+        ``to_markdown()`` then state the eager-vs-compiled speedup.  The
+        eager per-phase records are unchanged: phase boundaries need eager
+        dispatch, so the compiled executable is timed as a whole.
+        """
         for _ in range(self.warmup):
             jax.block_until_ready(self.plan.run_model(params, x))
         probe = _Probe(self.plan, self.machine)
         out = self.plan.run_model(params, x, _probe=probe)
-        return self._report(probe, out)
+        report = self._report(probe, out, "model")
+        if compiled:
+            report.compiled_times = self._compiled_times(params, x)
+        return report
 
     def run_layer(self, params, x, *, layer: int = 0) -> WorkloadReport:
         """Instrumented single layer (conv param subtree)."""
         probe = _Probe(self.plan, self.machine)
         out = self.plan.run_layer(params, x, layer=layer, _probe=probe)
-        return self._report(probe, out)
+        return self._report(probe, out, "layer")
 
     def run_phases(self, x, weights, **kw) -> WorkloadReport:
         """Instrumented raw weight-list layer (``plan.run_phases``)."""
         probe = _Probe(self.plan, self.machine)
         out = self.plan.run_phases(x, weights, _probe=probe, **kw)
-        return self._report(probe, out)
+        return self._report(probe, out, "phases")
