@@ -1,0 +1,165 @@
+"""Offered-load serving sweep: GraphServeEngine latency/throughput curves.
+
+One ``BenchSpec`` drives the GCN serving engine through a closed-loop
+offered-load sweep: for each load level, a fresh ``GraphServeEngine`` is
+warmed up (every bucket compiled before admission), a synthetic workload of
+node-prediction requests (1..max-seeds seed batches drawn from a seeded
+RNG) is submitted, and ``engine.run()`` drains it through the bucketed
+compiled plans.  Each sweep point lands one CSV row (under
+``experiments/bench/``) with the per-request latency percentiles
+(p50/p95/p99 ms), end-to-end throughput (req/s), and the serving-contract
+counters (bucket hits/misses, retraces, plan-cache stats).
+
+Under dry-run (the scripts/smoke.sh gate) the sweep is also the serving
+acceptance check, and it HARD-FAILS on any contract violation:
+
+  * a bucket miss (every synthetic request must fit the bucket ladder),
+  * a retrace after ``warmup()`` (each bucket compiles exactly once),
+  * empty serving stats (served != submitted, or zero-latency percentiles),
+  * padded-vs-eager drift: for sampled probe requests the bucketed compiled
+    result must be BIT-IDENTICAL to the same plan's eager forward on the
+    unpadded union block,
+  * a ``workload_report()`` that fails schema validation or lacks the
+    serving section.
+
+The 200-request point doubles as the repo's serving acceptance criterion
+(drain 200 requests through <= 4 buckets with zero retraces).  Wall-clock
+convention as everywhere: CPU latencies are correctness-shaped observables,
+not accelerator predictions.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models.gcn import make_paper_model
+from repro.profile.bench import BenchSpec, run_specs
+from repro.profile.machine import H100
+from repro.serve import GraphRequest, GraphServeEngine, default_buckets
+
+#: closed-loop offered loads (requests per drain); 200 is the acceptance run
+LOADS = (25, 50, 100, 200)
+FANOUTS = (3, 3)
+SEED_LEVELS = (4, 16)       # 2 buckets; acceptance allows <= 4
+MAX_SEEDS = SEED_LEVELS[-1]
+
+
+def _make_engine(ctx) -> GraphServeEngine:
+    m = make_paper_model("gcn", ctx.spec)
+    eng = GraphServeEngine(
+        ctx.g, m.cfg, None, ctx.x, ctx.spec.num_classes,
+        buckets=default_buckets(FANOUTS, SEED_LEVELS,
+                                max_inputs=ctx.g.num_vertices),
+        fanouts=FANOUTS, max_batch=8, seed=0, machine=ctx.machine)
+    eng.params = eng.init_params(jax.random.PRNGKey(0))
+    return eng
+
+
+def _workload(eng: GraphServeEngine, n: int, rng: np.random.Generator):
+    for i in range(n):
+        s = rng.choice(eng.g.num_vertices,
+                       size=int(rng.integers(1, MAX_SEEDS + 1)),
+                       replace=False)
+        eng.submit(GraphRequest(rid=i, seeds=s))
+
+
+def _check_contract(name: str, eng: GraphServeEngine, n: int,
+                    done: list) -> None:
+    """The dry-run serving gate: any violation is a hard smoke failure."""
+    s = eng.stats()
+    if len(done) != n or s["served"] != n:
+        raise RuntimeError(f"{name}: served {s['served']}/{n} requests "
+                           "(drain incomplete -- empty/partial stats)")
+    if s["bucket_misses"]:
+        raise RuntimeError(f"{name}: {s['bucket_misses']} bucket miss(es); "
+                           "every synthetic request must fit the ladder")
+    if s["retraces"]:
+        raise RuntimeError(f"{name}: {s['retraces']} retrace(s) after "
+                           "warmup(); each bucket compiles exactly once")
+    if not (0 < s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]):
+        raise RuntimeError(f"{name}: degenerate latency percentiles "
+                           f"{s['p50_ms']}/{s['p95_ms']}/{s['p99_ms']}")
+    if len(eng.buckets) > 4:
+        raise RuntimeError(f"{name}: {len(eng.buckets)} buckets > 4")
+    if any(r.logits is None or not np.isfinite(r.logits).all()
+           for r in done):
+        raise RuntimeError(f"{name}: non-finite/missing logits in results")
+    # padded-vs-eager bit identity on fresh probe blocks (one per bucket
+    # seed level, so both buckets are exercised)
+    probe_rng = np.random.default_rng(7)
+    for lvl in SEED_LEVELS:
+        seeds = probe_rng.choice(eng.g.num_vertices, size=lvl,
+                                 replace=False)
+        prep = eng.prepare(seeds)
+        padded = eng.run_prepared(prep)
+        eager = eng.run_eager(prep)
+        if not np.array_equal(padded, eager):
+            err = float(np.abs(padded - eager).max())
+            raise RuntimeError(
+                f"{name}: padded compiled result differs from unpadded "
+                f"eager forward (max |diff|={err:.3e}); the bucket "
+                "contract is bitwise")
+    report = eng.workload_report()         # .validate() runs inside
+    if report.serving is None or report.serving["requests"] != n:
+        raise RuntimeError(f"{name}: workload report lacks the serving "
+                           "section")
+
+
+def _load_point(ctx, num_requests):
+    """One offered-load level: fresh engine, warmup, drain, one CSV row."""
+    eng = _make_engine(ctx)
+    traces = eng.warmup()
+    if any(t != 1 for t in traces.values()):
+        raise RuntimeError(f"warmup() traced {traces}; expected exactly "
+                           "one compile per bucket")
+    _workload(eng, num_requests, np.random.default_rng(num_requests))
+    done = eng.run()
+    s = eng.stats()
+    name = f"serve/load/{num_requests}"
+    if ctx.dry:
+        _check_contract(name, eng, num_requests, done)
+    ctx.emit(name, 0.0, requests=num_requests,
+             p50_ms=round(s["p50_ms"], 3), p95_ms=round(s["p95_ms"], 3),
+             p99_ms=round(s["p99_ms"], 3),
+             throughput_rps=round(s["throughput_rps"], 1),
+             bucket_hits=s["bucket_hits"],
+             bucket_misses=s["bucket_misses"], retraces=s["retraces"],
+             buckets=len(eng.buckets),
+             plan_cache_size=s["plan_cache"]["size"],
+             steps=s["steps"])
+
+
+SPECS = [
+    BenchSpec(name="serve/load", graph="reddit", max_vertices=2048,
+              max_feature=64, dry_max_vertices=256, machine=H100,
+              sweep=LOADS, measure=_load_point, dry="run"),
+]
+
+
+def post_run(rows, dry: bool = False):
+    """Sweep accounting: every offered-load level must have emitted a row
+    (a silently skipped level would merge unvalidated)."""
+    names = {r["name"] for r in rows}
+    missing = [f"serve/load/{n}" for n in LOADS
+               if f"serve/load/{n}" not in names]
+    if missing:
+        raise RuntimeError("serving sweep points silently skipped: "
+                           + ", ".join(missing))
+    print(f"# serving sweep: {len(LOADS)} load level(s) validated, "
+          "0 silent")
+
+
+def run(dry: bool = False):
+    """Direct-invocation entry (``python -m benchmarks.bench_serve
+    [--dry-run]``); writes the same CSV artifact benchmarks/run.py does."""
+    from repro.profile.bench import BENCH_ARTIFACT_DIR
+    rows = run_specs(
+        SPECS, dry=dry,
+        csv=BENCH_ARTIFACT_DIR / f"bench_serve{'.dry' if dry else ''}.csv")
+    post_run(rows, dry=dry)
+
+
+if __name__ == "__main__":
+    import sys
+    run(dry="--dry-run" in sys.argv)

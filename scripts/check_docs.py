@@ -27,7 +27,19 @@ PUBLIC_SURFACE = {
         "GraphExecutionPlan.run_layer", "GraphExecutionPlan.run_phases",
         "GraphExecutionPlan.describe", "GraphExecutionPlan.layer_costs",
         "GraphExecutionPlan.instrument", "GraphExecutionPlan.compile",
-        "CompiledPlan",
+        "CompiledPlan", "plan_cache_stats", "clear_plan_cache",
+    ],
+    "repro.serve.core": [
+        "SlotServeCore", "SlotServeCore.submit", "SlotServeCore.run",
+        "SlotServeCore.stats",
+    ],
+    "repro.serve.graph_engine": [
+        "GraphServeEngine", "GraphServeEngine.warmup",
+        "GraphServeEngine.prepare", "GraphServeEngine.run_prepared",
+        "GraphServeEngine.run_eager", "GraphServeEngine.select_bucket",
+        "GraphServeEngine.workload_report", "GraphServeEngine.stats",
+        "GraphRequest", "Bucket", "Bucket.fits", "default_buckets",
+        "union_two_hop",
     ],
     "repro.graph.reorder": [
         "degree_reorder", "choose_reorder", "reuse_distance_stats",
@@ -73,8 +85,10 @@ CONTENT_REQUIREMENTS = {
     ("repro.core.plan", "GraphExecutionPlan.instrument"): [
         ">>>", "WorkloadReport", "machine"],
     ("repro.core.plan", "GraphExecutionPlan.compile"): [
-        ">>>", "donate", "retrace", "layer"],
+        ">>>", "donate", "retrace", "layer", "dynamic"],
     ("repro.kernels.ops", "seg_agg"): ["seg_agg_planned", "host"],
+    ("repro.serve.graph_engine", "GraphServeEngine.warmup"): [
+        "compile", "admission", "clear_plan_cache"],
 }
 
 REQUIRED_FILES = {
@@ -88,6 +102,11 @@ REQUIRED_FILES = {
         "Machine", "TPU_V5E", "A100", "V100", "WorkloadReport",
         "to_markdown", "BenchSpec", "instrument", "workload-report",
         "balance", "compiled"],
+    ROOT / "docs" / "serving.md": [
+        "GraphServeEngine", "SlotServeCore", "bucket", "warmup",
+        "clear_plan_cache", "plan_cache_stats", "dynamic", "retrace",
+        "p50", "p99", "throughput", "bench_serve", "two_hop_batch",
+        "bit-identical", "eviction"],
 }
 
 MIN_DOC_LEN = 40  # a one-word docstring is not documentation

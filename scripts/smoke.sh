@@ -11,10 +11,14 @@
 #      eager dispatch, no retrace on the second call), the plan/compiled
 #      cells land the eager-vs-compiled speedup CSV under
 #      experiments/bench/ -- and the run FAILS if any scenario in the
-#      matrix is skipped without a logged reason,
+#      matrix is skipped without a logged reason.  The dry run ALSO drains
+#      the GraphServeEngine offered-load sweep (bench_serve): every load
+#      level warms up the bucket ladder, serves the synthetic workload,
+#      and HARD-FAILS on bucket misses, retraces after warmup(), empty
+#      serving stats, or padded-vs-eager bit drift (docs/serving.md),
 #   3. the docs gate (README + docs/planner.md + docs/characterization.md
-#      exist, public planner/profile/reorder symbols documented --
-#      scripts/check_docs.py).
+#      + docs/serving.md exist, public planner/profile/serving symbols
+#      documented -- scripts/check_docs.py).
 #
 # Usage: scripts/smoke.sh [extra pytest args...]
 set -euo pipefail
@@ -30,9 +34,11 @@ python -m pytest -x -q \
   --deselect tests/test_distributed.py::test_ctx_parallel_attention_sharded \
   "$@"
 
-echo "== planner dry-run (backend x ordering x fusion x reorder x partition;"
-echo "   instrumented: one schema-validated WorkloadReport per scenario,"
-echo "   compiled contract: bitwise eager equality + no retrace) =="
+echo "== planner + serving dry-run (backend x ordering x fusion x reorder x"
+echo "   partition; instrumented: one schema-validated WorkloadReport per"
+echo "   scenario, compiled contract: bitwise eager equality + no retrace;"
+echo "   serving: bucketed offered-load drain -- bucket misses, retraces,"
+echo "   or empty serving stats hard-fail) =="
 python -m benchmarks.run --dry-run
 
 echo "== docs gate =="

@@ -213,19 +213,23 @@ class GraphExecutionPlan:
     # -- execution ----------------------------------------------------------
 
     def run_layer(self, params: Dict, x: jnp.ndarray, *, layer: int = 0,
-                  _probe=None) -> jnp.ndarray:
+                  _probe=None, graph: Optional[Graph] = None) -> jnp.ndarray:
         """One planned layer from its conv param subtree ({"lin": ...} or
         {"mlp1": ..., "mlp2": ...}).  Operates in the plan's EXECUTION
         layout: in distributed plans ``x`` must be padded to the partition
         layout, in reordered plans rows follow the renumbered vertex ids
-        (``run_model`` handles both via its ingress/egress)."""
+        (``run_model`` handles both via its ingress/egress).  ``graph``
+        overrides the plan's graph for this dispatch (the dynamic serving
+        path -- see ``compile(dynamic=True)``); only valid for plain XLA
+        unfused local plans, whose dispatch reads nothing but the edge
+        arrays."""
         lp = self.layers[layer]
         weights, bias_post = self._split_params(lp, params)
         if self.distributed:
             return self._run_distributed(lp, x, weights, bias_post,
                                          probe=_probe)
-        return _execute_layer(self.g, lp, x, weights, bias_post=bias_post,
-                              probe=_probe)
+        return _execute_layer(self.g if graph is None else graph, lp, x,
+                              weights, bias_post=bias_post, probe=_probe)
 
     def _ingress(self, x: jnp.ndarray, *, _probe=None) -> jnp.ndarray:
         """Natural (V, F) features -> the plan's execution layout: the
@@ -263,7 +267,8 @@ class GraphExecutionPlan:
         return h
 
     def run_model(self, params: Dict, x: jnp.ndarray, *,
-                  _probe=None, compiled: bool = False) -> jnp.ndarray:
+                  _probe=None, compiled: bool = False,
+                  graph: Optional[Graph] = None) -> jnp.ndarray:
         """Full forward: planned layers with ReLU between them.
 
         Accepts ``x`` in the natural (V, F) layout.  Distributed plans pad
@@ -275,6 +280,12 @@ class GraphExecutionPlan:
 
         ``compiled=True`` routes through ``plan.compile()`` -- the cached
         single jitted callable -- instead of the eager per-phase loop.
+
+        ``graph=`` substitutes another graph's edge arrays for this
+        dispatch while replaying the SAME planned decisions (the serving
+        path: one plan per shape bucket, many sampled blocks through it --
+        see ``compile(dynamic=True)``).  Only plain XLA unfused local
+        plans accept it; ``x`` rows must match the substitute graph.
         """
         if compiled:
             if _probe is not None:
@@ -282,16 +293,46 @@ class GraphExecutionPlan:
                     "per-phase instrumentation needs eager phase "
                     "boundaries; InstrumentedPlan times the compiled "
                     "path separately (run_model(..., compiled=True))")
+            if graph is not None:
+                return self.compile(dynamic=True)(params, x, graph)
             return self.compile()(params, x)
+        if graph is not None:
+            self._check_dynamic_ok()
         h = self._ingress(x, _probe=_probe)
         for i in range(self.num_layers):
-            h = self.run_layer(params[f"conv{i}"], h, layer=i, _probe=_probe)
+            h = self.run_layer(params[f"conv{i}"], h, layer=i, _probe=_probe,
+                               graph=graph)
             if i < self.num_layers - 1:
                 h = jax.nn.relu(h)
         return self._egress(h)
 
+    def _check_dynamic_ok(self) -> None:
+        """Dynamic (graph-as-argument) dispatch preconditions: nothing in
+        the traced path may depend on the EDGE CONTENT the plan was built
+        with.  XLA unfused layers qualify (segment ops read the arrays as
+        data); Pallas/fused layers bake host-built blocked layouts, and
+        partition/reorder bake edge-derived permutations -- all rejected."""
+        problems = []
+        if self.distributed:
+            problems.append("partitioned plans bake edge-derived shards")
+        if self.perm is not None:
+            problems.append("reordered plans bake an edge-derived permute")
+        for lp in self.layers:
+            if is_pallas(lp.backend) or lp.fused:
+                problems.append(
+                    f"layer {lp.index} ({lp.backend}"
+                    f"{', fused' if lp.fused else ''}) bakes a host-built "
+                    "blocked layout")
+        if problems:
+            raise ValueError(
+                "dynamic graph dispatch needs edge-content-free tracing: "
+                + "; ".join(problems)
+                + " (build the bucket plan with backend='xla', "
+                "fused=False, reorder='none', mesh=None)")
+
     def compile(self, *, donate: bool = False,
-                layer: Optional[int] = None) -> "CompiledPlan":
+                layer: Optional[int] = None,
+                dynamic: bool = False) -> "CompiledPlan":
         """ONE jitted callable for the planned forward (the production
         entry point).
 
@@ -313,9 +354,19 @@ class GraphExecutionPlan:
           layer: compile a single planned layer instead of the full model
             (``(conv_params, h) -> h'`` in the plan's execution layout) --
             what per-layer compiled timing in ``repro.profile`` uses.
+          dynamic: compile the forward with the GRAPH as a runtime
+            argument instead of a baked constant -- the serving-bucket
+            mode (``repro.serve.graph_engine``).  The callable signature
+            becomes ``(params, x, graph)`` where ``graph`` is any
+            ``Graph`` whose ``src``/``dst``/``in_deg`` shapes match the
+            plan's template graph; edge CONTENT varies per call with zero
+            retraces, so one compiled callable serves every sampled block
+            padded into the bucket's shape.  Requires edge-content-free
+            tracing: plain XLA, unfused, local, unreordered plans only
+            (``_check_dynamic_ok``); incompatible with ``layer=``.
 
-        Compiled callables are cached per (donate, layer) on the plan, so
-        ``plan.compile()(params, x)`` in a loop never re-jits.
+        Compiled callables are cached per (donate, layer, dynamic) on the
+        plan, so ``plan.compile()(params, x)`` in a loop never re-jits.
 
         Worked example::
 
@@ -332,11 +383,17 @@ class GraphExecutionPlan:
                 "a Pallas-tier layer is missing its plan-owned blocked "
                 "layout (build plans through build_plan/plan_for_* rather "
                 "than by hand)")
-        key = (bool(donate), layer)
+        if dynamic:
+            if layer is not None:
+                raise ValueError("dynamic compilation covers the full "
+                                 "forward; layer= is incompatible")
+            self._check_dynamic_ok()
+        key = (bool(donate), layer, bool(dynamic))
         fn = self._compiled.get(key)
         if fn is None:
             fn = self._compiled[key] = CompiledPlan(self, donate=donate,
-                                                    layer=layer)
+                                                    layer=layer,
+                                                    dynamic=dynamic)
         return fn
 
     def run_phases(self, x: jnp.ndarray, weights, *, layer: int = 0,
@@ -472,10 +529,11 @@ class CompiledPlan:
     """
 
     def __init__(self, plan: "GraphExecutionPlan", *, donate: bool = False,
-                 layer: Optional[int] = None):
+                 layer: Optional[int] = None, dynamic: bool = False):
         self.plan = plan
         self.donate = donate
         self.layer = layer
+        self.dynamic = dynamic
         self._num_traces = 0
         self._seen = set()
 
@@ -485,7 +543,17 @@ class CompiledPlan:
                 return plan.run_model(params, x)
             return plan.run_layer(params, x, layer=layer)
 
-        self._fn = jax.jit(fwd, donate_argnums=(1,) if donate else ())
+        def fwd_dynamic(params, x, src, dst, in_deg):
+            self._num_traces += 1   # runs at TRACE time only
+            g = plan.g._replace(src=src, dst=dst, in_deg=in_deg,
+                                row_ptr=None)
+            return plan.run_model(params, x, graph=g)
+
+        if dynamic:
+            self._fn = jax.jit(fwd_dynamic,
+                               donate_argnums=(1,) if donate else ())
+        else:
+            self._fn = jax.jit(fwd, donate_argnums=(1,) if donate else ())
 
     @property
     def num_traces(self) -> int:
@@ -493,15 +561,44 @@ class CompiledPlan:
         return self._num_traces
 
     @staticmethod
-    def _signature(params, x):
+    def _signature(params, *arrays):
         leaves, treedef = jax.tree_util.tree_flatten(params)
-        return (tuple(x.shape), str(getattr(x, "dtype", type(x))), treedef,
+        return (tuple((tuple(a.shape), str(getattr(a, "dtype", type(a))))
+                      for a in arrays), treedef,
                 tuple((tuple(p.shape), str(p.dtype)) for p in leaves))
 
-    def __call__(self, params, x):
-        sig = self._signature(params, x)
+    def _graph_args(self, graph: Graph):
+        """Validate + destructure a runtime graph for the dynamic mode.
+
+        Shape mismatches are raised HERE (a bucket-contract violation the
+        serving engine must catch), never silently absorbed by a retrace."""
+        t = self.plan.g
+        if graph.num_vertices != t.num_vertices or \
+                graph.src.shape != t.src.shape or \
+                graph.in_deg.shape != t.in_deg.shape:
+            raise ValueError(
+                f"dynamic graph shape {graph.num_vertices}V/"
+                f"{graph.src.shape[0]}E does not match the bucket template "
+                f"{t.num_vertices}V/{t.src.shape[0]}E -- pad the block "
+                "into the bucket before dispatch")
+        return (jnp.asarray(graph.src), jnp.asarray(graph.dst),
+                jnp.asarray(graph.in_deg))
+
+    def __call__(self, params, x, graph: Optional[Graph] = None):
+        if self.dynamic:
+            if graph is None:
+                raise ValueError("dynamic compiled plans take (params, x, "
+                                 "graph)")
+            args = (x,) + self._graph_args(graph)
+        else:
+            if graph is not None:
+                raise ValueError("this compiled plan is static; build it "
+                                 "with plan.compile(dynamic=True) to pass "
+                                 "a runtime graph")
+            args = (x,)
+        sig = self._signature(params, *args)
         before = self._num_traces
-        out = self._fn(params, x)
+        out = self._fn(params, *args)
         if self._num_traces > before and sig in self._seen:
             raise RuntimeError(
                 "plan.compile() retraced for an input signature it already "
@@ -623,11 +720,63 @@ _CACHE_LIMIT = 64
 
 _REORDER_CACHE: Dict = {}   # graph_key -> (src_ref, reordered Graph, perm)
 
+#: plan-cache accounting (the serving engine's eviction policy reads these):
+#: hits/misses count ``_cached_plan`` lookups, evictions count every entry
+#: dropped -- FIFO aging in ``_evict_oldest`` AND explicit
+#: ``clear_plan_cache(keep=...)`` sweeps.
+_PLAN_CACHE_STATS: Dict[str, int] = {"hits": 0, "misses": 0, "evictions": 0}
 
-def clear_plan_cache() -> None:
-    _PLAN_CACHE.clear()
-    _BLOCKED_CACHE.clear()
-    _REORDER_CACHE.clear()
+
+def plan_cache_stats() -> Dict[str, int]:
+    """Observable plan-cache state: ``{size, limit, hits, misses,
+    evictions, blocked_size, reorder_size}``.
+
+    ``size`` counts live ``_PLAN_CACHE`` entries; ``hits``/``misses`` count
+    cached-plan lookups since the last full ``clear_plan_cache()``;
+    ``evictions`` counts entries dropped by FIFO aging or by
+    ``clear_plan_cache(keep=...)``.  The serving engine's eviction policy
+    (``repro.serve.graph_engine``) polls this to decide when to sweep
+    transient per-request plans, and tests assert on it -- previously the
+    cache internals were private and untestable.
+    """
+    return {"size": len(_PLAN_CACHE), "limit": _CACHE_LIMIT,
+            "blocked_size": len(_BLOCKED_CACHE),
+            "reorder_size": len(_REORDER_CACHE),
+            **_PLAN_CACHE_STATS}
+
+
+def clear_plan_cache(keep=None) -> int:
+    """Drop cached plans (and their blocked/reorder cache lines).
+
+    ``keep=None`` wipes everything and resets the hit/miss/eviction
+    counters (the test-isolation path).  ``keep=<iterable of
+    GraphExecutionPlan>`` is the serving engine's eviction policy: every
+    cached plan NOT in ``keep`` is evicted (counted in ``evictions``),
+    while the kept plans -- e.g. the engine's per-bucket compiled plans --
+    and the blocked/reorder layouts of their graphs survive, so a bounded
+    bucket set keeps a bounded cache no matter how many transient
+    per-request graphs were planned.  Returns the number of plan entries
+    dropped.
+    """
+    if keep is None:
+        n = len(_PLAN_CACHE)
+        _PLAN_CACHE.clear()
+        _BLOCKED_CACHE.clear()
+        _REORDER_CACHE.clear()
+        _PLAN_CACHE_STATS.update(hits=0, misses=0, evictions=0)
+        return n
+    keep_plans = {id(p) for p in keep}
+    keep_graphs = {_graph_key(p.g) for p in keep}
+    drop = [k for k, (_, plan) in _PLAN_CACHE.items()
+            if id(plan) not in keep_plans]
+    for k in drop:
+        del _PLAN_CACHE[k]
+    for k in [k for k in _BLOCKED_CACHE if k[0] not in keep_graphs]:
+        del _BLOCKED_CACHE[k]          # key = (graph_key, tile_m)
+    for k in [k for k in _REORDER_CACHE if k not in keep_graphs]:
+        del _REORDER_CACHE[k]          # key = graph_key
+    _PLAN_CACHE_STATS["evictions"] += len(drop)
+    return len(drop)
 
 
 def _graph_key(g: Graph):
@@ -643,6 +792,8 @@ def _evict_oldest(cache: Dict) -> None:
     out one at a time instead of wiping hot full-graph entries wholesale."""
     while len(cache) >= _CACHE_LIMIT:
         cache.pop(next(iter(cache)))
+        if cache is _PLAN_CACHE:
+            _PLAN_CACHE_STATS["evictions"] += 1
 
 
 def _blocked_for(g: Graph, tile_m: int) -> BlockedGraph:
@@ -681,7 +832,9 @@ def _cached_plan(g: Graph, spec_key, builder):
     key = (_graph_key(g), spec_key)
     hit = _PLAN_CACHE.get(key)
     if hit is not None and hit[0] is g.src:
+        _PLAN_CACHE_STATS["hits"] += 1
         return hit[1]
+    _PLAN_CACHE_STATS["misses"] += 1
     _evict_oldest(_PLAN_CACHE)
     plan = builder()
     _PLAN_CACHE[key] = (g.src, plan)

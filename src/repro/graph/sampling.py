@@ -10,7 +10,7 @@ jit graph.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -62,9 +62,19 @@ def sample_neighbors(g: Graph, seeds: np.ndarray, fanout: int,
 
 
 def two_hop_batch(g: Graph, batch: np.ndarray, fanouts: Tuple[int, int],
-                  seed: int = 0) -> Tuple[SampledBlock, SampledBlock]:
-    """Paper's SAG setting: a batch of vertices + their sampled 2-hop frontier."""
-    rng = np.random.default_rng(seed)
+                  seed: int = 0,
+                  rng: Optional[np.random.Generator] = None
+                  ) -> Tuple[SampledBlock, SampledBlock]:
+    """Paper's SAG setting: a batch of vertices + their sampled 2-hop frontier.
+
+    ``rng`` (a ``np.random.Generator``) takes precedence over ``seed``: a
+    streaming caller (the serving loop, a training pipeline) passes one
+    long-lived generator and gets fresh, reproducible draws per call instead
+    of rebuilding ``default_rng(seed)`` -- and therefore identical samples --
+    every time.  ``seed`` keeps the one-shot contract for existing callers.
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
     hop1 = sample_neighbors(g, batch, fanouts[0], rng)
     hop2 = sample_neighbors(g, hop1.input_ids, fanouts[1], rng)
     return hop2, hop1  # execution order: farthest hop first

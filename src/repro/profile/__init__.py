@@ -26,17 +26,17 @@ internals (dataflow, characterize) may import presets from here without a
 cycle; plan/phase types are imported lazily inside functions.
 """
 
-from repro.profile.machine import (A100, MACHINES, TPU_V5E, V100, Machine,
-                                   get_machine, machine_for_backend)
+from repro.profile.machine import (A100, H100, MACHINES, TPU_V5E, V100,
+                                   Machine, get_machine, machine_for_backend)
 
 __all__ = [
-    "Machine", "TPU_V5E", "A100", "V100", "MACHINES", "get_machine",
+    "Machine", "TPU_V5E", "A100", "H100", "V100", "MACHINES", "get_machine",
     "machine_for_backend",
     # lazy (instrument.py / bench.py):
     "InstrumentedPlan", "WorkloadReport", "PhaseRecord",
     "WorkloadReportError", "validate_report_dict",
     "BenchSpec", "BenchContext", "run_specs", "timeit", "write_csv",
-    "bench_graph",
+    "bench_graph", "latency_percentiles",
 ]
 
 _LAZY = {
@@ -51,6 +51,7 @@ _LAZY = {
     "timeit": "repro.profile.bench",
     "write_csv": "repro.profile.bench",
     "bench_graph": "repro.profile.bench",
+    "latency_percentiles": "repro.profile.bench",
 }
 
 

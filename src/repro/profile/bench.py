@@ -57,6 +57,22 @@ def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(times) * 1e6)
 
 
+def latency_percentiles(samples_s: List[float]) -> Dict[str, float]:
+    """Serving-latency percentiles from per-request wall seconds.
+
+    Returns ``{"p50_ms", "p95_ms", "p99_ms"}`` (milliseconds; zeros for an
+    empty sample set so callers can always emit the columns).  The ONE
+    percentile definition shared by ``repro.serve`` engine stats, the
+    ``WorkloadReport`` serving section, and the ``bench_serve`` CSV --
+    numpy's linear interpolation, so p50 <= p95 <= p99 always holds.
+    """
+    if not samples_s:
+        return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
+    arr = np.asarray(samples_s, dtype=np.float64) * 1e3
+    p50, p95, p99 = np.percentile(arr, [50.0, 95.0, 99.0])
+    return {"p50_ms": float(p50), "p95_ms": float(p95), "p99_ms": float(p99)}
+
+
 def make_row(name: str, us_per_call: float, **derived) -> Dict[str, Any]:
     row = {"name": name, "us_per_call": round(us_per_call, 2)}
     row.update(derived)

@@ -237,6 +237,40 @@ def validate_report_dict(d: Dict[str, Any]) -> List[str]:
         if not isinstance(layers_s, list) or any(
                 not isinstance(t, (int, float)) or t < 0 for t in layers_s):
             problems.append("compiled.layers_s: ill-typed")
+    serving = d.get("serving")
+    if serving is not None:         # optional: serving-session reports only
+        problems += _validate_serving(serving)
+    return problems
+
+
+def _validate_serving(s: Dict[str, Any]) -> List[str]:
+    """Schema checks for a report's ``serving`` section (the per-request
+    latency/throughput view ``GraphServeEngine.workload_report`` attaches):
+    required counters present, non-negative, percentiles monotone."""
+    problems: List[str] = []
+    for k in ("requests", "bucket_misses", "retraces"):
+        v = s.get(k)
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            problems.append(f"serving.{k}: missing/negative")
+    for k in ("p50_ms", "p95_ms", "p99_ms", "throughput_rps"):
+        v = s.get(k)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+            problems.append(f"serving.{k}: missing/negative")
+    pcts = [s.get(k) for k in ("p50_ms", "p95_ms", "p99_ms")]
+    if all(isinstance(p, (int, float)) for p in pcts) and \
+            not (pcts[0] <= pcts[1] <= pcts[2]):
+        problems.append("serving percentiles not monotone "
+                        "(p50 <= p95 <= p99)")
+    buckets = s.get("buckets")
+    if not isinstance(buckets, list):
+        problems.append("serving.buckets: missing")
+    else:
+        for i, b in enumerate(buckets):
+            for k in ("num_seeds", "num_inputs", "num_edges", "hits"):
+                v = b.get(k) if isinstance(b, dict) else None
+                if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                    problems.append(
+                        f"serving.buckets[{i}].{k}: missing/negative")
     return problems
 
 
@@ -259,6 +293,11 @@ class WorkloadReport:
     compiled_times: Optional[Dict[str, Any]] = None
     #: whether the plan's ingress reorder permute was observed executing
     reorder_applied: bool = False
+    #: serving-session stats when the report describes a serving workload
+    #: (``GraphServeEngine.workload_report``): requests, p50/p95/p99 ms,
+    #: throughput_rps, bucket_misses, retraces, per-bucket hit counts
+    #: (None for plain characterization reports)
+    serving: Optional[Dict[str, Any]] = None
     #: which instrumented entry produced the records ("model" sees the
     #: full ingress/egress path; "layer"/"phases" skip it)
     entry: str = "model"
@@ -319,6 +358,8 @@ class WorkloadReport:
         if self.compiled_times is not None:
             out["compiled"] = {**self.compiled_times,
                                "speedup": self.compiled_speedup()}
+        if self.serving is not None:
+            out["serving"] = dict(self.serving)
         return out
 
     def to_json(self, indent: int = 2) -> str:
@@ -356,6 +397,16 @@ class WorkloadReport:
             f"{tot['flops'] / max(1.0, tot['bytes']):.2f} |  | "
             f"{tot['collective_bytes']:.3g} | "
             f"{tot['wall_time_s'] * 1e6:.1f} | 100.0 |")
+        if self.serving is not None:
+            s = self.serving
+            lines += [
+                "",
+                f"Serving: {s['requests']} requests at "
+                f"{s['throughput_rps']:.1f} req/s — p50 {s['p50_ms']:.2f} ms"
+                f", p95 {s['p95_ms']:.2f} ms, p99 {s['p99_ms']:.2f} ms "
+                f"({s['bucket_misses']} bucket misses, "
+                f"{s['retraces']} retraces)",
+            ]
         sp = self.compiled_speedup()
         if sp is not None:
             ct = self.compiled_times

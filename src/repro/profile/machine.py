@@ -13,6 +13,8 @@ Presets::
     TPU_V5E   197 TFLOP/s bf16, 819 GB/s HBM, 4x50 GB/s ICI, 128 MiB VMEM
     A100      312 TFLOP/s bf16, 1555 GB/s HBM, 12x25 GB/s NVLink,
               192 KiB SMEM/L1 carveout per SM (the GPU occupancy model)
+    H100      989 TFLOP/s bf16, 3350 GB/s HBM3, 18x25 GB/s NVLink 4,
+              228 KiB SMEM/L1 carveout per SM (the serving-tier GPU)
     V100      15.7 TFLOP/s fp32, 900 GB/s HBM -- the PAPER's machine; its
               balance point (~17.4 F/B) is the classification threshold
               behind Table 3's "Execution Bound" row.
@@ -112,6 +114,18 @@ A100 = Machine(
     regfile_bytes=256 * 1024, target_ctas=4,
     row_align=32, matrix_tile=16)
 
+#: H100-SXM5 (bf16 tensor cores, dense).  Same occupancy model as A100 with
+#: Hopper's larger SMEM/L1 carveout and HBM3; its steeper balance point
+#: (~295 F/B) pushes even more GCN phases memory-bound -- the machine the
+#: serving benchmarks (``bench_serve``) price latency against.
+H100 = Machine(
+    name="h100", kind="gpu",
+    peak_flops=989e12, hbm_bw=3350e9,
+    interconnect_bw=25e9, interconnect_links=18,    # NVLink 4
+    on_chip_bytes=228 * 1024,                       # unified SMEM/L1 per SM
+    regfile_bytes=256 * 1024, target_ctas=4,
+    row_align=32, matrix_tile=16)
+
 #: V100 with the PAPER's numbers (fp32 CUDA-core peak / 900 GB/s HBM2):
 #: balance ~17.4 F/B, the threshold behind Table 3's bound classification.
 V100 = Machine(
@@ -122,7 +136,8 @@ V100 = Machine(
     regfile_bytes=256 * 1024, target_ctas=4,
     row_align=32, matrix_tile=16)
 
-MACHINES: Dict[str, Machine] = {m.name: m for m in (TPU_V5E, A100, V100)}
+MACHINES: Dict[str, Machine] = {m.name: m
+                                for m in (TPU_V5E, A100, H100, V100)}
 
 
 def get_machine(name_or_machine) -> Machine:

@@ -1,1 +1,18 @@
-from repro.serve.engine import ServeEngine, Request
+"""repro.serve: the inference-serving layer.
+
+One slot-based continuous-batching core (``SlotServeCore``) with two
+engines on top: ``ServeEngine`` (LM decode over a static KV cache) and
+``GraphServeEngine`` (GCN node prediction through bucketed compiled
+plans -- sample, pad into a shape bucket, replay the bucket's single
+``plan.compile(dynamic=True)`` callable).  See docs/serving.md.
+"""
+
+from repro.serve.core import SlotServeCore
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.graph_engine import (Bucket, GraphRequest, GraphServeEngine,
+                                      default_buckets)
+
+__all__ = [
+    "SlotServeCore", "ServeEngine", "Request",
+    "GraphServeEngine", "GraphRequest", "Bucket", "default_buckets",
+]

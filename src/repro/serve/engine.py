@@ -1,10 +1,12 @@
-"""Batched serving engine: continuous-batching decode over a static KV cache.
+"""LM serving engine: continuous-batching decode over a static KV cache.
 
 Serving shape of the assigned cells: ``prefill_*`` lowers ``prefill_step``
 (build cache + first logits), ``decode_*`` lowers one ``decode_step`` (one
 token for every sequence in the batch against a seq_len cache).
 
-Engine features:
+Engine features (the queue/slot/stats loop itself lives in
+``repro.serve.core.SlotServeCore``; this class supplies the LM step
+bodies):
   * request queue with admission up to ``max_batch`` concurrent sequences,
   * slot-based continuous batching: finished sequences free their slot and
     the next request's prefill fills it (prefill-into-slot),
@@ -20,8 +22,7 @@ sequence over model); on one CPU device the same code runs unsharded.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,7 @@ import numpy as np
 from repro.config import LMConfig
 from repro.models.transformer import (init_caches_abstract, lm_decode_step,
                                       lm_prefill)
+from repro.serve.core import SlotServeCore
 
 
 @dataclasses.dataclass
@@ -46,59 +48,36 @@ class Request:
     finish_t: float = 0.0
 
 
-class ServeEngine:
+class ServeEngine(SlotServeCore):
+    """Continuous-batching LM decode engine on the shared serving core.
+
+    ``submit`` / ``run`` / the slot lifecycle come from ``SlotServeCore``;
+    this class implements admission as prefill-into-slot and the step as
+    one batched decode over every active slot.
+    """
+
     def __init__(self, cfg: LMConfig, params, *, max_batch: int = 8,
                  cache_size: int = 512, seed: int = 0):
+        super().__init__(max_batch)
         self.cfg = cfg
         self.params = params
-        self.max_batch = max_batch
         self.cache_size = cache_size
         self.rng = np.random.default_rng(seed)
         self._decode = jax.jit(
             lambda p, tok, caches, length: lm_decode_step(p, cfg, tok,
                                                           caches, length))
-        self._queue: List[Request] = []
-        self._active: Dict[int, Request] = {}   # slot -> request
-        self._finished_at_prefill: List[Request] = []
         self._caches = None
         self._length = None
         self._last_tokens = np.zeros((max_batch, 1), np.int32)
-        self._steps = 0
-
-    # --------------------------------------------------------------- public
-    def submit(self, req: Request) -> None:
-        req.enqueue_t = time.time()
-        self._queue.append(req)
-
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive the loop until queue + active drain.  Returns finished."""
-        finished: List[Request] = []
-        self._finished_at_prefill: List[Request] = []
-        while (self._queue or self._active) and self._steps < max_steps:
-            self._admit()
-            finished.extend(self._finished_at_prefill)
-            self._finished_at_prefill = []
-            finished.extend(self._step())
-        return finished
 
     # ------------------------------------------------------------- internal
-    def _admit(self) -> None:
-        """Prefill waiting requests into free slots (continuous batching)."""
-        free = [s for s in range(self.max_batch) if s not in self._active]
-        while free and self._queue:
-            slot = free.pop(0)
-            req = self._queue.pop(0)
-            self._prefill_into_slot(slot, req)
-            # the prefill's first sampled token may already finish the request
-            tok = req.output[-1]
-            if (req.eos_id is not None and tok == req.eos_id) or \
-                    len(req.output) >= req.max_tokens:
-                req.done = True
-                req.finish_t = time.time()
-                self._finished_at_prefill.append(req)
-                free.insert(0, slot)
-                continue
-            self._active[slot] = req
+    def _admit_into_slot(self, slot: int, req: Request) -> bool:
+        """Prefill the request into ``slot``; True if the prefill's first
+        sampled token already finished it (EOS / max_tokens=1)."""
+        self._prefill_into_slot(slot, req)
+        tok = req.output[-1]
+        return (req.eos_id is not None and tok == req.eos_id) or \
+            len(req.output) >= req.max_tokens
 
     def _ensure_caches(self):
         if self._caches is None:
@@ -157,16 +136,15 @@ class ServeEngine:
             if (req.eos_id is not None and tok == req.eos_id) or \
                     len(req.output) >= req.max_tokens or \
                     int(self._length[slot]) >= self.cache_size - 1:
-                req.done = True
-                req.finish_t = time.time()
-                finished.append(req)
-                del self._active[slot]
+                finished.append(self._complete(slot))
         return finished
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> Dict[str, Any]:
-        return {"decode_steps": self._steps,
-                "active": len(self._active),
-                "queued": len(self._queue),
-                "cache_len": (np.asarray(self._length).tolist()
-                              if self._length is not None else [])}
+        """Core serving stats plus the LM engine's cache view; the legacy
+        ``decode_steps`` key aliases the core's step counter."""
+        out = super().stats()
+        out["decode_steps"] = self._steps
+        out["cache_len"] = (np.asarray(self._length).tolist()
+                            if self._length is not None else [])
+        return out

@@ -20,8 +20,8 @@ from repro.core.scheduler import (AGGREGATE_FIRST, COMBINE_FIRST,
                                   ordering_time)
 from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.models.gcn import make_paper_model
-from repro.profile import (A100, MACHINES, TPU_V5E, V100, BenchSpec, Machine,
-                           WorkloadReportError, get_machine,
+from repro.profile import (A100, H100, MACHINES, TPU_V5E, V100, BenchSpec,
+                           Machine, WorkloadReportError, get_machine,
                            machine_for_backend, run_specs)
 from repro.profile.bench import csv_columns, write_csv
 
@@ -49,7 +49,7 @@ def _gcn(spec, g, x, **plan_kw):
 
 
 def test_machine_presets_and_registry():
-    assert set(MACHINES) == {"tpu-v5e", "a100", "v100"}
+    assert set(MACHINES) == {"tpu-v5e", "a100", "h100", "v100"}
     # the paper's classification threshold: V100 fp32 balance ~17.4 F/B
     assert V100.balance == pytest.approx(15.7e12 / 900e9)
     assert TPU_V5E.balance == pytest.approx(197e12 / 819e9)
@@ -60,8 +60,11 @@ def test_machine_presets_and_registry():
     assert TPU_V5E.classify(50.0) == "memory"
     assert get_machine("a100") is A100
     assert get_machine(A100) is A100
+    assert get_machine("h100") is H100
+    # H100 is still memory-hungrier than its FLOP growth: balance rises
+    assert H100.balance > A100.balance
     with pytest.raises(ValueError):
-        get_machine("h100")
+        get_machine("h200")
 
 
 def test_machine_for_backend_mapping():

@@ -1,18 +1,32 @@
-"""Serving: prefill/decode consistency, engine continuous batching."""
+"""Serving: prefill/decode consistency, engine continuous batching, and
+the bucketed GraphServeEngine (smallest-fit selection, padded-vs-eager
+bit-identity, slot reuse, zero-retrace warm-up, latency percentiles,
+plan-cache eviction, serving report schema)."""
 
 import dataclasses
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.config import CORA, reduced_graph
 from repro.configs import (gemma2_9b, granite_3_8b, jamba_1_5_large,
                            kimi_k2, mamba2_2_7b, seamless_m4t_medium)
+from repro.core.plan import build_plan, clear_plan_cache, plan_cache_stats
+from repro.core.scheduler import AGGREGATE_FIRST
+from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.models import encdec
+from repro.models.gcn import PAPER_MODELS
 from repro.models.transformer import (init_lm, lm_decode_step, lm_forward,
                                       lm_prefill)
+from repro.serve import (Bucket, GraphRequest, GraphServeEngine,
+                         default_buckets)
 from repro.serve.engine import Request, ServeEngine
+
+GOLDEN = Path(__file__).parent / "golden" / "workload_report.schema.json"
 
 
 def _fp32(mod, cap=8.0):
@@ -125,3 +139,184 @@ def test_engine_eos_stop(engine_setup):
                         eos_id=first))
     done2 = eng2.run()
     assert len(done2[0].output) == 1
+
+
+# --------------------------------------------------------------------------
+# GraphServeEngine: GCN node prediction through bucketed compiled plans
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def graph_setup():
+    spec = reduced_graph(CORA, max_vertices=220, max_feature=24)
+    return spec, make_synthetic_graph(spec), make_features(spec)
+
+
+def _graph_engine(graph_setup, **kw):
+    spec, g, x = graph_setup
+    kw.setdefault("fanouts", (3, 3))
+    kw.setdefault("max_batch", 4)
+    eng = GraphServeEngine(g, PAPER_MODELS["gcn"], None, x,
+                           spec.num_classes, **kw)
+    eng.params = eng.init_params(jax.random.PRNGKey(0))
+    return eng
+
+
+@pytest.fixture(scope="module")
+def drained_engine(graph_setup):
+    """The acceptance drain: 200 requests through <= 4 buckets."""
+    spec, g, x = graph_setup
+    eng = _graph_engine(
+        graph_setup, max_batch=8,
+        buckets=default_buckets((3, 3), seed_levels=(4, 16),
+                                max_inputs=g.num_vertices))
+    traces = eng.warmup()
+    rng = np.random.default_rng(7)
+    for i in range(200):
+        seeds = rng.choice(g.num_vertices,
+                           size=int(rng.integers(1, 17)), replace=False)
+        eng.submit(GraphRequest(rid=i, seeds=seeds))
+    done = eng.run()
+    return eng, traces, done
+
+
+def test_bucket_fits_rule():
+    b = Bucket(num_seeds=4, num_inputs=10, num_edges=20)
+    assert b.fits(4, 10, 20)          # exact fit: no pad edges needed
+    assert b.fits(4, 9, 19)           # pad edges -> last row is the sink
+    assert not b.fits(4, 10, 19)      # pad edges but no free sink row
+    assert not b.fits(5, 9, 19)       # too many seeds
+    assert not b.fits(4, 9, 21)       # too many edges
+
+
+def test_default_buckets_worst_case_fit():
+    f1, f2 = 3, 3
+    buckets = default_buckets((f1, f2), seed_levels=(2, 4))
+    assert len(buckets) == 2
+    for s, b in zip((2, 4), sorted(buckets, key=lambda b: b.num_seeds)):
+        frontier = s * (1 + f1) * (1 + f2)
+        edges = s * f1 + s * (1 + f1) * f2
+        assert b.fits(s, frontier, edges)   # worst case fits by design
+
+
+def test_select_bucket_smallest_fitting(graph_setup):
+    eng = _graph_engine(graph_setup,
+                        buckets=[(8, 80, 160), (2, 20, 30), (4, 40, 80)])
+    assert eng.select_bucket(1, 10, 10) == Bucket(2, 20, 30)
+    # full frontier with pad edges pending: the sink row rule kicks in
+    assert eng.select_bucket(2, 20, 29) == Bucket(4, 40, 80)
+    assert eng.select_bucket(3, 10, 10) == Bucket(4, 40, 80)
+    assert eng.select_bucket(8, 80, 160) == Bucket(8, 80, 160)
+    assert eng.select_bucket(9, 10, 10) is None
+
+
+def test_graph_padded_bit_identical_to_eager(graph_setup):
+    spec, g, _ = graph_setup
+    eng = _graph_engine(graph_setup)
+    eng.warmup()
+    rng = np.random.default_rng(3)
+    for s in (1, 4, 13):
+        prep = eng.prepare(rng.choice(g.num_vertices, size=s, replace=False))
+        assert prep.bucket is not None
+        compiled = eng.run_prepared(prep)
+        assert compiled.shape == (s, spec.num_classes)
+        # exactness contract: array_equal, not allclose (docs/serving.md)
+        assert np.array_equal(compiled, eng.run_eager(prep))
+
+
+def test_graph_slot_reuse(graph_setup):
+    spec, g, _ = graph_setup
+    eng = _graph_engine(graph_setup, max_batch=2)
+    eng.warmup()
+    for i in range(7):
+        eng.submit(GraphRequest(rid=i, seeds=np.array([i, i + 1], np.int32)))
+    done = eng.run()
+    assert {r.rid for r in done} == set(range(7))
+    s = eng.stats()
+    assert s["served"] == 7 and s["queued"] == 0 and s["active"] == 0
+    # 2 slots served 7 requests: every request got a slot, steps batched
+    assert s["slot_assignments"] == 7
+    assert s["steps"] < s["served"]
+    for r in done:
+        assert r.logits.shape == (2, spec.num_classes)
+        assert np.isfinite(r.logits).all()
+
+
+def test_graph_warmup_once_and_zero_retraces(drained_engine):
+    eng, traces, done = drained_engine
+    assert len(eng.buckets) <= 4
+    assert traces == {eng._bucket_name(b): 1 for b in eng.buckets}
+    assert eng.warmup() == traces          # idempotent: no second trace
+    s = eng.stats()
+    assert s["served"] == len(done) == 200
+    assert s["retraces"] == 0 and s["bucket_misses"] == 0
+    assert s["bucket_hits"] == 200
+    assert all(b["compiled"] == 1 for b in s["buckets"])
+
+
+def test_graph_latency_percentiles_monotone(drained_engine):
+    eng, _, _ = drained_engine
+    s = eng.stats()
+    assert 0 < s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+    assert s["throughput_rps"] > 0
+
+
+def test_graph_bucket_miss_eager_path_and_cache_sweep(graph_setup):
+    spec, g, _ = graph_setup
+    # one bucket too small for any 2-seed request: every request misses,
+    # is served eagerly, and the transient plans trip the watermark sweep
+    eng = _graph_engine(graph_setup, buckets=[(1, 2, 1)], max_batch=2,
+                        plan_cache_watermark=2)
+    eng.warmup()
+    for i in range(6):
+        eng.submit(GraphRequest(rid=i,
+                                seeds=np.array([i, i + 1], np.int32)))
+    done = eng.run()
+    s = eng.stats()
+    assert s["bucket_misses"] == 6 and s["bucket_hits"] == 0
+    assert all(r.bucket is None for r in done)
+    for r in done:
+        assert r.logits.shape == (2, spec.num_classes)
+    assert s["cache_sweeps"] >= 2          # warmup pin + watermark sweeps
+    assert s["plan_cache"]["size"] <= 1 + 2 * eng.max_batch
+    assert s["plan_cache"]["evictions"] >= 1
+
+
+def test_plan_cache_stats_and_eviction(graph_setup):
+    spec, g, x = graph_setup
+    clear_plan_cache()
+    assert plan_cache_stats() == {"size": 0, "limit": 64, "blocked_size": 0,
+                                  "reorder_size": 0, "hits": 0, "misses": 0,
+                                  "evictions": 0}
+    p1 = build_plan(g, PAPER_MODELS["gcn"], spec.feature_len,
+                    spec.num_classes, backend="xla", fused=False)
+    assert plan_cache_stats()["misses"] == 1
+    assert build_plan(g, PAPER_MODELS["gcn"], spec.feature_len,
+                      spec.num_classes, backend="xla", fused=False) is p1
+    assert plan_cache_stats()["hits"] == 1
+    build_plan(g, PAPER_MODELS["gcn"], spec.feature_len, spec.num_classes,
+               backend="xla", fused=False, ordering=AGGREGATE_FIRST)
+    assert plan_cache_stats()["size"] == 2
+    clear_plan_cache(keep=[p1])            # explicit eviction policy
+    s = plan_cache_stats()
+    assert s["size"] == 1 and s["evictions"] >= 1
+    assert build_plan(g, PAPER_MODELS["gcn"], spec.feature_len,
+                      spec.num_classes, backend="xla", fused=False) is p1
+    clear_plan_cache()                     # full wipe resets the counters
+    assert plan_cache_stats()["size"] == 0
+    assert plan_cache_stats()["hits"] == 0
+
+
+def test_graph_workload_report_golden_schema(drained_engine):
+    eng, _, _ = drained_engine
+    report = eng.workload_report()         # .validate() runs inside
+    d = json.loads(report.to_json())
+    golden = json.loads(GOLDEN.read_text())
+    assert sorted(d) == golden["top_serving"]
+    assert sorted(d["serving"]) == golden["serving"]
+    for b in d["serving"]["buckets"]:
+        assert sorted(b) == golden["serving_bucket"]
+    assert d["serving"]["requests"] == 200
+    assert d["serving"]["bucket_misses"] == 0
+    assert d["serving"]["retraces"] == 0
+    assert "Serving: 200 requests" in report.to_markdown()
