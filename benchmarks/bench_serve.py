@@ -1,17 +1,28 @@
 """Offered-load serving sweep: GraphServeEngine latency/throughput curves.
 
-One ``BenchSpec`` drives the GCN serving engine through a closed-loop
-offered-load sweep: for each load level, a fresh ``GraphServeEngine`` is
-warmed up (every bucket compiled before admission), a synthetic workload of
-node-prediction requests (1..max-seeds seed batches drawn from a seeded
-RNG) is submitted, and ``engine.run()`` drains it through the bucketed
-compiled plans.  Each sweep point lands one CSV row (under
-``experiments/bench/``) with the per-request latency percentiles
-(p50/p95/p99 ms), end-to-end throughput (req/s), and the serving-contract
-counters (bucket hits/misses, retraces, plan-cache stats).
+Two ``BenchSpec``s drive the GCN serving engine:
 
-Under dry-run (the scripts/smoke.sh gate) the sweep is also the serving
-acceptance check, and it HARD-FAILS on any contract violation:
+  * ``serve/load`` -- CLOSED loop: for each load level, a fresh
+    ``GraphServeEngine`` is warmed up (every bucket compiled before
+    admission), a synthetic workload of node-prediction requests
+    (1..max-seeds seed batches drawn from a seeded RNG) is submitted up
+    front, and ``engine.run()`` drains it through the bucketed compiled
+    plans.
+  * ``serve/poisson`` -- OPEN loop: requests arrive at Poisson times
+    (exponential inter-arrival gaps at offered load lambda req/s, drawn
+    from the same seeded ``rng=`` generator that picks the seed batches)
+    while the engine ticks (``SlotServeCore.tick``) between arrivals, so
+    measured latency includes queueing delay behind the offered load, not
+    just service time -- the curve that shows where the engine saturates.
+
+Each sweep point lands one CSV row (under ``experiments/bench/``) with the
+per-request latency percentiles (p50/p95/p99 ms), end-to-end throughput
+(req/s), and the serving-contract counters (bucket hits/misses, retraces,
+plan-cache stats); open-loop rows add the offered load.
+
+Under dry-run (the scripts/smoke.sh gate) the CLOSED-loop sweep is still
+the serving acceptance gate (unchanged by the open-loop addition), and it
+HARD-FAILS on any contract violation:
 
   * a bucket miss (every synthetic request must fit the bucket ladder),
   * a retrace after ``warmup()`` (each bucket compiles exactly once),
@@ -30,6 +41,8 @@ not accelerator predictions.
 
 from __future__ import annotations
 
+import time
+
 import jax
 import numpy as np
 
@@ -40,6 +53,10 @@ from repro.serve import GraphRequest, GraphServeEngine, default_buckets
 
 #: closed-loop offered loads (requests per drain); 200 is the acceptance run
 LOADS = (25, 50, 100, 200)
+#: open-loop Poisson offered loads, requests per second
+POISSON_RPS = (50, 200)
+#: requests per open-loop point (kept small: arrivals are real wall-clock)
+POISSON_REQUESTS = 40
 FANOUTS = (3, 3)
 SEED_LEVELS = (4, 16)       # 2 buckets; acceptance allows <= 4
 MAX_SEEDS = SEED_LEVELS[-1]
@@ -56,12 +73,42 @@ def _make_engine(ctx) -> GraphServeEngine:
     return eng
 
 
+def _request(eng: GraphServeEngine, rid: int,
+             rng: np.random.Generator) -> GraphRequest:
+    s = rng.choice(eng.g.num_vertices,
+                   size=int(rng.integers(1, MAX_SEEDS + 1)), replace=False)
+    return GraphRequest(rid=rid, seeds=s)
+
+
 def _workload(eng: GraphServeEngine, n: int, rng: np.random.Generator):
     for i in range(n):
-        s = rng.choice(eng.g.num_vertices,
-                       size=int(rng.integers(1, MAX_SEEDS + 1)),
-                       replace=False)
-        eng.submit(GraphRequest(rid=i, seeds=s))
+        eng.submit(_request(eng, i, rng))
+
+
+def _drive_open_loop(eng: GraphServeEngine, n: int, lam_rps: float,
+                     rng: np.random.Generator) -> list:
+    """Open-loop driver: submit request i at its Poisson arrival time
+    (cumulative exponential gaps at rate ``lam_rps``), ticking the engine
+    between arrivals so service overlaps the arrival process.  Requests
+    the engine can't keep up with queue -- and their wait shows up in the
+    latency percentiles, which is the point of the open loop."""
+    arrivals = np.cumsum(rng.exponential(1.0 / lam_rps, size=n))
+    done: list = []
+    t0 = time.perf_counter()
+    i = 0
+    while len(done) < n:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            eng.submit(_request(eng, i, rng))
+            i += 1
+        got = eng.tick()
+        done.extend(got)
+        if not got and i < n and eng.outstanding == 0:
+            # idle until the next arrival (bounded nap: re-check arrivals)
+            gap = arrivals[i] - (time.perf_counter() - t0)
+            if gap > 0:
+                time.sleep(min(gap, 0.005))
+    return done
 
 
 def _check_contract(name: str, eng: GraphServeEngine, n: int,
@@ -130,10 +177,53 @@ def _load_point(ctx, num_requests):
              steps=s["steps"])
 
 
+def _poisson_point(ctx, lam_rps):
+    """One open-loop offered-load level: fresh engine, warmup, Poisson
+    arrivals at ``lam_rps`` req/s interleaved with engine ticks."""
+    eng = _make_engine(ctx)
+    traces = eng.warmup()
+    if any(t != 1 for t in traces.values()):
+        raise RuntimeError(f"warmup() traced {traces}; expected exactly "
+                           "one compile per bucket")
+    n = POISSON_REQUESTS
+    done = _drive_open_loop(eng, n, float(lam_rps),
+                            np.random.default_rng(int(lam_rps)))
+    s = eng.stats()
+    name = f"serve/poisson/{lam_rps}"
+    if ctx.dry:
+        # same contract as the closed loop minus the per-bucket probe
+        # (padded-vs-eager bit identity is owned by the closed-loop gate)
+        if len(done) != n or s["served"] != n:
+            raise RuntimeError(f"{name}: served {s['served']}/{n} "
+                               "(open loop failed to drain)")
+        if s["bucket_misses"] or s["retraces"]:
+            raise RuntimeError(
+                f"{name}: {s['bucket_misses']} miss(es) / "
+                f"{s['retraces']} retrace(s) under open-loop load")
+        if not (0 < s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]):
+            raise RuntimeError(f"{name}: degenerate latency percentiles "
+                               f"{s['p50_ms']}/{s['p95_ms']}/{s['p99_ms']}")
+        if any(r.logits is None or not np.isfinite(r.logits).all()
+               for r in done):
+            raise RuntimeError(f"{name}: non-finite/missing logits")
+    ctx.emit(name, 0.0, requests=n, offered_rps=lam_rps,
+             p50_ms=round(s["p50_ms"], 3), p95_ms=round(s["p95_ms"], 3),
+             p99_ms=round(s["p99_ms"], 3),
+             throughput_rps=round(s["throughput_rps"], 1),
+             bucket_hits=s["bucket_hits"],
+             bucket_misses=s["bucket_misses"], retraces=s["retraces"],
+             buckets=len(eng.buckets),
+             plan_cache_size=s["plan_cache"]["size"],
+             steps=s["steps"])
+
+
 SPECS = [
     BenchSpec(name="serve/load", graph="reddit", max_vertices=2048,
               max_feature=64, dry_max_vertices=256, machine=H100,
               sweep=LOADS, measure=_load_point, dry="run"),
+    BenchSpec(name="serve/poisson", graph="reddit", max_vertices=2048,
+              max_feature=64, dry_max_vertices=256, machine=H100,
+              sweep=POISSON_RPS, measure=_poisson_point, dry="run"),
 ]
 
 
@@ -141,13 +231,14 @@ def post_run(rows, dry: bool = False):
     """Sweep accounting: every offered-load level must have emitted a row
     (a silently skipped level would merge unvalidated)."""
     names = {r["name"] for r in rows}
-    missing = [f"serve/load/{n}" for n in LOADS
-               if f"serve/load/{n}" not in names]
+    expected = [f"serve/load/{n}" for n in LOADS] + \
+               [f"serve/poisson/{r}" for r in POISSON_RPS]
+    missing = [n for n in expected if n not in names]
     if missing:
         raise RuntimeError("serving sweep points silently skipped: "
                            + ", ".join(missing))
-    print(f"# serving sweep: {len(LOADS)} load level(s) validated, "
-          "0 silent")
+    print(f"# serving sweep: {len(LOADS)} closed + {len(POISSON_RPS)} "
+          "open-loop level(s) validated, 0 silent")
 
 
 def run(dry: bool = False):

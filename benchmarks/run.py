@@ -14,6 +14,7 @@ reads instead of re-parsing stdout).
   bench_feature_length  Fig. 5  input/output length sweeps
   bench_kernels         beyond-paper: Pallas kernels + fused dataflow
   bench_plan            planner sweep: backend x ordering x fusion scenarios
+  bench_overlap         overlap x strategy x partition halo-pipelining matrix
   bench_serve           serving: GraphServeEngine offered-load latency sweep
   roofline              deliverable (g): dry-run roofline table
 
@@ -60,8 +61,9 @@ def main() -> None:
 
     from benchmarks import (bench_agg_vs_pgr, bench_breakdown,
                             bench_feature_length, bench_kernels,
-                            bench_ordering, bench_phase_metrics, bench_plan,
-                            bench_serve, roofline)
+                            bench_ordering, bench_overlap,
+                            bench_phase_metrics, bench_plan, bench_serve,
+                            roofline)
     modules = {
         "bench_breakdown": bench_breakdown,
         "bench_agg_vs_pgr": bench_agg_vs_pgr,
@@ -70,14 +72,17 @@ def main() -> None:
         "bench_feature_length": bench_feature_length,
         "bench_kernels": bench_kernels,
         "bench_plan": bench_plan,
+        "bench_overlap": bench_overlap,
         "bench_serve": bench_serve,
         "roofline": roofline,
     }
     if dry:
-        # bench_serve's dry sweep is the serving acceptance gate: bucket
-        # misses, retraces, padded-vs-eager drift, or empty serving stats
-        # hard-fail the smoke check alongside the planner matrix.
-        selected = argv or ["bench_plan", "bench_serve"]
+        # bench_serve's dry sweep is the serving acceptance gate (bucket
+        # misses, retraces, padded-vs-eager drift, empty serving stats)
+        # and bench_overlap's is the halo-pipelining gate (bitwise
+        # pipelined==none, compiled contract, modeled-time ordering) --
+        # both hard-fail the smoke check alongside the planner matrix.
+        selected = argv or ["bench_plan", "bench_overlap", "bench_serve"]
     else:
         selected = argv or list(modules)
 

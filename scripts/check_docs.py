@@ -52,6 +52,7 @@ PUBLIC_SURFACE = {
     "repro.core.distributed": [
         "distributed_gcn_layer", "distributed_gcn_layer_2d",
         "pad_features_2d", "halo_bytes", "halo_bytes_2d",
+        "overlap_model", "choose_overlap",
     ],
     "repro.graph.partition": [
         "partition_1d", "partition_2d", "Partition2D", "PartitionedGraph",
@@ -60,7 +61,7 @@ PUBLIC_SURFACE = {
     "repro.core.phases": ["aggregate", "combine", "phase_ordered_layer"],
     "repro.profile.machine": [
         "Machine", "Machine.tile_budget", "Machine.classify",
-        "get_machine", "machine_for_backend",
+        "Machine.hop_time", "get_machine", "machine_for_backend",
     ],
     "repro.profile.instrument": [
         "InstrumentedPlan", "InstrumentedPlan.run_model", "WorkloadReport",
@@ -77,7 +78,12 @@ PUBLIC_SURFACE = {
 #: docstring must contain these substrings (entry point -> requirements)
 CONTENT_REQUIREMENTS = {
     ("repro.core.plan", "build_plan"): [">>>", "mesh", "num_shards",
-                                        "reorder", "degree", "auto"],
+                                        "reorder", "degree", "auto",
+                                        "overlap", "pipelined"],
+    ("repro.core.distributed", "choose_overlap"): [
+        "pipelined", "hop", "Machine", ">>>"],
+    ("repro.core.distributed", "overlap_model"): [
+        "exposed", "overlapped", "hop_time"],
     ("repro.core.plan", "plan_for_conv"): [">>>"],
     ("repro.core.plan", "plan_for_phases"): [">>>"],
     ("repro.core.backend", "resolve_backend"): ["auto", "pallas-gpu",
@@ -97,11 +103,16 @@ REQUIRED_FILES = {
     ROOT / "docs" / "planner.md": ["decision table", "pallas-gpu",
                                    "partition_2d", "characterization.md",
                                    "plan.compile", "reorder",
-                                   "degree_reorder"],
+                                   "degree_reorder",
+                                   "Overlapped halo execution",
+                                   "choose_overlap", "pipelined",
+                                   "double-buffered", "bench_overlap"],
     ROOT / "docs" / "characterization.md": [
-        "Machine", "TPU_V5E", "A100", "V100", "WorkloadReport",
-        "to_markdown", "BenchSpec", "instrument", "workload-report",
-        "balance", "compiled"],
+        "Machine", "TPU_V5E", "TPU_V5P", "A100", "H100", "V100",
+        "WorkloadReport", "to_markdown", "BenchSpec", "instrument",
+        "workload-report", "balance", "compiled", "hop_time",
+        "link_latency_s", "exposed_collective_time",
+        "overlapped_collective_time"],
     ROOT / "docs" / "serving.md": [
         "GraphServeEngine", "SlotServeCore", "bucket", "warmup",
         "clear_plan_cache", "plan_cache_stats", "dynamic", "retrace",

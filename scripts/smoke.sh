@@ -11,11 +11,17 @@
 #      eager dispatch, no retrace on the second call), the plan/compiled
 #      cells land the eager-vs-compiled speedup CSV under
 #      experiments/bench/ -- and the run FAILS if any scenario in the
-#      matrix is skipped without a logged reason.  The dry run ALSO drains
-#      the GraphServeEngine offered-load sweep (bench_serve): every load
-#      level warms up the bucket ladder, serves the synthetic workload,
-#      and HARD-FAILS on bucket misses, retraces after warmup(), empty
-#      serving stats, or padded-vs-eager bit drift (docs/serving.md),
+#      matrix is skipped without a logged reason.  The dry run ALSO runs
+#      the halo-overlap matrix (bench_overlap: overlap x strategy x
+#      partition on 8 fake devices -- HARD-FAILS if any overlap cell is
+#      silently skipped, if the pipelined schedule's output differs by a
+#      single bit from the single-buffered one eager or compiled, or if
+#      the modeled pipelined time exceeds the single-buffered model) and
+#      drains the GraphServeEngine offered-load sweep (bench_serve):
+#      every closed-loop level AND the open-loop Poisson points warm up
+#      the bucket ladder, serve the synthetic workload, and HARD-FAIL on
+#      bucket misses, retraces after warmup(), empty serving stats, or
+#      padded-vs-eager bit drift (docs/serving.md),
 #   3. the docs gate (README + docs/planner.md + docs/characterization.md
 #      + docs/serving.md exist, public planner/profile/serving symbols
 #      documented -- scripts/check_docs.py).
@@ -34,11 +40,13 @@ python -m pytest -x -q \
   --deselect tests/test_distributed.py::test_ctx_parallel_attention_sharded \
   "$@"
 
-echo "== planner + serving dry-run (backend x ordering x fusion x reorder x"
-echo "   partition; instrumented: one schema-validated WorkloadReport per"
-echo "   scenario, compiled contract: bitwise eager equality + no retrace;"
-echo "   serving: bucketed offered-load drain -- bucket misses, retraces,"
-echo "   or empty serving stats hard-fail) =="
+echo "== planner + overlap + serving dry-run (backend x ordering x fusion x"
+echo "   reorder x partition; instrumented: one schema-validated"
+echo "   WorkloadReport per scenario, compiled contract: bitwise eager"
+echo "   equality + no retrace; overlap matrix: silently skipped overlap"
+echo "   cells or a compiled-bitwise/pipelined-schedule break hard-fail;"
+echo "   serving: bucketed offered-load drain, closed- and open-loop --"
+echo "   bucket misses, retraces, or empty serving stats hard-fail) =="
 python -m benchmarks.run --dry-run
 
 echo "== docs gate =="

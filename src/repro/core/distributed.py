@@ -10,15 +10,33 @@ Two interchangeable aggregation strategies (both exact):
 
   * ``allgather``  -- one all-gather of the full feature matrix per layer,
     then purely local gather+segment-reduce.  Simple; wire bytes V*F.
-  * ``ring``       -- P-1 ``collective_permute`` steps around the data-axis
-    ring; at each step every device reduces the contributions of the block
-    it currently holds while the next block is in flight.  Same total wire
-    bytes, but O(V/P * F) resident and compute/comm OVERLAPPED -- the
-    distributed-optimization trick the brief asks for, expressed in
-    jax-native collectives.
+  * ``ring``       -- collective_permute steps around the data-axis ring; at
+    each step every device reduces the contributions of the block it
+    currently holds.  Same total wire bytes as all-gather but only
+    O(V/P * F) resident.
 
-Both run under shard_map on the ``data`` axis; per-shard edge lists come
-from graph.partition (edge-balanced, padded static shapes).
+The ring strategy additionally has two SCHEDULES, selected by the
+``overlap=`` plan decision (``build_plan(overlap=...)``, priced by
+:func:`choose_overlap`):
+
+  * ``overlap="none"``       -- ``_ring_local``: single-buffered; each hop
+    reduces the resident slab and only then passes it onward (P sends, the
+    send serialized behind the hop's partial combine).
+  * ``overlap="pipelined"``  -- ``_ring_local_pipelined``: double-buffered;
+    each hop issues the ``ppermute`` FIRST, so hop k+1's slab is in flight
+    while hop k's resident slab is matmul-reduced into the accumulator --
+    the collective rides under the per-hop partial combine instead of in
+    front of it.  P-1 sends (the last resident slab is reduced without a
+    send).  The per-hop partials are accumulated in exactly the same order
+    as the single-buffered schedule, so both schedules are bit-for-bit
+    equal -- eager and under ``plan.compile()``.
+
+Both strategies run under shard_map on the ``data`` axis; per-shard edge
+lists come from graph.partition (edge-balanced, padded static shapes).
+:func:`overlap_model` / :func:`choose_overlap` price the schedules against
+a ``Machine`` (per-hop link bytes vs. per-hop partial-combine work), and
+``plan.instrument()`` reports the resulting exposed vs. overlapped
+collective time per distributed record.
 
 **2-D (node x feature) partitioning** (``distributed_gcn_layer_2d``)
 generalizes the same halo patterns to a multi-host mesh: device (p, q) owns
@@ -78,27 +96,36 @@ def _allgather_local(x_loc, srcl, dstl, mskl, block, nsh, axis):
     return _local_agg(x_full, srcl, dstl, mskl, block)
 
 
-def _ring_local(x_loc, srcl, dstl, mskl, block, nsh, axis):
-    """Per-device ring halo body: nsh hops of collective_permute over
-    ``axis``, reducing the currently-held block's contributions each hop.
+def _hop_partial(buf, k, p, srcl, dstl, mskl, block, nsh):
+    """Partial combine of hop k's resident slab: the contributions of the
+    block currently held (``(p - k) mod P`` -- ring sends i -> i+1), masked
+    so neither padding rows nor edges owned by other blocks enter the
+    accumulator.  Shared by BOTH ring schedules so their per-hop math -- and
+    therefore their accumulation order -- is structurally identical
+    (bitwise-equal outputs are part of the overlap contract)."""
+    owner = jnp.mod(p - k, nsh)                   # whose block we hold
+    sel = (srcl // block) == owner
+    local_src = srcl - owner * block
+    rows = jnp.take(buf, jnp.clip(local_src, 0, block - 1), axis=0)
+    rows = rows * (mskl * sel)[:, None]
+    return jax.ops.segment_sum(rows, dstl, num_segments=block)
 
-    Device p holds block b_k = (p - k) mod P at hop k; the permute of hop
-    k+1 can overlap the reduce of hop k on real hardware (async start).
-    Shared by the 1-D path (axis = the single data axis) and the 2-D path
-    (axis = the node axis of the mesh; feature columns ride along).
+
+def _ring_local(x_loc, srcl, dstl, mskl, block, nsh, axis):
+    """Per-device ring halo body, single-buffered (``overlap="none"``):
+    nsh hops of collective_permute over ``axis``, each hop reducing the
+    currently-held block's contributions and THEN passing it onward -- the
+    send waits behind the hop's partial combine, so the wire time is fully
+    exposed.  Shared by the 1-D path (axis = the single data axis) and the
+    2-D path (axis = the node axis of the mesh; feature columns ride
+    along).
     """
     p = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % nsh) for i in range(nsh)]  # ring
 
     def hop(carry, k):
         buf, acc = carry
-        # ring sends i -> i+1, so after k hops we hold block (p - k)
-        owner = jnp.mod(p - k, nsh)               # whose block we hold
-        sel = (srcl // block) == owner
-        local_src = srcl - owner * block
-        rows = jnp.take(buf, jnp.clip(local_src, 0, block - 1), axis=0)
-        rows = rows * (mskl * sel)[:, None]
-        acc = acc + jax.ops.segment_sum(rows, dstl, num_segments=block)
+        acc = acc + _hop_partial(buf, k, p, srcl, dstl, mskl, block, nsh)
         buf = jax.lax.ppermute(buf, axis, perm)   # pass block onward
         return (buf, acc), None
 
@@ -107,7 +134,62 @@ def _ring_local(x_loc, srcl, dstl, mskl, block, nsh, axis):
     return acc
 
 
+def _ring_local_pipelined(x_loc, srcl, dstl, mskl, block, nsh, axis):
+    """Per-device ring halo body, double-buffered (``overlap="pipelined"``).
+
+    Each hop issues the ``ppermute`` FIRST -- hop k+1's slab is in flight
+    while hop k's resident slab is reduced into the accumulator -- and the
+    final resident slab is reduced without a send, so the ring costs P-1
+    sends (vs. P single-buffered) and every send rides under a partial
+    combine.  This is the collective restatement of the accelerator
+    double-buffering discipline (start the next transfer, process the
+    current slot).
+
+    Bitwise contract: the per-hop partials (``_hop_partial``) accumulate in
+    the SAME order as ``_ring_local`` -- hop 0..P-1 added left to right
+    onto a zero accumulator -- so both schedules return bit-identical
+    results; only the issue order of communication vs. compute differs.
+    """
+    p = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % nsh) for i in range(nsh)]  # ring
+
+    def hop(carry, k):
+        buf, acc = carry
+        nxt = jax.lax.ppermute(buf, axis, perm)   # in flight during reduce
+        acc = acc + _hop_partial(buf, k, p, srcl, dstl, mskl, block, nsh)
+        return (nxt, acc), None
+
+    acc0 = jnp.zeros((block, x_loc.shape[-1]), x_loc.dtype)
+    (buf, acc), _ = jax.lax.scan(hop, (x_loc, acc0), jnp.arange(nsh - 1))
+    # last hop: the slab is already resident -- reduce it, send nothing
+    return acc + _hop_partial(buf, nsh - 1, p, srcl, dstl, mskl, block, nsh)
+
+
 _STRATEGIES = {"ring": _ring_local, "allgather": _allgather_local}
+
+#: resolved overlap schedules a distributed layer accepts ("auto" is a
+#: plan-level request resolved by ``choose_overlap`` before dispatch)
+OVERLAP_MODES = ("none", "pipelined")
+
+
+def _halo_body(strategy: str, overlap: str):
+    """Resolve (strategy, overlap) to the per-device halo body, validating
+    the combination: pipelining needs the ring's per-hop structure."""
+    if strategy not in _STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"expected one of {sorted(_STRATEGIES)}")
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(
+            f"unknown overlap {overlap!r}; expected 'none' | 'pipelined' "
+            "('auto' is resolved at plan build -- see choose_overlap)")
+    if overlap == "pipelined":
+        if strategy != "ring":
+            raise ValueError(
+                "overlap='pipelined' requires strategy='ring'; the "
+                "all-gather halo is one collective with no per-hop "
+                "structure to pipeline")
+        return _ring_local_pipelined
+    return _STRATEGIES[strategy]
 
 
 def aggregate_allgather(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
@@ -131,16 +213,21 @@ def aggregate_allgather(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
 
 
 def aggregate_ring(pg: PartitionedGraph, x: jnp.ndarray, mesh: Mesh,
-                   axis: str = "data") -> jnp.ndarray:
-    """Ring halo exchange: P-1 collective_permutes, partial reduce per hop
-    (see ``_ring_local``)."""
+                   axis: str = "data", *,
+                   overlap: str = "none") -> jnp.ndarray:
+    """Ring halo exchange: collective_permutes with a partial reduce per
+    hop.  ``overlap`` picks the schedule: ``"none"`` = single-buffered
+    (``_ring_local``), ``"pipelined"`` = double-buffered with each send in
+    flight under the resident slab's reduce (``_ring_local_pipelined``);
+    both are bit-for-bit equal."""
     _require_uniform(pg)
     block = pg.block_size
     nsh = pg.num_shards
+    local = _halo_body("ring", overlap)
 
     def fn(x_local, src, dst_local, mask):
-        out = _ring_local(x_local[0], src[0], dst_local[0], mask[0],
-                          block, nsh, axis)
+        out = local(x_local[0], src[0], dst_local[0], mask[0],
+                    block, nsh, axis)
         return out[None]
 
     return shard_map(
@@ -169,10 +256,124 @@ def halo_bytes(pg: PartitionedGraph, feature_len: int,
     cut_edges = int((np.asarray(pg.mask) * ~mine).sum())
     return {
         "allgather_bytes_per_device": per_device,
-        "ring_bytes_per_device": per_device,  # same total, overlapped
+        "ring_bytes_per_device": per_device,  # same total, spread over hops
+        "bytes_per_hop_per_device":           # one slab per ring hop
+            pg.block_size * feature_len * dtype_bytes,
+        "ring_hops": max(pg.num_shards - 1, 0),
         "cut_edges": cut_edges,
         "min_halo_bytes": cut_edges * feature_len * dtype_bytes,
     }
+
+
+# ---------------------------------------------------------------------------
+# Overlap pricing (the plan's ``overlap="auto"`` decision model)
+# ---------------------------------------------------------------------------
+
+#: minimum modeled saving (fraction of the exchange's single-buffered time)
+#: at which ``choose_overlap`` commits to the pipelined schedule -- below
+#: this the double-buffer's extra resident slab and scheduling constraints
+#: buy nothing material, so auto keeps the simpler single-buffered ring.
+OVERLAP_SAVING_THRESHOLD = 0.02
+
+
+def overlap_model(pg: PartitionedGraph, feature_len: int, machine, *,
+                  strategy: str = "ring", dtype_bytes: int = 4) -> dict:
+    """Price both ring schedules for ONE halo exchange on ``machine``.
+
+    The model the plan's ``overlap="auto"`` decision (and the exposed /
+    overlapped split in ``plan.instrument()`` reports) is built on:
+
+      * per hop, every device sends one (block, feature_len) slab over a
+        single interconnect link -- ``t_wire_hop = Machine.hop_time(bytes)``
+        (per-hop link bandwidth + link latency, NOT the aggregate
+        ``interconnect_total``: a ring saturates one link per direction);
+      * per hop, the resident slab's partial combine walks the device's
+        whole local edge list (the owner mask zeroes foreign and padding
+        rows), so per-hop compute is the full aggregation roofline divided
+        by the shard count.
+
+    Single-buffered (``overlap="none"``) exposes every hop's wire time;
+    the pipelined schedule hides ``min(t_wire, t_comp)`` per hop under the
+    partial combine.  ``feature_len`` is the row width the exchange
+    actually moves: dout under combine-first, din under aggregate-first,
+    divided by the feature-shard count on a 2-D partition (callers pass
+    ``p2.feature_block(...)``).
+
+    Returns a dict with per-hop terms (``t_wire_hop_s`` / ``t_comp_hop_s``
+    / ``bytes_per_hop``), both schedules' exposed collective seconds
+    (``exposed_none_s`` / ``exposed_pipelined_s``), the pipelined hidden
+    time (``overlapped_pipelined_s``), the single-buffered exchange time
+    (``t_none_s``) and the relative saving (``saving_frac``).
+    """
+    from repro.core.phases import aggregate_cost
+    from repro.profile.machine import get_machine
+    m = get_machine(machine)
+    nsh = pg.num_shards
+    hops = max(nsh - 1, 0)
+    bytes_hop = pg.block_size * feature_len * dtype_bytes
+    agg = aggregate_cost(_local_graph_view(pg), feature_len, dtype_bytes)
+    # resident-slab partial combine, per device per hop (see docstring)
+    t_comp_hop = max(agg["flops"] / nsh / m.peak_flops,
+                     agg["bytes"] / nsh / m.hbm_bw)
+    if strategy == "ring" and hops > 0:
+        t_wire_hop = m.hop_time(bytes_hop)
+        exposed_none = hops * t_wire_hop
+        overlapped = hops * min(t_wire_hop, t_comp_hop)
+        exposed_pipelined = hops * max(t_wire_hop - t_comp_hop, 0.0)
+    else:
+        # all-gather (one collective, nothing to hide) or a single shard
+        v_padded = pg.block_size * nsh
+        total = v_padded * feature_len * dtype_bytes * hops / max(nsh, 1)
+        t_wire_hop = m.hop_time(total) if total else 0.0
+        exposed_none = exposed_pipelined = t_wire_hop
+        overlapped = 0.0
+    t_none = hops * t_comp_hop + exposed_none
+    return {
+        "strategy": strategy, "hops": hops, "bytes_per_hop": bytes_hop,
+        "t_wire_hop_s": t_wire_hop, "t_comp_hop_s": t_comp_hop,
+        "exposed_none_s": exposed_none,
+        "exposed_pipelined_s": exposed_pipelined,
+        "overlapped_pipelined_s": overlapped,
+        "t_none_s": t_none,
+        "saving_frac": overlapped / t_none if t_none > 0 else 0.0,
+    }
+
+
+def choose_overlap(pg: PartitionedGraph, feature_lens, machine, *,
+                   strategy: str = "ring", dtype_bytes: int = 4) -> str:
+    """Resolve ``overlap="auto"`` -> ``"none" | "pipelined"`` for a plan.
+
+    ``feature_lens`` is the exchanged row width -- one int, or a sequence
+    (one per layer; a model's layers share one schedule, so the decision
+    sums modeled savings across them).  Commits to the pipelined schedule
+    iff the hidden collective time is at least ``OVERLAP_SAVING_THRESHOLD``
+    of the single-buffered exchange time -- so the decision flips with the
+    ``Machine``'s interconnect: a near-infinite link leaves nothing worth
+    hiding (``"none"``), a link comparable to the per-hop combine hides
+    half the wire time (``"pipelined"``), and the all-gather strategy
+    (no per-hop structure) is always ``"none"``.
+
+    Worked example::
+
+        >>> choose_overlap(pg, [128, 7], TPU_V5E)
+        'pipelined'
+        >>> fast = replace(TPU_V5E, interconnect_bw=1e18, link_latency_s=0)
+        >>> choose_overlap(pg, [128, 7], fast)
+        'none'
+    """
+    if strategy != "ring":
+        return "none"
+    if isinstance(feature_lens, (int, np.integer)):
+        feature_lens = [feature_lens]
+    models = [overlap_model(pg, int(fl), machine, strategy=strategy,
+                            dtype_bytes=dtype_bytes)
+              for fl in feature_lens]
+    saving = sum(m["overlapped_pipelined_s"] for m in models)
+    t_none = sum(m["t_none_s"] for m in models)
+    if t_none <= 0.0:
+        return "none"
+    return "pipelined" if saving >= OVERLAP_SAVING_THRESHOLD * t_none \
+        else "none"
 
 
 def _local_graph_view(pg: PartitionedGraph):
@@ -185,7 +386,8 @@ def _local_graph_view(pg: PartitionedGraph):
 
 def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
                           mesh: Mesh, *, order: Optional[str] = None,
-                          strategy: str = "ring", axis: str = "data"):
+                          strategy: str = "ring", axis: str = "data",
+                          overlap: str = "none"):
     """One distributed GCN layer with explicit phase ordering (Table 4).
 
     combine_first: project locally (embarrassingly parallel GEMM), then
@@ -193,6 +395,12 @@ def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
     aggregate_first: aggregate raw features (halo moves in_len-wide rows),
     then project.  ``order=None`` asks the scheduler's cost model (which at
     cluster scale also prices the collective term -- same in/out ratio).
+
+    ``overlap`` picks the ring halo SCHEDULE (``"none"`` single-buffered |
+    ``"pipelined"`` double-buffered, each send in flight under the resident
+    slab's partial combine); both return bit-identical results, and
+    pipelining requires ``strategy="ring"``.  ``"auto"`` is resolved at
+    plan build by :func:`choose_overlap`, never passed here.
 
     This is the shard_map primitive; model-level code reaches it through a
     ``GraphExecutionPlan`` built with ``mesh=``/``num_shards=`` (core/plan.py)
@@ -203,7 +411,9 @@ def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
         order = choose_ordering(
             _local_graph_view(pg), int(w.shape[0]), int(w.shape[1]),
             agg_op="mean", n_mlp_layers=1)
-    agg = aggregate_ring if strategy == "ring" else aggregate_allgather
+    _halo_body(strategy, overlap)     # validate the (strategy, overlap) pair
+    agg = functools.partial(aggregate_ring, overlap=overlap) \
+        if strategy == "ring" else aggregate_allgather
     deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
     deg = pad_features(deg, pg.block_size, pg.num_shards)
     # reciprocal-multiply normalization (not broadcast division) so the
@@ -233,7 +443,8 @@ def pad_features_2d(x: jnp.ndarray, p2: Partition2D) -> jnp.ndarray:
 def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
                              mesh: Mesh, *, order: Optional[str] = None,
                              strategy: str = "ring",
-                             axes=("node", "feat")):
+                             axes=("node", "feat"),
+                             overlap: str = "none"):
     """One GCN layer on a 2-D (node x feature) device mesh (exact).
 
     Device (p, q) owns node block p's rows restricted to feature block q.
@@ -253,8 +464,12 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
     ``(P*block, Q*fblock_in)`` layout (see :func:`pad_features_2d`) and the
     result is ``(P*block, Q*fblock_out)`` -- pad columns are exact zeros.
     ``axes`` names the (node, feature) mesh axes; ``order=None`` asks the
-    scheduler's cost model.  Model-level code reaches this through a
-    ``GraphExecutionPlan`` built with a 2-D ``mesh=`` (core/plan.py).
+    scheduler's cost model.  ``overlap`` picks the node-axis ring schedule
+    exactly as in :func:`distributed_gcn_layer` (the pipelined double
+    buffer hides each F/Q-wide slab's wire time under the resident partial
+    combine; bit-identical to the single-buffered schedule).  Model-level
+    code reaches this through a ``GraphExecutionPlan`` built with a 2-D
+    ``mesh=`` (core/plan.py).
     """
     pg = p2.nodes
     _require_uniform(pg)
@@ -267,7 +482,7 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
         from repro.core.scheduler import choose_ordering
         order = choose_ordering(_local_graph_view(pg), f_in, f_out,
                                 agg_op="mean", n_mlp_layers=1)
-    local = _STRATEGIES[strategy]
+    local = _halo_body(strategy, overlap)
 
     # zero-pad W/bias onto the (Q*fb_in, Q*fb_out) grid: pad x columns hit
     # zero W rows, pad W columns produce zero outputs -- exactness is free

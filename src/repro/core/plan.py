@@ -127,7 +127,7 @@ class GraphExecutionPlan:
                  interpret: bool, mesh=None, partition=None,
                  strategy: str = "ring", axis: str = "data",
                  axes: Tuple[str, str] = ("node", "feat"), machine=None,
-                 reorder: str = "none", perm=None):
+                 reorder: str = "none", perm=None, overlap: str = "none"):
         self.g = g                   # the EXECUTION graph (renumbered when
                                      # reorder="degree")
         self.layers: Tuple[LayerPlan, ...] = tuple(layers)
@@ -139,6 +139,8 @@ class GraphExecutionPlan:
         self.axes = axes             # 2-D partition: (node, feature) axes
         self.machine = machine       # Optional[repro.profile.Machine]
         self.reorder = reorder       # "none" | "degree" (resolved)
+        self.overlap = overlap       # "none" | "pipelined" (resolved halo
+                                     # schedule; "auto" never survives build)
         # perm[old_id] = new_id (graph.reorder.degree_reorder contract);
         # inv[new_id] = old_id.  Device constants the traced ingress/egress
         # gathers close over -- never recomputed per call.
@@ -439,15 +441,19 @@ class GraphExecutionPlan:
         if self.partition_kind == "2d":
             thunk = lambda: distributed_gcn_layer_2d(  # noqa: E731
                 self.partition, x, w, bias, self.g.in_deg, self.mesh,
-                order=lp.order, strategy=self.strategy, axes=self.axes)
+                order=lp.order, strategy=self.strategy, axes=self.axes,
+                overlap=self.overlap)
         else:
             thunk = lambda: distributed_gcn_layer(  # noqa: E731
                 self.partition, x, w, bias, self.g.in_deg, self.mesh,
-                order=lp.order, strategy=self.strategy, axis=self.axis)
-        # halo feature length: what the exchange moves under this ordering
+                order=lp.order, strategy=self.strategy, axis=self.axis,
+                overlap=self.overlap)
+        # halo feature length: what the exchange moves under this ordering;
+        # overlap rides along so the probe prices the schedule that
+        # actually dispatched (exposed vs. overlapped collective time)
         agg_len = lp.din if lp.order == AGGREGATE_FIRST else lp.dout
         return _phase(probe, "distributed", thunk, lp=lp,
-                      feature_len=agg_len)
+                      feature_len=agg_len, overlap=self.overlap)
 
     def instrument(self, machine=None, warmup: int = 0):
         """Wrap this plan for characterization (``repro.profile``).
@@ -500,6 +506,7 @@ class GraphExecutionPlan:
                 "interpret": self.interpret,
                 "distributed": self.distributed,
                 "partition": self.partition_kind,
+                "overlap": self.overlap,
                 "reorder": self.reorder, "compiled": compiled_ok,
                 "agg_bytes": oc.agg_bytes, "agg_flops": oc.agg_flops,
             })
@@ -907,7 +914,8 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                ordering: Optional[str] = None, mesh=None,
                num_shards: int = 0, strategy: str = "ring",
                axis: str = "data", interpret: Optional[bool] = None,
-               machine=None, reorder: str = "none") -> GraphExecutionPlan:
+               machine=None, reorder: str = "none",
+               overlap: str = "none") -> GraphExecutionPlan:
     """Plan a full model (``GCNModelConfig``) over one graph.
 
     Overrides: ``backend`` ("auto" resolves per platform -- see
@@ -938,6 +946,25 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
         hit ratio.
 
     ``plan.describe()`` reports the resolved decision per layer.
+
+    The ``overlap=`` contract (the distributed halo SCHEDULE, a planned
+    decision like ordering/reorder):
+
+      * ``"none"`` (default): single-buffered ring -- each hop's send waits
+        behind its partial combine, collective time fully exposed.
+      * ``"pipelined"``: double-buffered ring -- each ``ppermute`` is
+        issued first and rides under the resident slab's partial combine;
+        bit-for-bit equal outputs (eager and compiled), P-1 sends instead
+        of P.  Requires ``strategy="ring"``.
+      * ``"auto"``: priced by ``core.distributed.choose_overlap`` against
+        the plan's ``machine`` (per-hop link bytes+latency vs. per-hop
+        combine work, summed over the layers' exchanged widths); resolves
+        to "pipelined" only when the hidden collective time is material.
+
+    Local plans (``mesh=None``) always resolve to ``"none"``; the resolved
+    schedule is stored on the plan, surfaced in ``describe()``, priced in
+    ``plan.instrument()`` reports (exposed vs. overlapped collective
+    time), and part of the plan cache key.
 
     The ``mesh=`` / ``num_shards=`` contract:
 
@@ -981,10 +1008,18 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
     if reorder not in ("none", "degree", "auto"):
         raise ValueError(f"unknown reorder {reorder!r}; expected "
                          "'none' | 'degree' | 'auto'")
+    if overlap not in ("none", "pipelined", "auto"):
+        raise ValueError(f"unknown overlap {overlap!r}; expected "
+                         "'none' | 'pipelined' | 'auto'")
+    if overlap == "pipelined" and mesh is not None and strategy != "ring":
+        raise ValueError("overlap='pipelined' requires strategy='ring'; "
+                         "the all-gather halo has no per-hop structure "
+                         "to pipeline")
     spec_key = (cfg.name, cfg.conv, agg, tuple(cfg.hidden_dims),
                 cfg.num_layers, int(in_dim), int(num_classes), backend,
                 use_fused, req_order, _mesh_key(mesh), num_shards, strategy,
-                axis, interpret, machine.name if machine else None, reorder)
+                axis, interpret, machine.name if machine else None, reorder,
+                overlap)
 
     def builder():
         # -- locality reorder decision (F4 / §5.1-1), before anything that
@@ -1036,11 +1071,35 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                 g_exec, i, cfg.conv, dims, agg_op=agg, ordering=req_order,
                 backend=lay_backend, fused=lay_fused, machine=machine))
             d = dout
+
+        # -- halo overlap schedule (a planned decision like ordering):
+        #    resolved HERE so describe()/instrument()/the cache all state
+        #    the schedule dispatch will actually run; local plans have no
+        #    collective to schedule
+        ov = overlap if partition is not None else "none"
+        if ov == "auto":
+            from repro.core.distributed import choose_overlap
+            from repro.graph.partition import Partition2D
+            from repro.profile.machine import machine_for_backend
+            if isinstance(partition, Partition2D):
+                pg_nodes = partition.nodes
+                width = partition.feature_block
+            else:
+                pg_nodes, width = partition, (lambda f: f)
+            # one schedule per plan, priced on what each layer's exchange
+            # actually moves (dout under combine-first, din otherwise;
+            # the F/Q column slice on a 2-D partition)
+            lens = [width(lp.din if lp.order == AGGREGATE_FIRST
+                          else lp.dout) for lp in layers]
+            ov = choose_overlap(pg_nodes, lens,
+                                machine or machine_for_backend(XLA),
+                                strategy=strategy)
         return GraphExecutionPlan(
             g_exec, layers, interpret=_plan_interpret(interpret,
                                                       layers[0].backend),
             mesh=mesh, partition=partition, strategy=strategy, axis=axis,
-            axes=axes, machine=machine, reorder=decision, perm=perm)
+            axes=axes, machine=machine, reorder=decision, perm=perm,
+            overlap=ov)
 
     return _cached_plan(g, spec_key, builder)
 

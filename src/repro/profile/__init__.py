@@ -4,9 +4,11 @@ Everything the paper calls *characterization* -- per-phase time/FLOP/byte
 breakdowns (Tables 3-5), bound classification, roofline terms, benchmark
 sweeps -- hangs off three surfaces:
 
-  * ``Machine`` (machine.py): hardware presets (``TPU_V5E`` | ``A100`` |
-    the paper's ``V100``); every cost model takes one instead of importing
-    module-level constants.
+  * ``Machine`` (machine.py): hardware presets (``TPU_V5E`` | ``TPU_V5P``
+    | ``A100`` | ``H100`` | the paper's ``V100``); every cost model takes
+    one instead of importing module-level constants, and the per-hop
+    interconnect fields (``interconnect_bw``, ``link_latency_s``,
+    ``hop_time``) price the distributed halo overlap decision.
   * ``InstrumentedPlan`` / ``WorkloadReport`` (instrument.py): wrap a
     ``GraphExecutionPlan`` (``plan.instrument(machine=...)``) so one forward
     pass records per-layer, per-phase FLOPs / bytes / wall time into a typed
@@ -26,12 +28,13 @@ internals (dataflow, characterize) may import presets from here without a
 cycle; plan/phase types are imported lazily inside functions.
 """
 
-from repro.profile.machine import (A100, H100, MACHINES, TPU_V5E, V100,
-                                   Machine, get_machine, machine_for_backend)
+from repro.profile.machine import (A100, H100, MACHINES, TPU_V5E, TPU_V5P,
+                                   V100, Machine, get_machine,
+                                   machine_for_backend)
 
 __all__ = [
-    "Machine", "TPU_V5E", "A100", "H100", "V100", "MACHINES", "get_machine",
-    "machine_for_backend",
+    "Machine", "TPU_V5E", "TPU_V5P", "A100", "H100", "V100", "MACHINES",
+    "get_machine", "machine_for_backend",
     # lazy (instrument.py / bench.py):
     "InstrumentedPlan", "WorkloadReport", "PhaseRecord",
     "WorkloadReportError", "validate_report_dict",

@@ -57,6 +57,16 @@ class PhaseRecord:
     aggregation phases this is the paper's Table-4 variable: dout under
     combine-first, din under aggregate-first).  ``bound`` classifies the
     phase's arithmetic intensity against the report's Machine balance.
+
+    Distributed records additionally split the modeled collective wall
+    time by the plan's halo SCHEDULE (``overlap=``):
+    ``exposed_collective_time`` is the seconds of wire time the schedule
+    leaves on the critical path, ``overlapped_collective_time`` the
+    seconds hidden under the per-hop partial combine -- analytic from
+    ``core.distributed.overlap_model`` on the report's Machine, priced for
+    the overlap mode the dispatch actually ran (the probe receives it from
+    the dispatch call, and ``mismatches()`` cross-checks it against
+    ``describe()``).  Both are 0.0 on non-distributed phases.
     """
 
     layer: int
@@ -70,6 +80,8 @@ class PhaseRecord:
     collective_bytes: float
     wall_time_s: float
     bound: str              # "memory" | "compute" vs the report's Machine
+    exposed_collective_time: float = 0.0     # modeled s, on critical path
+    overlapped_collective_time: float = 0.0  # modeled s, hidden under hops
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -83,6 +95,8 @@ class PhaseRecord:
             "bytes": self.bytes,
             "arithmetic_intensity": self.arithmetic_intensity,
             "collective_bytes": self.collective_bytes,
+            "exposed_collective_time": self.exposed_collective_time,
+            "overlapped_collective_time": self.overlapped_collective_time,
             "wall_time_s": self.wall_time_s, "bound": self.bound,
         }
 
@@ -115,7 +129,7 @@ class _Probe:
         out = thunk()
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        flops, byt, coll, flen = self._cost(name, lp, meta)
+        flops, byt, coll, flen, exp_s, ovl_s = self._cost(name, lp, meta)
         ai = flops / max(1.0, byt)
         # backend as the dispatch layer resolves it at call time (the same
         # resolution phases.aggregate applies) -- NOT lp.backend verbatim,
@@ -128,7 +142,9 @@ class _Probe:
             fused=(name == "fused_agg_combine"),
             feature_len=int(flen), flops=float(flops), bytes=float(byt),
             collective_bytes=float(coll), wall_time_s=float(dt),
-            bound=self.machine.classify(ai)))
+            bound=self.machine.classify(ai),
+            exposed_collective_time=float(exp_s),
+            overlapped_collective_time=float(ovl_s)))
         return out
 
     # -- analytic per-phase costs (same models the scheduler prices) --------
@@ -140,11 +156,11 @@ class _Probe:
         if name == "aggregate":
             flen = meta["feature_len"]
             c = aggregate_cost(g, flen, include_self=lp.include_self)
-            return c["flops"], c["bytes"], 0.0, flen
+            return c["flops"], c["bytes"], 0.0, flen, 0.0, 0.0
         if name == "combine":
             dims = meta["dims"]
             c = combine_cost(v, dims)
-            return c["flops"], c["bytes"], 0.0, dims[-1]
+            return c["flops"], c["bytes"], 0.0, dims[-1], 0.0, 0.0
         if name == "fused_agg_combine":
             # aggregate + first matmul in one tile: the (V, din) intermediate
             # never round-trips HBM, so its write+read bytes are subtracted.
@@ -153,16 +169,21 @@ class _Probe:
             comb = combine_cost(v, (din, dout))
             saved = 2 * v * din * _DTYPE_BYTES
             byt = max(agg["bytes"] + comb["bytes"] - saved, 1)
-            return agg["flops"] + comb["flops"], byt, 0.0, din
+            return agg["flops"] + comb["flops"], byt, 0.0, din, 0.0, 0.0
         if name == "distributed":
             # whole layer behind shard_map; collective term from the halo
-            # model at the feature length the exchange actually moves.
+            # model at the feature length the exchange actually moves, and
+            # the exposed/overlapped wall-time split from the overlap model
+            # priced for the halo schedule the dispatch passed along.
             flen = meta["feature_len"]
             agg = aggregate_cost(g, flen, include_self=lp.include_self)
             comb = combine_cost(v, lp.dims)
             coll = self._halo_bytes(flen)
+            exp_s, ovl_s = self._overlap_times(
+                flen, meta.get("overlap",
+                               getattr(self.plan, "overlap", "none")))
             return (agg["flops"] + comb["flops"],
-                    agg["bytes"] + comb["bytes"], coll, flen)
+                    agg["bytes"] + comb["bytes"], coll, flen, exp_s, ovl_s)
         raise ValueError(f"unknown phase {name!r}")
 
     def _halo_bytes(self, feature_len: int) -> float:
@@ -175,6 +196,29 @@ class _Probe:
                                     feature_len)["min_halo_bytes"])
         return 0.0
 
+    def _overlap_times(self, feature_len: int, overlap: str):
+        """(exposed_s, overlapped_s) collective wall-time split for one
+        distributed layer, from the same ``overlap_model`` pricing that
+        ``choose_overlap`` applies -- analytic, so eager and compiled runs
+        of one plan report the identical split.  ``overlap="pipelined"``
+        moves the hidden share of each hop's wire time into the overlapped
+        column; ``"none"`` leaves every hop fully exposed."""
+        from repro.core.distributed import overlap_model
+        kind = self.plan.partition_kind
+        if kind == "2d":
+            p2 = self.plan.partition
+            pg, flen = p2.nodes, p2.feature_block(feature_len)
+        elif kind == "1d":
+            pg, flen = self.plan.partition, feature_len
+        else:
+            return 0.0, 0.0
+        m = overlap_model(pg, flen, self.machine,
+                          strategy=getattr(self.plan, "strategy", "ring"))
+        if overlap == "pipelined":
+            return (float(m["exposed_pipelined_s"]),
+                    float(m["overlapped_pipelined_s"]))
+        return float(m["exposed_none_s"]), 0.0
+
 
 # ---------------------------------------------------------------------------
 # WorkloadReport
@@ -185,6 +229,8 @@ _FIELD_TYPES = {
     "layer": int, "phase": str, "order": str, "backend": str, "fused": bool,
     "feature_len": int, "flops": (int, float), "bytes": (int, float),
     "arithmetic_intensity": (int, float), "collective_bytes": (int, float),
+    "exposed_collective_time": (int, float),
+    "overlapped_collective_time": (int, float),
     "wall_time_s": (int, float), "bound": str,
 }
 
@@ -216,9 +262,16 @@ def validate_report_dict(d: Dict[str, Any]) -> List[str]:
                             f"{rec.get('phase')!r}")
         if rec.get("bound") not in ("memory", "compute"):
             problems.append(f"phases[{i}]: bad bound {rec.get('bound')!r}")
-        for k in ("flops", "bytes", "collective_bytes", "wall_time_s"):
+        for k in ("flops", "bytes", "collective_bytes", "wall_time_s",
+                  "exposed_collective_time", "overlapped_collective_time"):
             if isinstance(rec.get(k), (int, float)) and rec[k] < 0:
                 problems.append(f"phases[{i}].{k}: negative")
+        if rec.get("phase") != "distributed":
+            for k in ("exposed_collective_time",
+                      "overlapped_collective_time"):
+                if isinstance(rec.get(k), (int, float)) and rec[k] != 0:
+                    problems.append(
+                        f"phases[{i}].{k}: nonzero on non-distributed phase")
     tot = d.get("totals", {})
     for k in ("flops", "bytes", "collective_bytes"):
         if k not in tot:
@@ -397,6 +450,16 @@ class WorkloadReport:
             f"{tot['flops'] / max(1.0, tot['bytes']):.2f} |  | "
             f"{tot['collective_bytes']:.3g} | "
             f"{tot['wall_time_s'] * 1e6:.1f} | 100.0 |")
+        exp = sum(r.exposed_collective_time for r in self.records)
+        ovl = sum(r.overlapped_collective_time for r in self.records)
+        if exp or ovl:
+            lines += [
+                "",
+                f"Collective: {exp * 1e6:.1f} us exposed, "
+                f"{ovl * 1e6:.1f} us overlapped "
+                f"({100 * ovl / max(exp + ovl, 1e-12):.0f}% hidden behind "
+                "the combine GEMM)",
+            ]
         if self.serving is not None:
             s = self.serving
             lines += [
@@ -450,7 +513,11 @@ class WorkloadReport:
         storing an unresolved "auto"/"pallas" alias disagrees with what
         dispatch resolves), whether the planned ``reorder`` permute
         actually ran at ingress (observed only by ``run_model`` -- the
-        entry that owns ingress/egress), and the ``compiled`` capability
+        entry that owns ingress/egress), the halo ``overlap`` schedule the
+        distributed dispatch actually priced (a record with overlapped
+        collective time on a plan describing ``overlap="none"`` -- or the
+        reverse -- is describe-vs-dispatch drift), and the ``compiled``
+        capability
         (a report carrying compiled times contradicts a describe() that
         claims ``plan.compile()`` is unsupported).  Kernel-entry tier
         selection below this layer is covered by tests/test_plan.py's
@@ -487,6 +554,20 @@ class WorkloadReport:
                     out.append(f"layer {d['layer']}: describe backend="
                                f"{d['backend']} but {r.phase} used "
                                f"{r.backend}")
+            dist = [r for r in recs if r.phase == "distributed"]
+            if "overlap" in d:
+                for r in dist:
+                    if r.exposed_collective_time == 0 and \
+                            r.overlapped_collective_time == 0:
+                        continue   # single shard: nothing moves, no signal
+                    observed_ov = ("pipelined"
+                                   if r.overlapped_collective_time > 0
+                                   else "none")
+                    if d["overlap"] != observed_ov:
+                        out.append(
+                            f"layer {d['layer']}: describe overlap="
+                            f"{d['overlap']} but probe recorded "
+                            f"{observed_ov} collective split")
             if not fused_ran and "aggregate" in seq and "combine" in seq:
                 observed = ("combine_first"
                             if seq.index("combine") < seq.index("aggregate")

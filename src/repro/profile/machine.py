@@ -11,6 +11,9 @@ analysis runs against any accelerator by passing a different preset.
 Presets::
 
     TPU_V5E   197 TFLOP/s bf16, 819 GB/s HBM, 4x50 GB/s ICI, 128 MiB VMEM
+    TPU_V5P   459 TFLOP/s bf16, 2765 GB/s HBM2e, 6x100 GB/s ICI (3-D
+              torus), 128 MiB VMEM -- the multi-host scale-out target the
+              distributed overlap model prices
     A100      312 TFLOP/s bf16, 1555 GB/s HBM, 12x25 GB/s NVLink,
               192 KiB SMEM/L1 carveout per SM (the GPU occupancy model)
     H100      989 TFLOP/s bf16, 3350 GB/s HBM3, 18x25 GB/s NVLink 4,
@@ -18,6 +21,13 @@ Presets::
     V100      15.7 TFLOP/s fp32, 900 GB/s HBM -- the PAPER's machine; its
               balance point (~17.4 F/B) is the classification threshold
               behind Table 3's "Execution Bound" row.
+
+The interconnect is described per hop -- ``interconnect_bw`` (one link's
+bandwidth) plus ``link_latency_s`` (per-message launch latency) -- because
+the ring halo schedules (``core.distributed``) saturate ONE link per
+direction per hop; ``interconnect_total`` remains the aggregate all-links
+number for bisection-style accounting.  ``hop_time(nbytes)`` is the
+overlap model's per-hop wire term.
 
 ``machine_for_backend`` maps a resolved backend tier (``core.backend``) to
 its natural preset so plan-level code can stay machine-implicit until a
@@ -43,8 +53,12 @@ class Machine:
         paper's V100 numbers).
       hbm_bw: HBM bandwidth, bytes/s.
       interconnect_bw: per-link chip interconnect bandwidth, bytes/s
-        (ICI link on TPU, NVLink lane on GPU).
+        (ICI link on TPU, NVLink lane on GPU) -- the PER-HOP bandwidth a
+        ring collective sees (one link per direction per hop).
       interconnect_links: number of such links per chip.
+      link_latency_s: per-message launch latency of one interconnect hop,
+        seconds (the fixed term of ``hop_time``; ~1 us ICI, ~2 us NVLink
+        with software overheads).
       on_chip_bytes: the fast scratch a fused tile must fit -- whole VMEM
         on TPU, the unified SMEM/L1 carveout per SM on GPU.
       regfile_bytes: register file per SM (GPU occupancy input; 0 on TPU).
@@ -63,6 +77,7 @@ class Machine:
     interconnect_bw: float
     interconnect_links: int
     on_chip_bytes: int
+    link_latency_s: float = 1e-6
     regfile_bytes: int = 0
     target_ctas: int = 0
     row_align: int = 8
@@ -81,6 +96,14 @@ class Machine:
     def interconnect_total(self) -> float:
         """Aggregate interconnect bandwidth (all links), bytes/s."""
         return self.interconnect_bw * self.interconnect_links
+
+    def hop_time(self, nbytes: float) -> float:
+        """Seconds for ONE interconnect hop moving ``nbytes`` over a single
+        link: ``link_latency_s + nbytes / interconnect_bw``.  The per-hop
+        wire term of the distributed overlap model
+        (``core.distributed.overlap_model``) -- a ring collective's hop
+        sees one link's bandwidth, never ``interconnect_total``."""
+        return self.link_latency_s + nbytes / self.interconnect_bw
 
     def tile_budget(self) -> int:
         """On-chip bytes one fused tile may claim: half of VMEM on TPU
@@ -101,6 +124,19 @@ TPU_V5E = Machine(
     peak_flops=197e12, hbm_bw=819e9,
     interconnect_bw=50e9, interconnect_links=4,     # 2-D torus: +-x, +-y
     on_chip_bytes=128 * 1024 * 1024,                # VMEM
+    link_latency_s=1e-6,
+    row_align=8, matrix_tile=128)
+
+#: TPU v5p, per chip: the scale-out pod part (3-D torus, 6 ICI links at
+#: ~100 GB/s each).  The Machine the distributed overlap model prices
+#: multi-host halo pipelining against -- fatter links than v5e move the
+#: choose_overlap break-even point.
+TPU_V5P = Machine(
+    name="tpu-v5p", kind="tpu",
+    peak_flops=459e12, hbm_bw=2765e9,
+    interconnect_bw=100e9, interconnect_links=6,    # 3-D torus: +-x,y,z
+    on_chip_bytes=128 * 1024 * 1024,                # VMEM
+    link_latency_s=1e-6,
     row_align=8, matrix_tile=128)
 
 #: A100-SXM4 (bf16 tensor cores).  The occupancy fields are what the GPU
@@ -110,6 +146,7 @@ A100 = Machine(
     name="a100", kind="gpu",
     peak_flops=312e12, hbm_bw=1555e9,
     interconnect_bw=25e9, interconnect_links=12,    # NVLink 3
+    link_latency_s=2e-6,
     on_chip_bytes=192 * 1024,                       # unified SMEM/L1 per SM
     regfile_bytes=256 * 1024, target_ctas=4,
     row_align=32, matrix_tile=16)
@@ -122,6 +159,7 @@ H100 = Machine(
     name="h100", kind="gpu",
     peak_flops=989e12, hbm_bw=3350e9,
     interconnect_bw=25e9, interconnect_links=18,    # NVLink 4
+    link_latency_s=2e-6,
     on_chip_bytes=228 * 1024,                       # unified SMEM/L1 per SM
     regfile_bytes=256 * 1024, target_ctas=4,
     row_align=32, matrix_tile=16)
@@ -132,12 +170,13 @@ V100 = Machine(
     name="v100", kind="gpu",
     peak_flops=15.7e12, hbm_bw=900e9,
     interconnect_bw=25e9, interconnect_links=6,     # NVLink 2
+    link_latency_s=2e-6,
     on_chip_bytes=128 * 1024,                       # unified SMEM/L1 per SM
     regfile_bytes=256 * 1024, target_ctas=4,
     row_align=32, matrix_tile=16)
 
 MACHINES: Dict[str, Machine] = {m.name: m
-                                for m in (TPU_V5E, A100, H100, V100)}
+                                for m in (TPU_V5E, TPU_V5P, A100, H100, V100)}
 
 
 def get_machine(name_or_machine) -> Machine:

@@ -72,9 +72,26 @@ class SlotServeCore:
         number of ``_step`` rounds (runaway guard)."""
         finished: List[Any] = []
         while (self._queue or self._active) and self._steps < max_steps:
-            finished.extend(self._admit())
-            finished.extend(self._step())
+            finished.extend(self.tick())
         return finished
+
+    def tick(self) -> List[Any]:
+        """ONE admission + step round; returns requests finished this
+        round.  ``run`` is tick-until-drained (the closed loop); open-loop
+        drivers instead interleave ticks with timed ``submit`` calls so
+        arrivals keep landing while earlier requests are in flight --
+        measured latency then includes queueing delay, not just service
+        time.  A tick with nothing queued or active is a no-op."""
+        if not (self._queue or self._active):
+            return []
+        finished = list(self._admit())
+        finished.extend(self._step())
+        return finished
+
+    @property
+    def outstanding(self) -> int:
+        """Requests submitted but not yet finished (queued + active)."""
+        return len(self._queue) + len(self._active)
 
     def stats(self) -> Dict[str, Any]:
         """Core serving stats: steps/served/active/queued, per-request

@@ -12,7 +12,9 @@ traffic the same way ``ServeEngine`` instantiates it for LM decode:
     bucket* that fits.
   * **Dispatch** (device-side, the planned half): every bucket
     ``(num_seeds, num_inputs, num_edges)`` owns exactly ONE
-    ``plan.compile(dynamic=True)`` callable -- the vLLM/aphrodite
+    ``plan.compile(dynamic=True, donate=True)`` callable (each call pads a
+    fresh feature buffer, so donating it lets the device recycle the
+    bucket's input allocation under sustained load) -- the vLLM/aphrodite
     ``_BATCH_SIZES_TO_CAPTURE`` idiom applied to graphs: the sampled block
     is padded into the bucket's static shapes (zero feature rows, sink
     self-edges, zero in-degrees) and executed with the edge arrays as
@@ -182,7 +184,7 @@ class GraphServeEngine(SlotServeCore):
                  buckets: Optional[Sequence[Tuple[int, int, int]]] = None,
                  fanouts: Tuple[int, int] = (5, 5), max_batch: int = 8,
                  seed: int = 0, machine=None, ordering: Optional[str] = None,
-                 plan_cache_watermark: int = 32):
+                 plan_cache_watermark: int = 32, donate: bool = True):
         super().__init__(max_batch)
         self.g = g
         self.cfg = cfg
@@ -194,6 +196,11 @@ class GraphServeEngine(SlotServeCore):
         self.machine = machine
         self.ordering = ordering
         self.plan_cache_watermark = int(plan_cache_watermark)
+        # donate the padded feature buffer to each bucket call: every call
+        # builds a fresh padded x, so under sustained load the device
+        # reuses the bucket's feature allocation instead of holding two.
+        # (On CPU XLA ignores donation with a one-time warning; harmless.)
+        self.donate = bool(donate)
         self.rng = np.random.default_rng(seed)
         if buckets is None:
             buckets = default_buckets(self.fanouts,
@@ -228,7 +235,8 @@ class GraphServeEngine(SlotServeCore):
                               fused=False, ordering=self.ordering,
                               machine=self.machine)
             self._plans[bucket] = plan
-            self._fns[bucket] = plan.compile(dynamic=True)
+            self._fns[bucket] = plan.compile(dynamic=True,
+                                             donate=self.donate)
         return plan, self._fns[bucket]
 
     def select_bucket(self, num_seeds: int, num_inputs: int,

@@ -20,9 +20,9 @@ from repro.core.scheduler import (AGGREGATE_FIRST, COMBINE_FIRST,
                                   ordering_time)
 from repro.graph.datasets import make_features, make_synthetic_graph
 from repro.models.gcn import make_paper_model
-from repro.profile import (A100, H100, MACHINES, TPU_V5E, V100, BenchSpec,
-                           Machine, WorkloadReportError, get_machine,
-                           machine_for_backend, run_specs)
+from repro.profile import (A100, H100, MACHINES, TPU_V5E, TPU_V5P, V100,
+                           BenchSpec, Machine, WorkloadReportError,
+                           get_machine, machine_for_backend, run_specs)
 from repro.profile.bench import csv_columns, write_csv
 
 GOLDEN = Path(__file__).parent / "golden" / "workload_report.schema.json"
@@ -49,10 +49,13 @@ def _gcn(spec, g, x, **plan_kw):
 
 
 def test_machine_presets_and_registry():
-    assert set(MACHINES) == {"tpu-v5e", "a100", "h100", "v100"}
+    assert set(MACHINES) == {"tpu-v5e", "tpu-v5p", "a100", "h100", "v100"}
     # the paper's classification threshold: V100 fp32 balance ~17.4 F/B
     assert V100.balance == pytest.approx(15.7e12 / 900e9)
     assert TPU_V5E.balance == pytest.approx(197e12 / 819e9)
+    # v5p: fatter chip, but HBM grows faster than peak -> lower balance
+    assert TPU_V5P.balance < TPU_V5E.balance
+    assert get_machine("tpu-v5p") is TPU_V5P
     assert V100.classify(5.0) == "memory"
     assert V100.classify(50.0) == "compute"
     # the same AI=50 GEMM is memory-bound on v5e: the hardware-adaptation

@@ -224,6 +224,29 @@ def test_graph_padded_bit_identical_to_eager(graph_setup):
         assert np.array_equal(compiled, eng.run_eager(prep))
 
 
+def test_graph_bucket_donation_no_retrace_and_exact(graph_setup):
+    """Satellite: bucket callables compile with donate=True by default --
+    each call pads a FRESH feature buffer, so donation must neither
+    retrace nor perturb the padded-vs-eager bitwise contract."""
+    spec, g, _ = graph_setup
+    eng = _graph_engine(graph_setup)
+    assert eng.donate is True                       # the default
+    eng.warmup()
+    assert all(fn.donate for fn in eng._fns.values())
+    rng = np.random.default_rng(11)
+    for s in (2, 4, 2, 9, 4):                       # sustained bucket reuse
+        prep = eng.prepare(rng.choice(g.num_vertices, size=s,
+                                      replace=False))
+        assert prep.bucket is not None
+        compiled = eng.run_prepared(prep)
+        assert np.array_equal(compiled, eng.run_eager(prep))
+    assert eng.retraces() == 0                      # one trace per bucket
+    # opting out still works (callers that reuse x across calls)
+    eng2 = _graph_engine(graph_setup, donate=False)
+    eng2.warmup()
+    assert all(not fn.donate for fn in eng2._fns.values())
+
+
 def test_graph_slot_reuse(graph_setup):
     spec, g, _ = graph_setup
     eng = _graph_engine(graph_setup, max_batch=2)
