@@ -16,6 +16,7 @@ reads instead of re-parsing stdout).
   bench_plan            planner sweep: backend x ordering x fusion scenarios
   bench_overlap         overlap x strategy x partition halo-pipelining matrix
   bench_serve           serving: GraphServeEngine offered-load latency sweep
+  bench_dtype           dtype x feature_len precision matrix + choose_dtype flip
   roofline              deliverable (g): dry-run roofline table
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--dry-run] [module ...]
@@ -60,8 +61,8 @@ def main() -> None:
     argv = [a for a in argv if a != "--dry-run"]
 
     from benchmarks import (bench_agg_vs_pgr, bench_breakdown,
-                            bench_feature_length, bench_kernels,
-                            bench_ordering, bench_overlap,
+                            bench_dtype, bench_feature_length,
+                            bench_kernels, bench_ordering, bench_overlap,
                             bench_phase_metrics, bench_plan, bench_serve,
                             roofline)
     modules = {
@@ -74,15 +75,20 @@ def main() -> None:
         "bench_plan": bench_plan,
         "bench_overlap": bench_overlap,
         "bench_serve": bench_serve,
+        "bench_dtype": bench_dtype,
         "roofline": roofline,
     }
     if dry:
         # bench_serve's dry sweep is the serving acceptance gate (bucket
-        # misses, retraces, padded-vs-eager drift, empty serving stats)
-        # and bench_overlap's is the halo-pipelining gate (bitwise
-        # pipelined==none, compiled contract, modeled-time ordering) --
-        # both hard-fail the smoke check alongside the planner matrix.
-        selected = argv or ["bench_plan", "bench_overlap", "bench_serve"]
+        # misses, retraces, padded-vs-eager drift, empty serving stats),
+        # bench_overlap's is the halo-pipelining gate (bitwise
+        # pipelined==none, compiled contract, modeled-time ordering), and
+        # bench_dtype's is the precision gate (f32 bitwise under compile,
+        # reduced dtypes banded, choose_dtype preset flip, bf16 halo
+        # halving) -- all hard-fail the smoke check alongside the planner
+        # matrix.
+        selected = argv or ["bench_plan", "bench_overlap", "bench_serve",
+                            "bench_dtype"]
     else:
         selected = argv or list(modules)
 

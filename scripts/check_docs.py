@@ -61,7 +61,8 @@ PUBLIC_SURFACE = {
     "repro.core.phases": ["aggregate", "combine", "phase_ordered_layer"],
     "repro.profile.machine": [
         "Machine", "Machine.tile_budget", "Machine.classify",
-        "Machine.hop_time", "get_machine", "machine_for_backend",
+        "Machine.hop_time", "Machine.matmul_peak", "get_machine",
+        "machine_for_backend", "choose_dtype", "dtype_model",
     ],
     "repro.profile.instrument": [
         "InstrumentedPlan", "InstrumentedPlan.run_model", "WorkloadReport",
@@ -79,7 +80,10 @@ PUBLIC_SURFACE = {
 CONTENT_REQUIREMENTS = {
     ("repro.core.plan", "build_plan"): [">>>", "mesh", "num_shards",
                                         "reorder", "degree", "auto",
-                                        "overlap", "pipelined"],
+                                        "overlap", "pipelined", "dtype",
+                                        "bf16"],
+    ("repro.profile.machine", "choose_dtype"): [
+        ">>>", "bf16", "native_bf16", "halo"],
     ("repro.core.distributed", "choose_overlap"): [
         "pipelined", "hop", "Machine", ">>>"],
     ("repro.core.distributed", "overlap_model"): [
@@ -106,13 +110,17 @@ REQUIRED_FILES = {
                                    "degree_reorder",
                                    "Overlapped halo execution",
                                    "choose_overlap", "pipelined",
-                                   "double-buffered", "bench_overlap"],
+                                   "double-buffered", "bench_overlap",
+                                   "Reduced-precision execution",
+                                   "choose_dtype", "int8-agg",
+                                   "bench_dtype", "quant_error"],
     ROOT / "docs" / "characterization.md": [
         "Machine", "TPU_V5E", "TPU_V5P", "A100", "H100", "V100",
         "WorkloadReport", "to_markdown", "BenchSpec", "instrument",
         "workload-report", "balance", "compiled", "hop_time",
         "link_latency_s", "exposed_collective_time",
-        "overlapped_collective_time"],
+        "overlapped_collective_time", "dtype", "dtype_model",
+        "matmul_peak"],
     ROOT / "docs" / "serving.md": [
         "GraphServeEngine", "SlotServeCore", "bucket", "warmup",
         "clear_plan_cache", "plan_cache_stats", "dynamic", "retrace",

@@ -21,7 +21,16 @@
 #      every closed-loop level AND the open-loop Poisson points warm up
 #      the bucket ladder, serve the synthetic workload, and HARD-FAIL on
 #      bucket misses, retraces after warmup(), empty serving stats, or
-#      padded-vs-eager bit drift (docs/serving.md),
+#      padded-vs-eager bit drift (docs/serving.md).  The dry run ALSO
+#      sweeps the dtype x feature_len precision matrix (bench_dtype):
+#      every cell builds through build_plan(dtype=...) and HARD-FAILS if
+#      the f32 plan is not bitwise-identical under plan.compile(), if a
+#      reduced-precision (bf16 / int8-agg) cell drifts outside the ONE
+#      shared tolerance band or silently runs f32 (no observed
+#      quant_error), if choose_dtype fails to flip between the V100 and
+#      TPU_V5E presets, if the instrumented bf16 halo bytes are not
+#      EXACTLY half of f32's on 8 fake devices, or if any dtype cell is
+#      skipped without a logged reason,
 #   3. the docs gate (README + docs/planner.md + docs/characterization.md
 #      + docs/serving.md exist, public planner/profile/serving symbols
 #      documented -- scripts/check_docs.py).
@@ -40,13 +49,16 @@ python -m pytest -x -q \
   --deselect tests/test_distributed.py::test_ctx_parallel_attention_sharded \
   "$@"
 
-echo "== planner + overlap + serving dry-run (backend x ordering x fusion x"
-echo "   reorder x partition; instrumented: one schema-validated"
+echo "== planner + overlap + serving + dtype dry-run (backend x ordering x"
+echo "   fusion x reorder x partition; instrumented: one schema-validated"
 echo "   WorkloadReport per scenario, compiled contract: bitwise eager"
 echo "   equality + no retrace; overlap matrix: silently skipped overlap"
 echo "   cells or a compiled-bitwise/pipelined-schedule break hard-fail;"
 echo "   serving: bucketed offered-load drain, closed- and open-loop --"
-echo "   bucket misses, retraces, or empty serving stats hard-fail) =="
+echo "   bucket misses, retraces, or empty serving stats hard-fail;"
+echo "   dtype matrix: f32 bitwise drift, band violations, a missing"
+echo "   choose_dtype preset flip, or non-halved bf16 halo bytes"
+echo "   hard-fail) =="
 python -m benchmarks.run --dry-run
 
 echo "== docs gate =="

@@ -180,13 +180,17 @@ def fused_gcn_layer(bg: BlockedGraph, x: jnp.ndarray, w: jnp.ndarray,
     out = out[: bg.num_vertices]
     # self contribution + mean normalization (linear, applied post-GEMM;
     # reciprocal-multiply keeps eager == compiled bitwise -- see
-    # phases.aggregate)
+    # phases.aggregate).  The self matmul goes through phases._mm so bf16
+    # plan operands accumulate f32; f32 inputs take the identical `@`.
+    from repro.core.phases import _mm
     if agg_op == "mean":
         assert in_deg is not None
-        out = (out + x[: bg.num_vertices] @ w) * (
-            1.0 / (in_deg.astype(out.dtype) + 1.0))[:, None]
+        self_term = _mm(x[: bg.num_vertices], w)
+        norm_dtype = jnp.promote_types(out.dtype, self_term.dtype)
+        out = (out.astype(norm_dtype) + self_term) * (
+            1.0 / (in_deg.astype(norm_dtype) + 1.0))[:, None]
     elif agg_op == "sum_self":
-        out = out + x[: bg.num_vertices] @ w
+        out = out + _mm(x[: bg.num_vertices], w)
     if bias is not None:
         out = out + bias
     return out

@@ -129,7 +129,12 @@ def _ring_local(x_loc, srcl, dstl, mskl, block, nsh, axis):
         buf = jax.lax.ppermute(buf, axis, perm)   # pass block onward
         return (buf, acc), None
 
-    acc0 = jnp.zeros((block, x_loc.shape[-1]), x_loc.dtype)
+    # acc dtype: _hop_partial's f32 mask multiply promotes reduced (bf16)
+    # slabs to f32 partials, so the accumulator must be the promoted type
+    # while the ppermute wire keeps carrying the reduced x_loc slab.
+    # f32 slabs: promote_types(f32, f32) == f32 -- unchanged.
+    acc0 = jnp.zeros((block, x_loc.shape[-1]),
+                     jnp.promote_types(x_loc.dtype, mskl.dtype))
     (_, acc), _ = jax.lax.scan(hop, (x_loc, acc0), jnp.arange(nsh))
     return acc
 
@@ -159,7 +164,10 @@ def _ring_local_pipelined(x_loc, srcl, dstl, mskl, block, nsh, axis):
         acc = acc + _hop_partial(buf, k, p, srcl, dstl, mskl, block, nsh)
         return (nxt, acc), None
 
-    acc0 = jnp.zeros((block, x_loc.shape[-1]), x_loc.dtype)
+    # same promoted accumulator as _ring_local (f32 partials over a reduced
+    # bf16 wire slab); identical type for f32 slabs
+    acc0 = jnp.zeros((block, x_loc.shape[-1]),
+                     jnp.promote_types(x_loc.dtype, mskl.dtype))
     (buf, acc), _ = jax.lax.scan(hop, (x_loc, acc0), jnp.arange(nsh - 1))
     # last hop: the slab is already resident -- reduce it, send nothing
     return acc + _hop_partial(buf, nsh - 1, p, srcl, dstl, mskl, block, nsh)
@@ -384,10 +392,23 @@ def _local_graph_view(pg: PartitionedGraph):
         num_edges=int(np.asarray(pg.mask).sum()))
 
 
+def _reduce_wire(h: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    """Reduce the halo-exchange operand to the plan dtype's wire width:
+    bf16 cast (half the ppermute bytes), int8 per-row fake-quant (the
+    values an int8 wire + f32 accumulate would move; the 1-byte width is
+    priced analytically), identity for f32."""
+    if dtype == "bf16":
+        return h.astype(jnp.bfloat16)
+    if dtype == "int8-agg":
+        from repro.core.phases import quantize_int8
+        return quantize_int8(h)
+    return h
+
+
 def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
                           mesh: Mesh, *, order: Optional[str] = None,
                           strategy: str = "ring", axis: str = "data",
-                          overlap: str = "none"):
+                          overlap: str = "none", dtype: str = "f32"):
     """One distributed GCN layer with explicit phase ordering (Table 4).
 
     combine_first: project locally (embarrassingly parallel GEMM), then
@@ -402,10 +423,18 @@ def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
     pipelining requires ``strategy="ring"``.  ``"auto"`` is resolved at
     plan build by :func:`choose_overlap`, never passed here.
 
+    ``dtype`` is the plan's resolved execution precision: ``"f32"`` is the
+    unchanged (bitwise-golden) path; ``"bf16"`` casts operands to bf16 so
+    the halo's ppermute wire moves HALF the bytes while every partial
+    combine still accumulates f32; ``"int8-agg"`` fake-quantizes only the
+    exchanged aggregation operand (per-row scales, f32 accumulate) and
+    keeps the GEMM in f32.
+
     This is the shard_map primitive; model-level code reaches it through a
     ``GraphExecutionPlan`` built with ``mesh=``/``num_shards=`` (core/plan.py)
     rather than calling it with hand-threaded flags.
     """
+    from repro.core.phases import _mm
     if order is None:
         from repro.core.scheduler import choose_ordering
         order = choose_ordering(
@@ -414,17 +443,25 @@ def distributed_gcn_layer(pg: PartitionedGraph, x, w, bias, in_deg,
     _halo_body(strategy, overlap)     # validate the (strategy, overlap) pair
     agg = functools.partial(aggregate_ring, overlap=overlap) \
         if strategy == "ring" else aggregate_allgather
-    deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
+    if dtype == "bf16":
+        x = x.astype(jnp.bfloat16)
+        w = w.astype(jnp.bfloat16)
+        bias = bias.astype(jnp.bfloat16)
+    deg = jnp.maximum(
+        in_deg.astype(jnp.promote_types(x.dtype, jnp.float32)) + 1.0,
+        1.0)[:, None]
     deg = pad_features(deg, pg.block_size, pg.num_shards)
     # reciprocal-multiply normalization (not broadcast division) so the
     # jitted plan.compile() path stays bit-for-bit equal to eager dispatch
     rdeg = 1.0 / jnp.where(deg == 0, 1.0, deg)
     if order == "combine_first":
-        h = x @ w
+        h = _reduce_wire(_mm(x, w), dtype)   # the wire carries the reduced h
         out = (agg(pg, h, mesh, axis) + h) * rdeg
     else:
-        out = ((agg(pg, x, mesh, axis) + x) * rdeg) @ w
-    return out + bias
+        xw = _reduce_wire(x, dtype)          # the wire carries the reduced x
+        out = _mm((agg(pg, xw, mesh, axis) + xw) * rdeg, w)
+    out = out + bias
+    return out.astype(jnp.bfloat16) if dtype == "bf16" else out
 
 
 # ---------------------------------------------------------------------------
@@ -444,7 +481,7 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
                              mesh: Mesh, *, order: Optional[str] = None,
                              strategy: str = "ring",
                              axes=("node", "feat"),
-                             overlap: str = "none"):
+                             overlap: str = "none", dtype: str = "f32"):
     """One GCN layer on a 2-D (node x feature) device mesh (exact).
 
     Device (p, q) owns node block p's rows restricted to feature block q.
@@ -467,10 +504,16 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
     scheduler's cost model.  ``overlap`` picks the node-axis ring schedule
     exactly as in :func:`distributed_gcn_layer` (the pipelined double
     buffer hides each F/Q-wide slab's wire time under the resident partial
-    combine; bit-identical to the single-buffered schedule).  Model-level
+    combine; bit-identical to the single-buffered schedule).  ``dtype``
+    mirrors :func:`distributed_gcn_layer`: f32 is the unchanged bitwise
+    path; bf16 halves the node-axis halo slab the ring actually moves
+    (the feature-axis reduce-scatter keeps f32 partials -- its cross-
+    device sum IS the accumulator); int8-agg fake-quantizes only the
+    exchanged aggregation operand.  Model-level
     code reaches this through a ``GraphExecutionPlan`` built with a 2-D
     ``mesh=`` (core/plan.py).
     """
+    from repro.core.phases import _mm
     pg = p2.nodes
     _require_uniform(pg)
     node_ax, feat_ax = axes
@@ -484,13 +527,20 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
                                 agg_op="mean", n_mlp_layers=1)
     local = _halo_body(strategy, overlap)
 
+    if dtype == "bf16":
+        x = x.astype(jnp.bfloat16)
+        w = w.astype(jnp.bfloat16)
+        bias = bias.astype(jnp.bfloat16)
+
     # zero-pad W/bias onto the (Q*fb_in, Q*fb_out) grid: pad x columns hit
     # zero W rows, pad W columns produce zero outputs -- exactness is free
     wp = jnp.zeros((q_sh * fb_in, q_sh * fb_out), w.dtype)
     wp = wp.at[:f_in, :f_out].set(w)
     bp = jnp.zeros((q_sh * fb_out,), w.dtype).at[:f_out].set(bias)
 
-    deg = jnp.maximum(in_deg.astype(x.dtype) + 1.0, 1.0)[:, None]
+    deg = jnp.maximum(
+        in_deg.astype(jnp.promote_types(x.dtype, jnp.float32)) + 1.0,
+        1.0)[:, None]
     deg = pad_features(deg, block, nsh)
     # reciprocal of the (rows, 1) degree column: multiplied, never divided
     # (bitwise eager/compiled equality -- see distributed_gcn_layer)
@@ -514,16 +564,20 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
         def combine(h):
             # partial GEMM closed with a reduce-scatter over the feature
             # axis: each device receives only its own (block, fb_out)
-            # column slice -- 1/Q the wire bytes of psum + local slice
-            return jax.lax.psum_scatter(h @ w_block(fb_in), feat_ax,
+            # column slice -- 1/Q the wire bytes of psum + local slice.
+            # _mm keeps reduced (bf16) partials accumulating f32; f32
+            # operands take the identical plain matmul.
+            return jax.lax.psum_scatter(_mm(h, w_block(fb_in)), feat_ax,
                                         scatter_dimension=1, tiled=True)
 
         if order == "combine_first":
-            hq = combine(x_loc)                          # (block, fb_out)
+            # the node-axis halo wire carries the reduced combine output
+            hq = _reduce_wire(combine(x_loc), dtype)     # (block, fb_out)
             out = (local(hq, srcl, dl, ml, block, nsh, node_ax) + hq) * rdg
         else:
-            agg = local(x_loc, srcl, dl, ml, block, nsh, node_ax)
-            out = combine((agg + x_loc) * rdg)
+            xw = _reduce_wire(x_loc, dtype)
+            agg = local(xw, srcl, dl, ml, block, nsh, node_ax)
+            out = combine((agg + xw) * rdg)
         out = out + jax.lax.dynamic_slice(bp_, (qi * fb_out,), (fb_out,))
         return out.reshape(1, block, 1, fb_out)
 
@@ -535,7 +589,8 @@ def distributed_gcn_layer_2d(p2: Partition2D, x, w, bias, in_deg,
         out_specs=P(node_ax, None, feat_ax, None), check_rep=False,
     )(x.reshape(nsh, block, q_sh, fb_in), pg.src, pg.dst_local, pg.mask,
       rdeg.reshape(nsh, block, 1), wp, bp)
-    return out.reshape(nsh * block, q_sh * fb_out)
+    out = out.reshape(nsh * block, q_sh * fb_out)
+    return out.astype(jnp.bfloat16) if dtype == "bf16" else out
 
 
 def halo_bytes_2d(p2: Partition2D, feature_len: int,

@@ -32,6 +32,37 @@ from repro.graph.structure import Graph
 AGGREGATORS = ("sum", "mean", "max")
 
 
+def _mm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Matmul that accumulates f32 for reduced-precision operands.
+
+    f32 x f32 stays the plain ``@`` (bitwise-identical to the pre-dtype
+    path -- the guard is what keeps f32 plans golden); anything narrower
+    (bf16 plan operands) runs with ``preferred_element_type=float32`` so
+    the MXU/tensor-core accumulator is full precision.
+    """
+    if a.dtype == jnp.float32 and b.dtype == jnp.float32:
+        return a @ b
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def quantize_int8(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-row symmetric int8 fake-quantization of an aggregation operand.
+
+    Each row is scaled by ``max|row| / 127`` (zero rows get scale 1),
+    rounded to the int8 grid, and returned dequantized in f32 -- every
+    value is exactly int8-representable times its row scale, which is what
+    a real int8 gather + f32 accumulate + dequant pipeline computes, while
+    staying a pure traceable f32 computation on this container.  The plan
+    dtype ``"int8-agg"`` applies this ONLY to the aggregation input; the
+    1-byte wire/HBM width is priced analytically (``profile.machine``).
+    """
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0)
+    return q * scale
+
+
 # ---------------------------------------------------------------------------
 # Aggregation phase
 # ---------------------------------------------------------------------------
@@ -98,12 +129,19 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
     else:
         if w is not None:
             gathered = gathered * w[:, None].astype(gathered.dtype)
+        if gathered.dtype != jnp.float32:
+            # reduced-precision plan operand (bf16): the segmented reduce
+            # must still accumulate f32 -- the plan rounds the phase
+            # OUTPUT back down, never the accumulator.  f32 inputs skip
+            # the cast entirely (bitwise-golden default path).
+            gathered = gathered.astype(jnp.float32)
         summed = jax.ops.segment_sum(gathered, g.dst, num_segments=v)
 
     if include_self:
         summed = summed + x
     if op == "mean":
-        denom = g.in_deg.astype(x.dtype) + (1.0 if include_self else 0.0)
+        denom = g.in_deg.astype(summed.dtype) + \
+            (1.0 if include_self else 0.0)
         # reciprocal-multiply, not broadcast division: XLA's jitted fusion
         # rewrites (V,F)/(V,1) division non-bitwise-reproducibly vs eager;
         # the (V,1) reciprocal + multiply is identical in both, which is
@@ -146,7 +184,7 @@ def combine(x: jnp.ndarray, weights, activation: Optional[str] = "relu",
     h = x
     n = len(weights)
     for i, (wmat, b) in enumerate(weights):
-        h = h @ wmat
+        h = _mm(h, wmat)  # f32-accumulating for reduced-precision operands
         if b is not None:
             h = h + b
         if activation and (i < n - 1 or final_activation):

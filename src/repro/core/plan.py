@@ -127,7 +127,8 @@ class GraphExecutionPlan:
                  interpret: bool, mesh=None, partition=None,
                  strategy: str = "ring", axis: str = "data",
                  axes: Tuple[str, str] = ("node", "feat"), machine=None,
-                 reorder: str = "none", perm=None, overlap: str = "none"):
+                 reorder: str = "none", perm=None, overlap: str = "none",
+                 dtype: str = "f32"):
         self.g = g                   # the EXECUTION graph (renumbered when
                                      # reorder="degree")
         self.layers: Tuple[LayerPlan, ...] = tuple(layers)
@@ -141,6 +142,8 @@ class GraphExecutionPlan:
         self.reorder = reorder       # "none" | "degree" (resolved)
         self.overlap = overlap       # "none" | "pipelined" (resolved halo
                                      # schedule; "auto" never survives build)
+        self.dtype = dtype           # "f32" | "bf16" | "int8-agg" (resolved
+                                     # execution precision; never "auto")
         # perm[old_id] = new_id (graph.reorder.degree_reorder contract);
         # inv[new_id] = old_id.  Device constants the traced ingress/egress
         # gathers close over -- never recomputed per call.
@@ -231,7 +234,8 @@ class GraphExecutionPlan:
             return self._run_distributed(lp, x, weights, bias_post,
                                          probe=_probe)
         return _execute_layer(self.g if graph is None else graph, lp, x,
-                              weights, bias_post=bias_post, probe=_probe)
+                              weights, bias_post=bias_post, probe=_probe,
+                              dtype=self.dtype)
 
     def _ingress(self, x: jnp.ndarray, *, _probe=None) -> jnp.ndarray:
         """Natural (V, F) features -> the plan's execution layout: the
@@ -425,7 +429,8 @@ class GraphExecutionPlan:
                 _probe.note_reorder()
         h = _execute_layer(self.g, self.layers[layer], x, weights,
                            edge_weight=edge_weight, activation=activation,
-                           bias_post=bias_post, probe=_probe)
+                           bias_post=bias_post, probe=_probe,
+                           dtype=self.dtype)
         if self.perm is not None:
             h = jnp.take(h, self.perm, axis=0)
         return h
@@ -442,18 +447,24 @@ class GraphExecutionPlan:
             thunk = lambda: distributed_gcn_layer_2d(  # noqa: E731
                 self.partition, x, w, bias, self.g.in_deg, self.mesh,
                 order=lp.order, strategy=self.strategy, axes=self.axes,
-                overlap=self.overlap)
+                overlap=self.overlap, dtype=self.dtype)
         else:
             thunk = lambda: distributed_gcn_layer(  # noqa: E731
                 self.partition, x, w, bias, self.g.in_deg, self.mesh,
                 order=lp.order, strategy=self.strategy, axis=self.axis,
-                overlap=self.overlap)
+                overlap=self.overlap, dtype=self.dtype)
         # halo feature length: what the exchange moves under this ordering;
         # overlap rides along so the probe prices the schedule that
-        # actually dispatched (exposed vs. overlapped collective time)
+        # actually dispatched (exposed vs. overlapped collective time);
+        # the quant error reported for reduced plans is the layer-ingress
+        # operand's (the per-shard exchange operand is shard_map-internal)
         agg_len = lp.din if lp.order == AGGREGATE_FIRST else lp.dout
+        qerr = 0.0
+        if probe is not None and self.dtype != "f32":
+            qerr = _quant_err(x, _reduce_in(x, self.dtype))
         return _phase(probe, "distributed", thunk, lp=lp,
-                      feature_len=agg_len, overlap=self.overlap)
+                      feature_len=agg_len, overlap=self.overlap,
+                      quant_error=qerr)
 
     def instrument(self, machine=None, warmup: int = 0):
         """Wrap this plan for characterization (``repro.profile``).
@@ -486,7 +497,9 @@ class GraphExecutionPlan:
     def describe(self) -> List[Dict]:
         """One dict per layer: every planned decision + modeled agg cost.
 
-        ``reorder`` is the resolved locality decision ("none" | "degree")
+        ``reorder`` is the resolved locality decision ("none" | "degree"),
+        ``dtype`` the resolved execution precision ("f32" | "bf16" |
+        "int8-agg" -- never "auto"),
         and ``compiled`` the trace-purity capability (``plan.compile()``
         works iff True -- always, for plans built by the public entry
         points).  N.B. one-off Pallas aggregation on an UN-planned graph
@@ -506,7 +519,7 @@ class GraphExecutionPlan:
                 "interpret": self.interpret,
                 "distributed": self.distributed,
                 "partition": self.partition_kind,
-                "overlap": self.overlap,
+                "overlap": self.overlap, "dtype": self.dtype,
                 "reorder": self.reorder, "compiled": compiled_ok,
                 "agg_bytes": oc.agg_bytes, "agg_flops": oc.agg_flops,
             })
@@ -655,62 +668,128 @@ def _phase(probe, name: str, thunk, *, lp: LayerPlan, **meta):
     return probe.run(name, thunk, lp=lp, **meta)
 
 
+def _round(h: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    """Round a phase output back to the plan dtype's storage precision.
+    Identity for f32 and int8-agg (whose phase outputs stay f32)."""
+    return h.astype(jnp.bfloat16) if dtype == "bf16" else h
+
+
+def _reduce_in(h: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    """Reduced-precision image of one phase operand: bf16 cast, int8
+    per-row fake-quant, or identity for f32."""
+    if dtype == "bf16":
+        return h.astype(jnp.bfloat16)
+    if dtype == "int8-agg":
+        return phases.quantize_int8(h)
+    return h
+
+
+def _quant_err(orig: jnp.ndarray, reduced: jnp.ndarray) -> float:
+    """Max abs error a precision reduction introduced (probe-time only:
+    forces a host sync, so production dispatch never calls it)."""
+    return float(jnp.max(jnp.abs(orig.astype(jnp.float32) -
+                                 reduced.astype(jnp.float32))))
+
+
 def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
                    edge_weight=None, activation: str = "relu",
-                   bias_post=None, probe=None) -> jnp.ndarray:
-    """Execute one layer per its plan: fusion > ordering > backend."""
+                   bias_post=None, probe=None,
+                   dtype: str = "f32") -> jnp.ndarray:
+    """Execute one layer per its plan: fusion > ordering > backend.
+
+    ``dtype`` is the plan's resolved execution precision.  ``"f32"`` takes
+    the unmodified path (every cast below is guarded, so the default stays
+    bitwise-golden).  ``"bf16"`` casts the operands once at entry and
+    rounds each phase output back to bf16 -- reductions and matmuls still
+    accumulate f32 (kernel scratch / ``preferred_element_type``).
+    ``"int8-agg"`` fake-quantizes ONLY the aggregation operand (per-row
+    symmetric scales via ``phases.quantize_int8``), aggregates the
+    int8-representable rows in f32, and leaves combination in full f32.
+    """
+    entry_err = 0.0
+    if dtype == "bf16":
+        xr = x.astype(jnp.bfloat16)
+        if probe is not None:
+            entry_err = _quant_err(x, xr)
+        x = xr
+        weights = [(w.astype(jnp.bfloat16),
+                    None if b is None else b.astype(jnp.bfloat16))
+                   for (w, b) in weights]
+        if bias_post is not None:
+            bias_post = bias_post.astype(jnp.bfloat16)
     mlp_dims = tuple([int(w.shape[0]) for (w, _) in weights] +
                      [int(weights[-1][0].shape[1])])
     if _can_fuse(lp, weights, edge_weight):
         w0, b0 = weights[0]
         fused_dims = (int(w0.shape[0]), int(w0.shape[1]))
+        xa, agg_err = x, entry_err
+        if dtype == "int8-agg":
+            xa = phases.quantize_int8(x)
+            if probe is not None:
+                agg_err = _quant_err(x, xa)
         if len(weights) == 1:
             # Whole layer fused: aggregate(+)combine never leaves the tile.
             # An inline b0 is exact applied post-aggregation here (that is
             # what _can_fuse admitted), so fold it into the final bias.
             bias = b0 if bias_post is None else (
                 bias_post if b0 is None else b0 + bias_post)
-            return _phase(
+            h = _phase(
                 probe, "fused_agg_combine",
-                lambda: fused_gcn_layer(lp.blocked, x, w0, bias,
+                lambda: fused_gcn_layer(lp.blocked, xa, w0, bias,
                                         agg_op=_fused_agg_op(lp),
                                         in_deg=g.in_deg, backend=lp.backend),
-                lp=lp, dims=fused_dims)
+                lp=lp, dims=fused_dims, quant_error=agg_err)
+            return _round(h, dtype)
         # Multi-layer MLP (GIN): fuse aggregation with the FIRST matmul --
         # exact because sum/mean aggregation is linear and the interior
         # nonlinearity only applies after that matmul.
         h = _phase(
             probe, "fused_agg_combine",
-            lambda: fused_gcn_layer(lp.blocked, x, w0, b0,
+            lambda: fused_gcn_layer(lp.blocked, xa, w0, b0,
                                     agg_op=_fused_agg_op(lp),
                                     in_deg=g.in_deg, backend=lp.backend),
-            lp=lp, dims=fused_dims)
-        h = phases._act(activation)(h)
+            lp=lp, dims=fused_dims, quant_error=agg_err)
+        h = _round(phases._act(activation)(h), dtype)
         h = _phase(probe, "combine",
                    lambda hh=h: phases.combine(hh, weights[1:],
                                                activation=activation),
                    lp=lp, dims=mlp_dims[1:])
+        h = _round(h, dtype)
     elif lp.order == COMBINE_FIRST:
         h = _phase(probe, "combine",
                    lambda: phases.combine(x, weights, activation=activation),
-                   lp=lp, dims=mlp_dims)
+                   lp=lp, dims=mlp_dims, quant_error=entry_err)
+        h = _round(h, dtype)
+        ha, agg_err = h, 0.0
+        if dtype == "int8-agg":
+            ha = phases.quantize_int8(h)
+            if probe is not None:
+                agg_err = _quant_err(h, ha)
         h = _phase(probe, "aggregate",
-                   lambda hh=h: phases.aggregate(
+                   lambda hh=ha: phases.aggregate(
                        g, hh, op=lp.agg_op, edge_weight=edge_weight,
                        include_self=lp.include_self, backend=lp.backend,
                        layout=lp.agg_layout),
-                   lp=lp, feature_len=int(h.shape[-1]))
+                   lp=lp, feature_len=int(h.shape[-1]), quant_error=agg_err)
+        h = _round(h, dtype)
     else:
+        xa, agg_err = x, entry_err
+        if dtype == "int8-agg":
+            xa = phases.quantize_int8(x)
+            if probe is not None:
+                agg_err = _quant_err(x, xa)
         h = _phase(probe, "aggregate",
                    lambda: phases.aggregate(
-                       g, x, op=lp.agg_op, edge_weight=edge_weight,
+                       g, xa, op=lp.agg_op, edge_weight=edge_weight,
                        include_self=lp.include_self, backend=lp.backend,
                        layout=lp.agg_layout),
-                   lp=lp, feature_len=int(x.shape[-1]))
+                   lp=lp, feature_len=int(x.shape[-1]), quant_error=agg_err)
+        h = _round(h, dtype)
         h = _phase(probe, "combine",
                    lambda hh=h: phases.combine(hh, weights,
                                                activation=activation),
                    lp=lp, dims=mlp_dims)
+        h = _round(h, dtype)
     if bias_post is not None:
         h = h + bias_post
     return h
@@ -915,7 +994,8 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                num_shards: int = 0, strategy: str = "ring",
                axis: str = "data", interpret: Optional[bool] = None,
                machine=None, reorder: str = "none",
-               overlap: str = "none") -> GraphExecutionPlan:
+               overlap: str = "none",
+               dtype: str = "f32") -> GraphExecutionPlan:
     """Plan a full model (``GCNModelConfig``) over one graph.
 
     Overrides: ``backend`` ("auto" resolves per platform -- see
@@ -966,6 +1046,27 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
     ``plan.instrument()`` reports (exposed vs. overlapped collective
     time), and part of the plan cache key.
 
+    The ``dtype=`` contract (execution precision as a planned decision):
+
+      * ``"f32"`` (default): full precision -- bitwise-identical to every
+        pre-dtype plan, eager and under ``plan.compile()``.
+      * ``"bf16"``: aggregate AND combine run on bf16 operands with f32
+        accumulators (kernel scratch / ``preferred_element_type``); halo
+        exchanges move bf16 payloads -- exactly half the f32 bytes.
+      * ``"int8-agg"``: only the AGGREGATION operand is quantized (per-row
+        symmetric int8 scales, f32 accumulate, dequantized before
+        combination stays f32).  Never auto-chosen -- the quantization
+        error is a semantic opt-in.
+      * ``"auto"``: resolved by ``profile.machine.choose_dtype`` against
+        the plan's ``machine`` -- HBM aggregation traffic, matmul peak per
+        precision (``Machine.native_bf16``), and the sharded halo's
+        ``hop_time`` on the reduced payload.  Flips between presets:
+        bf16 on TPU_V5E/A100, f32 on the paper's V100.
+
+    The resolved dtype is stored on the plan (``plan.dtype``), surfaced in
+    ``describe()``, recorded per phase by ``plan.instrument()`` (with the
+    measured quantization error), and part of the plan cache key.
+
     The ``mesh=`` / ``num_shards=`` contract:
 
       * ``mesh=None`` (default): a local, single-device plan;
@@ -1015,11 +1116,14 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
         raise ValueError("overlap='pipelined' requires strategy='ring'; "
                          "the all-gather halo has no per-hop structure "
                          "to pipeline")
+    if dtype not in ("f32", "bf16", "int8-agg", "auto"):
+        raise ValueError(f"unknown dtype {dtype!r}; expected "
+                         "'f32' | 'bf16' | 'int8-agg' | 'auto'")
     spec_key = (cfg.name, cfg.conv, agg, tuple(cfg.hidden_dims),
                 cfg.num_layers, int(in_dim), int(num_classes), backend,
                 use_fused, req_order, _mesh_key(mesh), num_shards, strategy,
                 axis, interpret, machine.name if machine else None, reorder,
-                overlap)
+                overlap, dtype)
 
     def builder():
         # -- locality reorder decision (F4 / §5.1-1), before anything that
@@ -1094,12 +1198,31 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
             ov = choose_overlap(pg_nodes, lens,
                                 machine or machine_for_backend(XLA),
                                 strategy=strategy)
+
+        # -- execution precision (a planned decision like ordering): "auto"
+        #    is priced HERE, once the layer dims and shard count are known,
+        #    so describe()/instrument()/the cache state the precision that
+        #    will actually dispatch
+        dt = dtype
+        if dt == "auto":
+            from repro.profile.machine import choose_dtype, \
+                machine_for_backend
+            dec_machine = machine or machine_for_backend(layers[0].backend)
+            shards = 1
+            if partition is not None:
+                shards = getattr(partition, "num_shards", None) or \
+                    getattr(partition, "nodes", partition).num_shards
+            # price the widest layer: the one whose bytes dominate
+            widest = max(layers, key=lambda lp: lp.din * lp.dout)
+            dt = choose_dtype(g_exec.num_vertices, g_exec.num_edges,
+                              widest.din, widest.dout, machine=dec_machine,
+                              num_shards=int(shards))
         return GraphExecutionPlan(
             g_exec, layers, interpret=_plan_interpret(interpret,
                                                       layers[0].backend),
             mesh=mesh, partition=partition, strategy=strategy, axis=axis,
             axes=axes, machine=machine, reorder=decision, perm=perm,
-            overlap=ov)
+            overlap=ov, dtype=dt)
 
     return _cached_plan(g, spec_key, builder)
 

@@ -39,7 +39,10 @@ from repro.core.backend import resolve_interpret
 
 
 def _fused_kernel(seg_ref, mask_ref, rows_ref, w_ref, out_ref, acc_ref, *,
-                  tile_m: int, tile_e: int):
+                  tile_m: int, tile_e: int, acc_dtype=jnp.float32):
+    """``acc_dtype`` is the VMEM accumulator precision for BOTH MXU passes
+    (segmented reduce and the fused GEMM) -- f32 even for bf16 rows/W (the
+    reduced-precision plan contract); one rounding at the output flush."""
     ei = pl.program_id(1)
     n_e = pl.num_programs(1)
 
@@ -53,30 +56,33 @@ def _fused_kernel(seg_ref, mask_ref, rows_ref, w_ref, out_ref, acc_ref, *,
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_m, tile_e), 0)
     onehot = jnp.where(row_ids == seg[None, :], mask[None, :], 0.0)
     acc_ref[...] += jax.lax.dot(
-        onehot.astype(jnp.float32), rows.astype(jnp.float32),
-        preferred_element_type=jnp.float32)
+        onehot.astype(acc_dtype), rows.astype(acc_dtype),
+        preferred_element_type=acc_dtype)
 
     @pl.when(ei == n_e - 1)
     def _combine():
         # Phase fusion point: aggregate tile -> GEMM without leaving VMEM.
         out_ref[0] = jax.lax.dot(
-            acc_ref[...], w_ref[...].astype(jnp.float32),
-            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+            acc_ref[...], w_ref[...].astype(acc_dtype),
+            preferred_element_type=acc_dtype).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("tile_m", "tile_e", "interpret"))
+                   static_argnames=("tile_m", "tile_e", "interpret",
+                                    "acc_dtype"))
 def fused_agg_combine_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
                               mask: jnp.ndarray, w: jnp.ndarray, *,
                               tile_m: int, tile_e: int = 512,
-                              interpret: Optional[bool] = None
-                              ) -> jnp.ndarray:
+                              interpret: Optional[bool] = None,
+                              acc_dtype=jnp.float32) -> jnp.ndarray:
     """out[block b] = (sum_seg rows[b]) @ w, fused in VMEM.
 
     rows: (nblocks, emax, F_in) destination-block-grouped gathered rows.
     seg_local/mask: (nblocks, emax).
     w: (F_in, F_out).
     interpret: None = auto-detect (core.backend.default_interpret).
+    acc_dtype: static VMEM accumulator dtype; stays f32 for reduced (bf16)
+    rows/W -- storage is reduced, the accumulate is not.
     Returns (nblocks * tile_m, F_out) in w.dtype.
     """
     interpret = resolve_interpret(interpret)
@@ -87,7 +93,8 @@ def fused_agg_combine_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
     grid = (nblocks, emax // tile_e)
 
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, tile_m=tile_m, tile_e=tile_e),
+        functools.partial(_fused_kernel, tile_m=tile_m, tile_e=tile_e,
+                          acc_dtype=acc_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, tile_e), lambda b, e: (b, e)),
@@ -97,7 +104,7 @@ def fused_agg_combine_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, tile_m, f_out), lambda b, e: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nblocks, tile_m, f_out), w.dtype),
-        scratch_shapes=[pltpu.VMEM((tile_m, f_in), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((tile_m, f_in), acc_dtype)],
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

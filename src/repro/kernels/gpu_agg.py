@@ -55,8 +55,12 @@ from repro.core.backend import PALLAS_GPU, resolve_interpret
 
 
 def _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m: int, tile_e: int,
-                  f: int) -> jnp.ndarray:
-    """Register-resident reduction of one destination block's edge chunks."""
+                  f: int, acc_dtype=jnp.float32) -> jnp.ndarray:
+    """Register-resident reduction of one destination block's edge chunks.
+
+    ``acc_dtype`` is the register accumulator precision -- f32 even for
+    bf16 ``rows`` (the reduced-precision plan contract: reduced storage,
+    full-precision accumulate)."""
     emax = seg_ref.shape[-1]
     nchunks = emax // tile_e
 
@@ -68,34 +72,38 @@ def _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m: int, tile_e: int,
         row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_m, tile_e), 0)
         onehot = jnp.where(row_ids == seg[None, :], msk[None, :], 0.0)
         return acc + jax.lax.dot(
-            onehot.astype(jnp.float32), rows.astype(jnp.float32),
-            preferred_element_type=jnp.float32)
+            onehot.astype(acc_dtype), rows.astype(acc_dtype),
+            preferred_element_type=acc_dtype)
 
-    acc0 = jnp.zeros((tile_m, f), jnp.float32)
+    acc0 = jnp.zeros((tile_m, f), acc_dtype)
     return jax.lax.fori_loop(0, nchunks, body, acc0)
 
 
 def _seg_agg_gpu_kernel(seg_ref, mask_ref, rows_ref, out_ref, *,
-                        tile_m: int, tile_e: int):
+                        tile_m: int, tile_e: int, acc_dtype=jnp.float32):
     f = rows_ref.shape[-1]
-    acc = _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m, tile_e, f)
+    acc = _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m, tile_e, f,
+                        acc_dtype)
     out_ref[0] = acc.astype(out_ref.dtype)
 
 
 def _fused_gpu_kernel(seg_ref, mask_ref, rows_ref, w_ref, out_ref, *,
-                      tile_m: int, tile_e: int):
+                      tile_m: int, tile_e: int, acc_dtype=jnp.float32):
     f = rows_ref.shape[-1]
-    acc = _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m, tile_e, f)
+    acc = _chunk_reduce(seg_ref, mask_ref, rows_ref, tile_m, tile_e, f,
+                        acc_dtype)
     # F5 fusion point: the aggregate never leaves the SM before the GEMM.
     out_ref[0] = jax.lax.dot(
-        acc, w_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+        acc, w_ref[...].astype(acc_dtype),
+        preferred_element_type=acc_dtype).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret",
+                                             "acc_dtype"))
 def seg_agg_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
                         mask: jnp.ndarray, *, tile_m: int, tile_e: int = 128,
-                        interpret: Optional[bool] = None) -> jnp.ndarray:
+                        interpret: Optional[bool] = None,
+                        acc_dtype=jnp.float32) -> jnp.ndarray:
     """Row-blocked segmented sum, one thread block per destination block.
 
     Args:
@@ -109,6 +117,8 @@ def seg_agg_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
                  slab shares the SM with ``A100.target_ctas`` peers).
       interpret: None = auto (compiled on GPU, interpreted elsewhere --
                  ``core.backend.interpret_for("pallas-gpu")``).
+      acc_dtype: register accumulator dtype (static); stays f32 for bf16
+                 ``rows`` (reduced storage, full-precision accumulate).
 
     Returns (nblocks * tile_m, F).
     """
@@ -117,7 +127,8 @@ def seg_agg_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
     assert emax % tile_e == 0, (emax, tile_e)
 
     out = pl.pallas_call(
-        functools.partial(_seg_agg_gpu_kernel, tile_m=tile_m, tile_e=tile_e),
+        functools.partial(_seg_agg_gpu_kernel, tile_m=tile_m, tile_e=tile_e,
+                          acc_dtype=acc_dtype),
         grid=(nblocks,),
         in_specs=[
             pl.BlockSpec((1, emax), lambda b: (b, 0)),       # seg ids
@@ -132,17 +143,19 @@ def seg_agg_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
     return out.reshape(nblocks * tile_m, f)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret",
+                                             "acc_dtype"))
 def fused_agg_combine_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
                                   mask: jnp.ndarray, w: jnp.ndarray, *,
                                   tile_m: int, tile_e: int = 128,
-                                  interpret: Optional[bool] = None
-                                  ) -> jnp.ndarray:
+                                  interpret: Optional[bool] = None,
+                                  acc_dtype=jnp.float32) -> jnp.ndarray:
     """out[block b] = (sum_seg rows[b]) @ w, fused inside one thread block.
 
     Same contract as the TPU tier's ``fused_agg_combine_blocked`` but with
     the register accumulator + in-kernel edge loop described in the module
-    docstring.  Returns (nblocks * tile_m, F_out) in w.dtype.
+    docstring.  ``acc_dtype`` keeps the register accumulator f32 even for
+    bf16 rows/W.  Returns (nblocks * tile_m, F_out) in w.dtype.
     """
     interpret = resolve_interpret(interpret, backend=PALLAS_GPU)
     nblocks, emax, f_in = rows.shape
@@ -151,7 +164,8 @@ def fused_agg_combine_gpu_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
     assert emax % tile_e == 0, (emax, tile_e)
 
     out = pl.pallas_call(
-        functools.partial(_fused_gpu_kernel, tile_m=tile_m, tile_e=tile_e),
+        functools.partial(_fused_gpu_kernel, tile_m=tile_m, tile_e=tile_e,
+                          acc_dtype=acc_dtype),
         grid=(nblocks,),
         in_specs=[
             pl.BlockSpec((1, emax), lambda b: (b, 0)),

@@ -169,10 +169,16 @@ def fused_agg_combine(src, dst_local, mask, x, w, *, tile_m: int,
             tile_e = 128
         else:
             # VMEM budget: rows chunk + W + acc within half VMEM
-            # (the TPU tier's Machine tile budget).
+            # (the TPU tier's Machine tile budget).  The streamed rows slab
+            # and W are sized at the INPUT element width (2 for bf16 plan
+            # operands -- wider edge chunks fit), the accumulator stays 4
+            # bytes (acc_dtype=f32 regardless of storage dtype).
+            elt = jnp.dtype(x.dtype).itemsize
             budget = machine_for_backend(backend).tile_budget()
-            fixed = (f_in * f_out + tile_m * f_in + tile_m * f_out) * 4
-            tile_e = max(256, min(2048, (budget - fixed) // max(f_in * 4, 1)))
+            fixed = (f_in * f_out * elt
+                     + (tile_m * f_in + tile_m * f_out) * 4)
+            tile_e = max(256, min(2048,
+                                  (budget - fixed) // max(f_in * elt, 1)))
             tile_e = max(256, (tile_e // 256) * 256)
     emax_p = _round_up(emax, tile_e)
     if emax_p != emax:

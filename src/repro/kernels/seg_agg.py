@@ -40,8 +40,13 @@ from repro.core.backend import resolve_interpret
 
 
 def _seg_agg_kernel(seg_ref, mask_ref, rows_ref, out_ref, acc_ref, *,
-                    tile_m: int, tile_e: int):
-    """Grid: (dest_blocks, edge_chunks). Edge chunks accumulate into acc."""
+                    tile_m: int, tile_e: int, acc_dtype=jnp.float32):
+    """Grid: (dest_blocks, edge_chunks). Edge chunks accumulate into acc.
+
+    ``acc_dtype`` is the VMEM accumulator precision -- f32 regardless of
+    the input rows' dtype (the reduced-precision plan contract: bf16 rows
+    on the wire/HBM, full-precision accumulate, one rounding at flush).
+    """
     ei = pl.program_id(1)
     n_e = pl.num_programs(1)
 
@@ -56,18 +61,20 @@ def _seg_agg_kernel(seg_ref, mask_ref, rows_ref, out_ref, acc_ref, *,
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (tile_m, tile_e), 0)
     onehot = jnp.where(row_ids == seg[None, :], mask[None, :], 0.0)
     acc_ref[...] += jax.lax.dot(
-        onehot.astype(jnp.float32), rows.astype(jnp.float32),
-        preferred_element_type=jnp.float32)
+        onehot.astype(acc_dtype), rows.astype(acc_dtype),
+        preferred_element_type=acc_dtype)
 
     @pl.when(ei == n_e - 1)
     def _flush():
         out_ref[0] = acc_ref[...].astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_e", "interpret",
+                                             "acc_dtype"))
 def seg_agg_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
                     mask: jnp.ndarray, *, tile_m: int, tile_e: int = 512,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
+                    interpret: Optional[bool] = None,
+                    acc_dtype=jnp.float32) -> jnp.ndarray:
     """Blocked segmented sum.
 
     Args:
@@ -79,8 +86,12 @@ def seg_agg_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
       tile_e:    edge chunk per grid step (static; emax must be a multiple).
       interpret: None = auto (compiled on TPU, interpreted elsewhere --
                  core.backend.default_interpret).
+      acc_dtype: VMEM accumulator dtype (static).  Stays f32 even when
+                 ``rows`` is bf16 (the plan's reduced-precision contract:
+                 reduced storage, full-precision accumulate); the output is
+                 rounded once at flush to ``rows.dtype``.
 
-    Returns (nblocks * tile_m, F).
+    Returns (nblocks * tile_m, F) in ``rows.dtype``.
     """
     interpret = resolve_interpret(interpret)
     nblocks, emax, f = rows.shape
@@ -89,7 +100,8 @@ def seg_agg_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
     grid = (nblocks, n_e)
 
     out = pl.pallas_call(
-        functools.partial(_seg_agg_kernel, tile_m=tile_m, tile_e=tile_e),
+        functools.partial(_seg_agg_kernel, tile_m=tile_m, tile_e=tile_e,
+                          acc_dtype=acc_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, tile_e), lambda b, e: (b, e)),       # seg ids
@@ -98,7 +110,7 @@ def seg_agg_blocked(rows: jnp.ndarray, seg_local: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, tile_m, f), lambda b, e: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((nblocks, tile_m, f), rows.dtype),
-        scratch_shapes=[pltpu.VMEM((tile_m, f), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((tile_m, f), acc_dtype)],
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

@@ -58,6 +58,15 @@ class PhaseRecord:
     combine-first, din under aggregate-first).  ``bound`` classifies the
     phase's arithmetic intensity against the report's Machine balance.
 
+    ``dtype`` is the storage precision this phase's reduced operand used
+    (the plan's ``dtype=`` decision as dispatched: ``"int8-agg"`` plans
+    record their combine phases as ``"f32"`` because only the aggregation
+    operand is quantized).  ``quant_error`` is the max-abs difference
+    between the phase's full-precision operand and its reduced form,
+    observed at probe time -- exactly 0.0 on f32 plans (the bitwise-golden
+    contract), necessarily nonzero somewhere on any reduced-precision run
+    (``validate()`` enforces both directions).
+
     Distributed records additionally split the modeled collective wall
     time by the plan's halo SCHEDULE (``overlap=``):
     ``exposed_collective_time`` is the seconds of wire time the schedule
@@ -82,6 +91,8 @@ class PhaseRecord:
     bound: str              # "memory" | "compute" vs the report's Machine
     exposed_collective_time: float = 0.0     # modeled s, on critical path
     overlapped_collective_time: float = 0.0  # modeled s, hidden under hops
+    dtype: str = "f32"      # storage precision of the dispatched operand
+    quant_error: float = 0.0  # max|full - reduced| observed at probe time
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -98,6 +109,7 @@ class PhaseRecord:
             "exposed_collective_time": self.exposed_collective_time,
             "overlapped_collective_time": self.overlapped_collective_time,
             "wall_time_s": self.wall_time_s, "bound": self.bound,
+            "dtype": self.dtype, "quant_error": self.quant_error,
         }
 
 
@@ -131,6 +143,11 @@ class _Probe:
         dt = time.perf_counter() - t0
         flops, byt, coll, flen, exp_s, ovl_s = self._cost(name, lp, meta)
         ai = flops / max(1.0, byt)
+        # the phase's storage precision as the plan dispatched it: int8-agg
+        # quantizes ONLY the aggregation operand, so its combine records
+        # stay f32 (mismatches() checks describe() against this rule)
+        pd = getattr(self.plan, "dtype", "f32")
+        rec_dtype = "f32" if (pd == "int8-agg" and name == "combine") else pd
         # backend as the dispatch layer resolves it at call time (the same
         # resolution phases.aggregate applies) -- NOT lp.backend verbatim,
         # so a plan that regressed to storing an unresolved alias ("auto" /
@@ -144,7 +161,9 @@ class _Probe:
             collective_bytes=float(coll), wall_time_s=float(dt),
             bound=self.machine.classify(ai),
             exposed_collective_time=float(exp_s),
-            overlapped_collective_time=float(ovl_s)))
+            overlapped_collective_time=float(ovl_s),
+            dtype=rec_dtype,
+            quant_error=float(meta.get("quant_error", 0.0))))
         return out
 
     # -- analytic per-phase costs (same models the scheduler prices) --------
@@ -188,13 +207,20 @@ class _Probe:
 
     def _halo_bytes(self, feature_len: int) -> float:
         from repro.core.distributed import halo_bytes, halo_bytes_2d
+        from repro.profile.machine import DTYPE_BYTES
         if self.plan.partition_kind == "2d":
-            return float(halo_bytes_2d(self.plan.partition,
+            base = float(halo_bytes_2d(self.plan.partition,
                                        feature_len)["min_halo_bytes"])
-        if self.plan.partition_kind == "1d":
-            return float(halo_bytes(self.plan.partition,
+        elif self.plan.partition_kind == "1d":
+            base = float(halo_bytes(self.plan.partition,
                                     feature_len)["min_halo_bytes"])
-        return 0.0
+        else:
+            return 0.0
+        # the halo model counts f32 elements; a reduced-precision plan
+        # exchanges the wire slab at its storage width, so the collective
+        # bytes scale by the dtype's element size (bf16 = exactly half f32)
+        pd = getattr(self.plan, "dtype", "f32")
+        return base * DTYPE_BYTES.get(pd, 4) / 4.0
 
     def _overlap_times(self, feature_len: int, overlap: str):
         """(exposed_s, overlapped_s) collective wall-time split for one
@@ -232,6 +258,7 @@ _FIELD_TYPES = {
     "exposed_collective_time": (int, float),
     "overlapped_collective_time": (int, float),
     "wall_time_s": (int, float), "bound": str,
+    "dtype": str, "quant_error": (int, float),
 }
 
 
@@ -262,16 +289,34 @@ def validate_report_dict(d: Dict[str, Any]) -> List[str]:
                             f"{rec.get('phase')!r}")
         if rec.get("bound") not in ("memory", "compute"):
             problems.append(f"phases[{i}]: bad bound {rec.get('bound')!r}")
+        if rec.get("dtype") not in ("f32", "bf16", "int8-agg"):
+            problems.append(f"phases[{i}]: bad dtype {rec.get('dtype')!r}")
         for k in ("flops", "bytes", "collective_bytes", "wall_time_s",
-                  "exposed_collective_time", "overlapped_collective_time"):
+                  "exposed_collective_time", "overlapped_collective_time",
+                  "quant_error"):
             if isinstance(rec.get(k), (int, float)) and rec[k] < 0:
                 problems.append(f"phases[{i}].{k}: negative")
+        if rec.get("dtype") == "f32" and \
+                isinstance(rec.get("quant_error"), (int, float)) and \
+                rec["quant_error"] != 0:
+            problems.append(
+                f"phases[{i}].quant_error: nonzero on an f32 record "
+                "(the bitwise-golden contract forbids rounding)")
         if rec.get("phase") != "distributed":
             for k in ("exposed_collective_time",
                       "overlapped_collective_time"):
                 if isinstance(rec.get(k), (int, float)) and rec[k] != 0:
                     problems.append(
                         f"phases[{i}].{k}: nonzero on non-distributed phase")
+    reduced = [rec for rec in phases_list
+               if rec.get("dtype") in ("bf16", "int8-agg")]
+    if reduced and not any(
+            isinstance(rec.get("quant_error"), (int, float))
+            and rec["quant_error"] > 0 for rec in reduced):
+        problems.append(
+            "reduced-dtype report with quant_error == 0 everywhere "
+            "(rounding must be observed somewhere, or the reduced path "
+            "silently did not run)")
     tot = d.get("totals", {})
     for k in ("flops", "bytes", "collective_bytes"):
         if k not in tot:
@@ -513,7 +558,10 @@ class WorkloadReport:
         storing an unresolved "auto"/"pallas" alias disagrees with what
         dispatch resolves), whether the planned ``reorder`` permute
         actually ran at ingress (observed only by ``run_model`` -- the
-        entry that owns ingress/egress), the halo ``overlap`` schedule the
+        entry that owns ingress/egress), the storage ``dtype`` each phase
+        record carries (must equal describe()'s planned dtype, except
+        combine under ``"int8-agg"`` which stays ``"f32"`` -- only the
+        aggregation operand is quantized), the halo ``overlap`` schedule the
         distributed dispatch actually priced (a record with overlapped
         collective time on a plan describing ``overlap="none"`` -- or the
         reverse -- is describe-vs-dispatch drift), and the ``compiled``
@@ -546,6 +594,15 @@ class WorkloadReport:
             if bool(d["fused"]) != fused_ran:
                 out.append(f"layer {d['layer']}: describe fused={d['fused']} "
                            f"but executed phases {seq}")
+            if "dtype" in d:
+                for r in recs:
+                    want = "f32" if (d["dtype"] == "int8-agg"
+                                     and r.phase == "combine") else d["dtype"]
+                    if r.dtype != want:
+                        out.append(
+                            f"layer {d['layer']}: describe dtype="
+                            f"{d['dtype']} but {r.phase} record carries "
+                            f"{r.dtype}")
             agg = [r for r in recs
                    if r.phase in ("aggregate", "fused_agg_combine",
                                   "distributed")]

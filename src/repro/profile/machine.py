@@ -32,6 +32,13 @@ overlap model's per-hop wire term.
 ``machine_for_backend`` maps a resolved backend tier (``core.backend``) to
 its natural preset so plan-level code can stay machine-implicit until a
 caller overrides it.
+
+``choose_dtype``/``dtype_model`` price the execution dtype the same way
+``choose_overlap``/``overlap_model`` price halo pipelining: per-phase byte
+and FLOP terms against THIS machine's HBM bandwidth, matmul peak at the
+candidate precision (``native_bf16`` gates whether bf16 doubles or halves
+the matmul rate), and -- when a partition is in play -- ``hop_time`` on the
+reduced halo payload.  The resolved value feeds ``build_plan(dtype="auto")``.
 """
 
 from __future__ import annotations
@@ -68,6 +75,11 @@ class Machine:
         32 warp threads on GPU).
       matrix_tile: systolic/tensor tile edge for pad-waste accounting
         (128 MXU lanes on TPU).
+      native_bf16: whether the matmul units run bf16 at ``peak_flops``
+        (MXU / tensor cores: v5e, v5p, A100, H100).  False on the paper's
+        V100, whose ``peak_flops`` is the fp32 CUDA-core rate -- there
+        bf16 matmuls emulate through fp32 and gain nothing, which is what
+        lets ``choose_dtype`` flip between presets on the same workload.
     """
 
     name: str
@@ -82,6 +94,7 @@ class Machine:
     target_ctas: int = 0
     row_align: int = 8
     matrix_tile: int = 128
+    native_bf16: bool = True
 
     def __post_init__(self):
         assert self.kind in ("tpu", "gpu"), self.kind
@@ -116,6 +129,20 @@ class Machine:
     def classify(self, arithmetic_intensity: float) -> str:
         """"memory" | "compute" bound classification against this balance."""
         return "memory" if arithmetic_intensity < self.balance else "compute"
+
+    def matmul_peak(self, dtype: str = "f32") -> float:
+        """Effective matmul FLOP/s at ``dtype`` on this machine.
+
+        ``peak_flops`` is quoted at the native precision: bf16 for
+        MXU/tensor-core parts (``native_bf16=True``), fp32 for the paper's
+        V100.  bf16 on a non-native part emulates through the fp32 units
+        (no gain); f32 on a native-bf16 part runs the matrix units at half
+        rate.  ``int8-agg`` keeps combination in f32, so it prices as f32.
+        """
+        if dtype == "bf16":
+            return self.peak_flops if self.native_bf16 \
+                else self.peak_flops / 2
+        return self.peak_flops / 2 if self.native_bf16 else self.peak_flops
 
 
 #: TPU v5e, per chip (the repo's default modeling target since PR 1).
@@ -173,7 +200,8 @@ V100 = Machine(
     link_latency_s=2e-6,
     on_chip_bytes=128 * 1024,                       # unified SMEM/L1 per SM
     regfile_bytes=256 * 1024, target_ctas=4,
-    row_align=32, matrix_tile=16)
+    row_align=32, matrix_tile=16,
+    native_bf16=False)                              # fp32 CUDA-core peak
 
 MACHINES: Dict[str, Machine] = {m.name: m
                                 for m in (TPU_V5E, TPU_V5P, A100, H100, V100)}
@@ -199,3 +227,103 @@ def machine_for_backend(backend: Optional[str]) -> Machine:
     ``V100`` explicitly.
     """
     return A100 if backend == "pallas-gpu" else TPU_V5E
+
+
+# --------------------------------------------------------------------------
+# Execution dtype as a priced decision (build_plan(dtype="auto"))
+# --------------------------------------------------------------------------
+
+#: storage bytes per element at each plan dtype.  ``int8-agg`` is the wire
+#: and gather width of the AGGREGATION operand only -- combination stays
+#: f32, which is why it never wins the auto decision and stays opt-in.
+DTYPE_BYTES: Dict[str, int] = {"f32": 4, "bf16": 2, "int8-agg": 1}
+
+#: minimum modeled fractional saving before ``choose_dtype`` leaves f32.
+#: Mirrors ``core.distributed.OVERLAP_SAVING_THRESHOLD``: a sub-5% modeled
+#: win is inside the model's noise and not worth the precision loss.
+DTYPE_SAVING_THRESHOLD = 0.05
+
+
+def dtype_model(num_vertices: int, num_edges: int, feature_len: int,
+                out_len: Optional[int] = None, *,
+                machine: Machine = None, num_shards: int = 1,
+                dtypes=("f32", "bf16")) -> Dict[str, Dict[str, float]]:
+    """Model per-layer time at each candidate execution dtype.
+
+    Per dtype ``dt`` with element width ``B = DTYPE_BYTES[dt]`` (the
+    aggregation operand width; combination activations use ``B`` except
+    under ``int8-agg`` where combine stays f32):
+
+    * aggregation (memory-bound, paper Table 3): gather ``E`` neighbor rows
+      + read/write ``V`` rows at ``feature_len * B`` bytes each, plus the
+      dtype-independent 8-byte edge indices -- all over ``hbm_bw``;
+    * combination: ``2 * V * feature_len * out_len`` FLOPs at
+      ``matmul_peak(dt)`` vs. its HBM traffic, whichever dominates;
+    * halo (only when ``num_shards > 1``): ``num_shards - 1`` ring hops of
+      one resident block (``ceil(V / num_shards)`` rows) at the reduced
+      payload width, each priced by ``hop_time`` -- the wire is where
+      bf16's exact 2x byte cut pays most;
+    * ``tile_rows``: rows of width ``feature_len`` one ``tile_budget()``
+      holds at this dtype -- the "reduced precision doubles the effective
+      tile budget" term surfaced for ``bench_dtype``.
+
+    Returns ``{dtype: {"agg_s", "combine_s", "halo_s", "total_s",
+    "tile_rows"}}``.
+    """
+    machine = TPU_V5E if machine is None else get_machine(machine)
+    out_len = feature_len if out_len is None else out_len
+    v, e, f = float(num_vertices), float(num_edges), float(feature_len)
+    out = {}
+    for dt in dtypes:
+        b = float(DTYPE_BYTES[dt])
+        comb_b = 4.0 if dt == "int8-agg" else b
+        agg_bytes = (e + 2.0 * v) * f * b + e * 8.0
+        agg_s = agg_bytes / machine.hbm_bw
+        flops = 2.0 * v * f * out_len
+        comb_bytes = v * (f + out_len) * comb_b + f * out_len * comb_b
+        comb_s = max(flops / machine.matmul_peak(dt),
+                     comb_bytes / machine.hbm_bw)
+        halo_s = 0.0
+        if num_shards > 1:
+            block = -(-num_vertices // num_shards)  # ceil
+            halo_s = (num_shards - 1) * machine.hop_time(block * f * b)
+        out[dt] = {
+            "agg_s": agg_s, "combine_s": comb_s, "halo_s": halo_s,
+            "total_s": agg_s + comb_s + halo_s,
+            "tile_rows": float(machine.tile_budget() //
+                               max(1, int(f * b))),
+        }
+    return out
+
+
+def choose_dtype(num_vertices: int, num_edges: int, feature_len: int,
+                 out_len: Optional[int] = None, *,
+                 machine: Machine = None, num_shards: int = 1) -> str:
+    """Resolve ``build_plan(dtype="auto")`` to ``"f32"`` or ``"bf16"``.
+
+    Prices one layer via ``dtype_model`` -- HBM aggregation traffic,
+    matmul peak at each precision (``Machine.native_bf16``), and, when
+    sharded, ``Machine.hop_time`` on the halved halo payload -- and picks
+    bf16 only when its modeled total beats f32 by at least
+    ``DTYPE_SAVING_THRESHOLD``.  ``int8-agg`` is never auto-chosen: its
+    quantization error is a semantic decision the caller must opt into.
+
+    The decision provably flips across presets on one workload: a 256-node
+    / ~1k-edge graph at 128->128 features is bf16 on ``TPU_V5E``/``A100``
+    (native bf16 matmul, halved HBM bytes) but f32 on the paper's ``V100``
+    (fp32 CUDA-core peak: bf16 would halve the matmul rate and the layer
+    is combination-limited there).
+
+    >>> choose_dtype(256, 1024, 128, machine=V100)
+    'f32'
+    >>> choose_dtype(256, 1024, 128, machine=TPU_V5E)
+    'bf16'
+    """
+    model = dtype_model(num_vertices, num_edges, feature_len, out_len,
+                        machine=machine, num_shards=num_shards,
+                        dtypes=("f32", "bf16"))
+    f32_s, bf16_s = model["f32"]["total_s"], model["bf16"]["total_s"]
+    if f32_s <= 0:
+        return "f32"
+    return "bf16" if (f32_s - bf16_s) / f32_s >= DTYPE_SAVING_THRESHOLD \
+        else "f32"

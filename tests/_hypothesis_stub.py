@@ -4,9 +4,15 @@ The container image has no ``hypothesis`` wheel and nothing may be pip
 installed, so ``conftest.py`` registers this module under
 ``sys.modules["hypothesis"]`` when the real package is missing.  It covers
 exactly what the tests import -- ``given``, ``settings``,
-``strategies.integers`` -- by running each property against a deterministic
-sample of draws (endpoints first, then seeded-random interior points).
+``strategies.integers`` / ``floats`` / ``sampled_from`` / ``composite`` --
+by running each property against a deterministic sample of draws
+(endpoints / every element first, then seeded-random interior points).
 Installing real hypothesis transparently takes precedence.
+
+The stub's own behavioral contract (endpoint-first coverage, full-cycle
+sampled_from, deterministic replay, composite draw indexing) is unit
+tested in tests/test_hypothesis_stub.py -- the property suites lean on
+those guarantees for their coverage claims.
 """
 
 from __future__ import annotations
@@ -29,10 +35,86 @@ class _IntStrategy:
         return (fixed + rand)[:n]
 
 
+class _FloatStrategy:
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def draws(self, rng: np.random.Generator, n: int):
+        fixed = [self.lo, self.hi] if self.hi > self.lo else [self.lo]
+        rand = [float(rng.uniform(self.lo, self.hi))
+                for _ in range(max(0, n - len(fixed)))]
+        return (fixed + rand)[:n]
+
+
+class _SampledStrategy:
+    def __init__(self, elements):
+        self.elements = list(elements)
+        assert self.elements, "sampled_from of an empty collection"
+
+    def draws(self, rng: np.random.Generator, n: int):
+        # every element appears before any repeats: n >= len(elements)
+        # guarantees the property saw the whole vocabulary
+        els = self.elements
+        rand = [els[int(rng.integers(0, len(els)))]
+                for _ in range(max(0, n - len(els)))]
+        return (els + rand)[:n]
+
+
+class _DrawFn:
+    """The ``draw`` callable a @composite builder receives for example i.
+
+    ``draw(strategy)`` indexes the strategy's deterministic draw column at
+    this example's position -- so example 0 sees every inner strategy's
+    first (endpoint) value, example 1 the second, and later examples the
+    seeded-random interior.  Repeated draws of the same strategy within
+    one example advance through the column (offset by call count) so they
+    are not forced equal.
+    """
+
+    def __init__(self, rng: np.random.Generator, idx: int):
+        self.rng, self.idx = rng, idx
+        self.calls = 0
+
+    def __call__(self, strategy):
+        i = self.idx + self.calls
+        self.calls += 1
+        return strategy.draws(self.rng, i + 1)[i]
+
+
+class _CompositeStrategy:
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def draws(self, rng: np.random.Generator, n: int):
+        return [self.fn(_DrawFn(rng, i), *self.args, **self.kwargs)
+                for i in range(n)]
+
+
 class strategies:  # noqa: N801 - mimics the hypothesis module name
     @staticmethod
     def integers(min_value: int, max_value: int) -> _IntStrategy:
         return _IntStrategy(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float,
+               **_ignored) -> _FloatStrategy:
+        # allow_nan / allow_infinity / width are accepted and ignored:
+        # the stub only ever draws finite values inside [lo, hi]
+        return _FloatStrategy(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements) -> _SampledStrategy:
+        return _SampledStrategy(elements)
+
+    @staticmethod
+    def composite(fn):
+        """``@st.composite`` builder: ``fn(draw, *args)`` -> one example.
+        Calling the decorated function returns a strategy whose example i
+        hands the builder a ``draw`` indexed at i (endpoints-first)."""
+        def build(*args, **kwargs):
+            return _CompositeStrategy(fn, args, kwargs)
+        build.__name__ = getattr(fn, "__name__", "composite")
+        return build
 
 
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
@@ -43,7 +125,7 @@ def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
     return deco
 
 
-def given(*strats: _IntStrategy):
+def given(*strats):
     def deco(fn):
         # NOT functools.wraps: pytest must see a zero-arg signature, or it
         # would treat the drawn parameters as fixture requests.

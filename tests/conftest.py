@@ -24,5 +24,18 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def tol():
+    """The suite-wide per-dtype tolerance asserter (tests/tolerance.py).
+
+    Usage: ``tol(actual, desired, dtype="bf16", scale=2)``.  Prefer this
+    (or a direct ``from tolerance import assert_allclose_dtype``) over
+    ad-hoc ``np.testing.assert_allclose`` literals -- the band table is
+    owned in ONE place.
+    """
+    from tolerance import assert_allclose_dtype
+    return assert_allclose_dtype
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")

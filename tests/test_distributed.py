@@ -9,6 +9,7 @@ from pathlib import Path
 import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
+TESTS = str(Path(__file__).resolve().parent)  # tolerance.py for subprocesses
 
 
 def run_sub(body: str):
@@ -17,10 +18,12 @@ def run_sub(body: str):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import warnings; warnings.filterwarnings("ignore")
         import jax, jax.numpy as jnp, numpy as np
+        from tolerance import assert_allclose_dtype
     """) + textwrap.dedent(body)
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                         text=True, env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                                          "HOME": "/root"},
+                         text=True,
+                         env={"PYTHONPATH": f"{SRC}:{TESTS}",
+                              "PATH": "/usr/bin:/bin", "HOME": "/root"},
                          timeout=600)
     assert res.returncode == 0, f"subprocess failed:\n{res.stderr[-3000:]}"
     return res.stdout
@@ -44,8 +47,8 @@ def test_distributed_aggregation_strategies():
         with mesh:
             a1 = aggregate_allgather(pg, xp, mesh)[:g.num_vertices]
             a2 = aggregate_ring(pg, xp, mesh)[:g.num_vertices]
-        assert np.abs(np.asarray(a1 - ref)).max() < 1e-4
-        assert np.abs(np.asarray(a2 - ref)).max() < 1e-4
+        assert_allclose_dtype(a1, ref, scale=10)
+        assert_allclose_dtype(a2, ref, scale=10)
         print("OK")
     """)
     assert "OK" in out
@@ -76,8 +79,8 @@ def test_distributed_phase_ordering_halo_reduction():
                 for strat in ("ring", "allgather"):
                     o = distributed_gcn_layer(pg, xp, w, b, g.in_deg, mesh,
                         order=order, strategy=strat)[:g.num_vertices]
-                    assert np.abs(np.asarray(o - ref)).max() < 1e-3, (
-                        order, strat)
+                    assert_allclose_dtype(o, ref, scale=100,
+                                          err_msg=f"{order}/{strat}")
         hb_in = halo_bytes(pg, 64)["min_halo_bytes"]
         hb_out = halo_bytes(pg, 16)["min_halo_bytes"]
         assert hb_in / hb_out == 4.0   # in_len/out_len = 64/16
@@ -109,7 +112,7 @@ def test_distributed_plan_matches_local():
         with mesh:
             out = dist.run_model(params, x)
         assert out.shape == ref.shape
-        assert np.abs(np.asarray(out - ref)).max() < 1e-3
+        assert_allclose_dtype(out, ref, scale=100)
         # ordering decisions stay cost-model driven in the sharded plan:
         # both layers shrink (32->16->7) => combine-first halo everywhere
         assert [lp.order for lp in dist.layers] == ["combine_first"] * 2
@@ -153,8 +156,8 @@ def test_distributed_2d_plan_matches_local():
                 with mesh:
                     out = plan.run_model(params, x)
                 assert out.shape == ref.shape
-                err = np.abs(np.asarray(out - ref)).max()
-                assert err < 1e-3, (shape, strat, order, err)
+                assert_allclose_dtype(out, ref, scale=100,
+                                      err_msg=f"{shape}/{strat}/{order}")
         # bare-layer entry: padded layout in, padded layout out
         p2 = partition_2d(g, 4, 2)
         mesh = jax.make_mesh((4, 2), ("node", "feat"))
@@ -167,8 +170,7 @@ def test_distributed_2d_plan_matches_local():
         with mesh:
             lo = distributed_gcn_layer_2d(p2, pad_features_2d(x, p2), w, b,
                 g.in_deg, mesh, order="combine_first")
-        assert np.abs(np.asarray(lo[:g.num_vertices, :16] - lref)).max() \
-            < 1e-3
+        assert_allclose_dtype(lo[:g.num_vertices, :16], lref, scale=100)
         # Q-fold halo saving on top of Table 4's in/out ratio
         pg = partition_1d(g, 4, edge_balanced=False)
         assert halo_bytes_2d(p2, 32)["min_halo_bytes"] * 2 == \

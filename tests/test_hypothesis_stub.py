@@ -1,0 +1,120 @@
+"""The hypothesis STUB's own behavioral contract (tests/_hypothesis_stub.py).
+
+The property suites (test_kernels.py, test_phases.py, test_dtype.py) claim
+coverage properties -- "endpoints always exercised", "every sampled element
+seen", "deterministic replay" -- that hold only if the stub delivers them.
+This file tests the stub module DIRECTLY (loaded from its path, bypassing
+conftest's real-hypothesis preference), so the contract is pinned even on
+machines where real hypothesis shadows the stub.
+"""
+
+import importlib.util
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="module")
+def stub():
+    spec = importlib.util.spec_from_file_location(
+        "_hypothesis_stub_under_test",
+        Path(__file__).parent / "_hypothesis_stub.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_integers_endpoints_first(stub):
+    s = stub.strategies.integers(3, 9)
+    d = s.draws(np.random.default_rng(0), 10)
+    assert d[:2] == [3, 9]
+    assert len(d) == 10 and all(3 <= v <= 9 for v in d)
+    # degenerate range collapses to the single point
+    assert stub.strategies.integers(5, 5).draws(
+        np.random.default_rng(0), 3) == [5, 5, 5]
+
+
+def test_floats_endpoints_first_and_bounded(stub):
+    s = stub.strategies.floats(-1.5, 2.5)
+    d = s.draws(np.random.default_rng(0), 12)
+    assert d[:2] == [-1.5, 2.5]
+    assert all(isinstance(v, float) and -1.5 <= v <= 2.5 for v in d)
+    # hypothesis-style kwargs are accepted (and ignored) by the stub
+    stub.strategies.floats(0.0, 1.0, allow_nan=False, allow_infinity=False,
+                           width=32)
+
+
+def test_sampled_from_cycles_whole_vocabulary(stub):
+    els = ["f32", "bf16", "int8-agg"]
+    s = stub.strategies.sampled_from(els)
+    d = s.draws(np.random.default_rng(0), 8)
+    assert d[:3] == els          # every element before any repeat
+    assert all(v in els for v in d)
+    with pytest.raises(AssertionError):
+        stub.strategies.sampled_from([])
+
+
+def test_draws_are_deterministic(stub):
+    for make in (lambda st: st.integers(0, 100),
+                 lambda st: st.floats(0.0, 1.0),
+                 lambda st: st.sampled_from("abcde")):
+        a = make(stub.strategies).draws(np.random.default_rng(0), 20)
+        b = make(stub.strategies).draws(np.random.default_rng(0), 20)
+        assert a == b
+
+
+def test_composite_builder_and_endpoint_indexing(stub):
+    st = stub.strategies
+
+    @st.composite
+    def pair(draw, scale):
+        n = draw(st.integers(1, 4))
+        f = draw(st.floats(0.0, 1.0))
+        return (n * scale, f)
+
+    d = pair(10).draws(np.random.default_rng(0), 6)
+    assert len(d) == 6
+    # example 0 sees each inner strategy's first draw-column entries:
+    # integers(1,4) column starts [1, 4, ...]; the second draw within the
+    # example advances one position in the floats column [0.0, 1.0, ...]
+    assert d[0] == (10, 1.0)
+    assert all(n in (10, 20, 30, 40) and 0.0 <= f <= 1.0 for n, f in d)
+
+
+def test_given_runs_max_examples_with_composite(stub):
+    st = stub.strategies
+
+    @st.composite
+    def vec(draw):
+        n = draw(st.integers(1, 3))
+        return [draw(st.floats(-1.0, 1.0)) for _ in range(n)]
+
+    seen = []
+
+    @stub.given(vec(), st.sampled_from(["a", "b"]))
+    @stub.settings(max_examples=7, deadline=None)
+    def prop(v, tag):
+        assert isinstance(v, list) and 1 <= len(v) <= 3
+        assert tag in ("a", "b")
+        seen.append((tuple(v), tag))
+
+    prop()          # the runner pytest would invoke
+    assert len(seen) == 7
+    assert {t for _, t in seen} == {"a", "b"}   # vocabulary fully cycled
+
+
+def test_given_replay_is_deterministic(stub):
+    st = stub.strategies
+    runs = []
+    for _ in range(2):
+        got = []
+
+        @stub.given(st.integers(0, 50), st.floats(0.0, 5.0))
+        @stub.settings(max_examples=9, deadline=None)
+        def prop(i, f):
+            got.append((i, f))
+
+        prop()
+        runs.append(got)
+    assert runs[0] == runs[1]
