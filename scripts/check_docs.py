@@ -52,7 +52,8 @@ PUBLIC_SURFACE = {
     "repro.core.distributed": [
         "distributed_gcn_layer", "distributed_gcn_layer_2d",
         "pad_features_2d", "halo_bytes", "halo_bytes_2d",
-        "overlap_model", "choose_overlap",
+        "overlap_model", "choose_overlap", "schedule_wire_bytes",
+        "wire_dtype_bytes",
     ],
     "repro.graph.partition": [
         "partition_1d", "partition_2d", "Partition2D", "PartitionedGraph",
@@ -74,6 +75,19 @@ PUBLIC_SURFACE = {
         "BenchSpec", "BenchContext", "run_specs", "timeit", "write_csv",
         "bench_graph",
     ],
+    "repro.analysis.report": [
+        "Finding", "AnalysisReport", "AnalysisReport.add",
+        "AnalysisReport.ok", "AnalysisReport.to_json",
+        "AnalysisReport.to_markdown", "AnalysisReport.counts",
+    ],
+    "repro.analysis.jaxpr_lint": [
+        "lint_plan", "lint_callable", "collective_bytes",
+        "plan_expected_collectives", "check_donation", "iter_eqns",
+    ],
+    "repro.analysis.ast_lint": [
+        "lint_tree", "lint_file", "lint_source",
+    ],
+    "repro.analysis.selftest": ["run_selftest", "check_suppression"],
 }
 
 #: docstring must contain these substrings (entry point -> requirements)
@@ -97,6 +111,12 @@ CONTENT_REQUIREMENTS = {
     ("repro.core.plan", "GraphExecutionPlan.compile"): [
         ">>>", "donate", "retrace", "layer", "dynamic"],
     ("repro.kernels.ops", "seg_agg"): ["seg_agg_planned", "host"],
+    ("repro.analysis.jaxpr_lint", "lint_plan"): [
+        "eager", "compiled", "donate", "dynamic", "never execute"],
+    ("repro.analysis.ast_lint", "lint_source"): ["pragma", "allow"],
+    ("repro.core.distributed", "schedule_wire_bytes"): [
+        "Schedule-exact", "ring", "overlap", "reduce_scatter",
+        "wire_dtype_bytes"],
     ("repro.serve.graph_engine", "GraphServeEngine.warmup"): [
         "compile", "admission", "clear_plan_cache"],
 }
@@ -126,6 +146,13 @@ REQUIRED_FILES = {
         "clear_plan_cache", "plan_cache_stats", "dynamic", "retrace",
         "p50", "p99", "throughput", "bench_serve", "two_hop_batch",
         "bit-identical", "eviction"],
+    ROOT / "docs" / "analysis.md": [
+        "no-callbacks", "no-f64", "bf16-f32-accum", "donation",
+        "collective-bytes", "dynamic-edge-free", "host-in-trace",
+        "tracer-branch", "broadcast-div", "acc-dtype", "grid-arity",
+        "allow(", "allow-file(", "--strict", "--selftest",
+        "wire_collective_bytes", "schedule_wire_bytes",
+        "SEG_AGG_REMEDIATION", "tf.aliasing_output", "planner.md"],
 }
 
 MIN_DOC_LEN = 40  # a one-word docstring is not documentation

@@ -32,8 +32,18 @@
 #      EXACTLY half of f32's on 8 fake devices, or if any dtype cell is
 #      skipped without a logged reason,
 #   3. the docs gate (README + docs/planner.md + docs/characterization.md
-#      + docs/serving.md exist, public planner/profile/serving symbols
-#      documented -- scripts/check_docs.py).
+#      + docs/serving.md + docs/analysis.md exist, public
+#      planner/profile/serving/analysis symbols documented --
+#      scripts/check_docs.py),
+#   4. the static analysis gate (scripts/analyze.py): --strict traces the
+#      full backend x fusion x partition x dtype x overlap plan matrix to
+#      jaxprs + lowered HLO WITHOUT executing and hard-fails on any
+#      error-severity contract violation (host callbacks, f64, bf16
+#      accumulation, missing donation markers, collective byte totals
+#      that disagree with schedule_wire_bytes, edge-content leaking into
+#      dynamic bucket plans, plus the AST rules over src/repro/);
+#      --selftest then seeds one known violation per rule and hard-fails
+#      if ANY rule misses its plant (docs/analysis.md).
 #
 # Usage: scripts/smoke.sh [extra pytest args...]
 set -euo pipefail
@@ -63,5 +73,10 @@ python -m benchmarks.run --dry-run
 
 echo "== docs gate =="
 python scripts/check_docs.py
+
+echo "== static analysis gate (plan matrix -> jaxpr/HLO, no execution;"
+echo "   then the rule self-test: every rule must catch its plant) =="
+python scripts/analyze.py --strict
+python scripts/analyze.py --selftest
 
 echo "smoke: OK"

@@ -1,0 +1,25 @@
+"""Static contract verification for plans, jaxprs, and Pallas kernels.
+
+The paper's guidelines (2001.10160) assume the *measured* execution
+matches the *planned* one.  ``repro.analysis`` proves the planner's
+contracts from the traced program without executing it:
+
+  * :mod:`repro.analysis.jaxpr_lint` -- trace a ``GraphExecutionPlan``
+    (eager forward and ``plan.compile()`` callable) to closed jaxprs and
+    lowered HLO, then verify trace purity, f32 accumulation under bf16,
+    donation, schedule-exact collective byte totals, and edge-content
+    freedom of dynamic bucket plans.
+  * :mod:`repro.analysis.ast_lint` -- a source-level pass over
+    ``src/repro/`` for retrace/bitwise hazards (tracer branching, host
+    materialization in traced scopes, broadcast division, Pallas scratch
+    dtypes not threaded through ``acc_dtype``, grid/BlockSpec arity).
+  * :mod:`repro.analysis.report` -- the typed ``Finding`` /
+    ``AnalysisReport`` core (JSON + markdown, severity levels,
+    per-rule suppression pragmas).
+
+``scripts/analyze.py`` runs both front ends over the full static plan
+matrix and is the third leg of ``scripts/smoke.sh``; rule catalog and
+pragma syntax live in ``docs/analysis.md``.
+"""
+
+from repro.analysis.report import AnalysisReport, Finding  # noqa: F401

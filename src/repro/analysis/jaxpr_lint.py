@@ -1,0 +1,360 @@
+"""Jaxpr/HLO contract linter: prove planner contracts from the trace.
+
+Given a :class:`~repro.core.plan.GraphExecutionPlan`, :func:`lint_plan`
+traces (never executes) the eager forward AND the ``plan.compile()``
+callable to closed jaxprs plus lowered StableHLO, then runs the rule
+registry over them:
+
+  * ``no-callbacks``      -- no host callbacks / device transfers inside
+    traced code (``pure_callback``, ``io_callback``, ``device_put``, ...).
+  * ``no-f64``            -- no float64 avals or constants anywhere.
+  * ``bf16-f32-accum``    -- every dot with a bf16 operand must carry
+    ``preferred_element_type=float32`` (the PR 8 accumulator contract).
+  * ``donation``          -- ``donate=True`` compiles must show the
+    ``tf.aliasing_output`` marker in lowered HLO whenever an output can
+    alias the donated buffer (info finding when none can).
+  * ``collective-bytes``  -- ppermute/all_gather/psum_scatter byte totals
+    extracted from the jaxpr (scan trip counts multiplied through) must
+    equal :func:`repro.core.distributed.schedule_wire_bytes` exactly,
+    dtype-scaled, 1-D and 2-D.
+  * ``dynamic-edge-free`` -- dynamic bucket plans re-proven edge-content
+    free from the jaxpr consts (not trusted from ``_check_dynamic_ok``).
+
+:func:`lint_callable` runs the jaxpr-level rules over any traceable
+function (the self-test plants use it); :func:`collective_bytes` is the
+raw per-primitive byte extraction, and
+:func:`plan_expected_collectives` the analytic side of the equation.
+
+Doctest-shaped usage (any local plan, single device)::
+
+    >>> # report = lint_plan(plan)          # doctest: +SKIP
+    >>> # assert report.ok(strict=True)     # doctest: +SKIP
+
+The collective/donation/dynamic rules are exercised by
+``scripts/analyze.py`` over the full plan matrix on 8 fake devices.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.report import AnalysisReport
+
+#: primitives that move data to/from the host or escape the trace
+HOST_PRIMS = ("pure_callback", "io_callback", "debug_callback", "callback",
+              "infeed", "outfeed", "device_put")
+
+#: jaxpr names of the collectives the halo schedules emit
+#: (``jax.lax.psum_scatter`` lowers to the ``reduce_scatter`` primitive)
+COLLECTIVE_PRIMS = ("ppermute", "all_gather", "reduce_scatter", "psum")
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walking + byte extraction
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(value) -> list:
+    """Sub-jaxprs hiding inside one eqn param value (ClosedJaxpr, bare
+    Jaxpr, or lists/tuples of either -- scan, pjit, shard_map,
+    pallas_call, custom_jvp all stash theirs differently)."""
+    if hasattr(value, "jaxpr") and hasattr(getattr(value, "jaxpr"), "eqns"):
+        return [value.jaxpr]
+    if hasattr(value, "eqns"):
+        return [value]
+    if isinstance(value, (list, tuple)):
+        out = []
+        for v in value:
+            out.extend(_sub_jaxprs(v))
+        return out
+    return []
+
+
+def iter_eqns(jaxpr, mult: int = 1):
+    """Yield ``(eqn, trip_multiplier)`` over a jaxpr and every sub-jaxpr.
+
+    The multiplier is the product of enclosing ``scan`` lengths, so an
+    eqn inside a ``scan(length=7)`` body yields with ``mult*7`` -- the
+    number of times the traced program executes it.
+    """
+    for eqn in jaxpr.eqns:
+        yield eqn, mult
+        m = mult
+        if eqn.primitive.name == "scan":
+            m = mult * int(eqn.params.get("length", 1))
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from iter_eqns(sub, m)
+
+
+def _aval_bytes(var) -> int:
+    aval = getattr(var, "aval", None)
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return int(np.prod(shape)) * np.dtype(dtype).itemsize
+
+
+def collective_bytes(closed) -> Dict[str, int]:
+    """Per-primitive collective byte totals extracted from a closed jaxpr.
+
+    For every ``ppermute`` / ``all_gather`` / ``reduce_scatter`` /
+    ``psum`` eqn, sums the INPUT aval bytes (what the device puts on the
+    wire) times the enclosing scan trip count.  This is the per-device
+    accounting :func:`repro.core.distributed.schedule_wire_bytes`
+    predicts analytically.
+    """
+    out = {name: 0 for name in COLLECTIVE_PRIMS}
+    for eqn, mult in iter_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+        if name in out:
+            out[name] += sum(_aval_bytes(v) for v in eqn.invars) * mult
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rules over a closed jaxpr
+# ---------------------------------------------------------------------------
+
+
+def check_no_callbacks(closed, where: str,
+                       report: AnalysisReport) -> None:
+    """Rule no-callbacks: traced code must stay on device."""
+    hits: Dict[str, int] = {}
+    for eqn, _ in iter_eqns(closed.jaxpr):
+        if eqn.primitive.name in HOST_PRIMS:
+            hits[eqn.primitive.name] = hits.get(eqn.primitive.name, 0) + 1
+    for name, n in sorted(hits.items()):
+        report.add("no-callbacks", "error", where,
+                   f"host primitive {name!r} inside traced code",
+                   f"{n} occurrence(s)")
+
+
+def check_no_f64(closed, where: str, report: AnalysisReport) -> None:
+    """Rule no-f64: no float64 avals or constants anywhere in the trace."""
+    n_avals = 0
+    for eqn, _ in iter_eqns(closed.jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            dt = getattr(getattr(v, "aval", None), "dtype", None)
+            if dt is not None and np.dtype(dt) == np.float64:
+                n_avals += 1
+    n_consts = sum(1 for c in getattr(closed, "consts", [])
+                   if getattr(c, "dtype", None) is not None
+                   and np.dtype(c.dtype) == np.float64)
+    if n_avals or n_consts:
+        report.add("no-f64", "error", where,
+                   "float64 values inside traced code",
+                   f"{n_avals} aval(s), {n_consts} const(s)")
+
+
+def check_bf16_accum(closed, where: str, report: AnalysisReport) -> None:
+    """Rule bf16-f32-accum: any dot consuming bf16 must accumulate f32
+    (``preferred_element_type=float32``) -- the PR 8 contract that keeps
+    reduced-precision storage from becoming reduced-precision math."""
+    import jax.numpy as jnp
+    bad = 0
+    example = ""
+    for eqn, _ in iter_eqns(closed.jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        ins = [getattr(getattr(v, "aval", None), "dtype", None)
+               for v in eqn.invars]
+        if not any(d is not None and d == jnp.bfloat16 for d in ins):
+            continue
+        pref = eqn.params.get("preferred_element_type")
+        if pref is None or np.dtype(pref) != np.float32:
+            bad += 1
+            example = f"operands {ins}, preferred_element_type={pref}"
+    if bad:
+        report.add("bf16-f32-accum", "error", where,
+                   "bf16 dot without f32 preferred_element_type "
+                   "accumulation", f"{bad} dot(s); e.g. {example}")
+
+
+#: the StableHLO argument attribute jax emits for a donated buffer that
+#: aliases an output; absent entirely when no output can take the alias
+DONATION_MARKER = "tf.aliasing_output"
+
+
+def check_donation(lowered_text: str, donate: bool, where: str,
+                   report: AnalysisReport, *,
+                   alias_possible: bool = True) -> None:
+    """Rule donation: a ``donate=True`` compile must show the
+    ``tf.aliasing_output`` marker in lowered HLO.  When no output matches
+    the donated buffer's shape/dtype jax silently drops the donation --
+    that is reported as info (unprovable), not error."""
+    if not donate:
+        return
+    if DONATION_MARKER in lowered_text:
+        return
+    if alias_possible:
+        report.add("donation", "error", where,
+                   "donate=True but lowered HLO shows no donated buffer",
+                   f"marker {DONATION_MARKER!r} absent")
+    else:
+        report.add("donation", "info", where,
+                   "donation declared but no output can alias the donated "
+                   "buffer (shape/dtype mismatch); donation is a no-op")
+
+
+def check_collective_bytes(closed, expected: Dict[str, int], where: str,
+                           report: AnalysisReport) -> None:
+    """Rule collective-bytes: jaxpr-extracted per-primitive byte totals
+    must equal the analytic schedule accounting EXACTLY."""
+    got = collective_bytes(closed)
+    for name in COLLECTIVE_PRIMS:
+        if got[name] != int(expected.get(name, 0)):
+            report.add("collective-bytes", "error", where,
+                       f"{name} bytes diverge from the analytic schedule",
+                       f"extracted {got[name]}, "
+                       f"expected {int(expected.get(name, 0))}")
+
+
+def check_dynamic_consts(closed, graph, where: str,
+                         report: AnalysisReport) -> None:
+    """Rule dynamic-edge-free: a dynamic bucket plan's trace must not
+    close over the template graph's edge content.  Re-proves
+    ``_check_dynamic_ok`` from the jaxpr consts: any const equal to the
+    template ``src``/``dst``/``in_deg`` array means the trace baked the
+    edges and every bucket would replay THIS graph."""
+    templates = {"src": np.asarray(graph.src), "dst": np.asarray(graph.dst),
+                 "in_deg": np.asarray(graph.in_deg)}
+    for c in getattr(closed, "consts", []):
+        arr = np.asarray(c)
+        for name, tpl in templates.items():
+            if arr.shape == tpl.shape and arr.dtype == tpl.dtype \
+                    and np.array_equal(arr, tpl):
+                report.add("dynamic-edge-free", "error", where,
+                           f"trace closes over the template graph's "
+                           f"{name} array",
+                           f"const shape {arr.shape}, dtype {arr.dtype}")
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def lint_callable(fn, *args, where: str = "callable",
+                  expected_collectives: Optional[Dict[str, int]] = None
+                  ) -> AnalysisReport:
+    """Trace ``fn(*args)`` and run every jaxpr-level rule over it.
+
+    The self-test plants route through this so a seeded violation
+    exercises the same detection path as a real plan.  Pass
+    ``expected_collectives`` to also run the collective-bytes rule.
+    """
+    import jax
+    report = AnalysisReport()
+    closed = jax.make_jaxpr(fn)(*args)
+    check_no_callbacks(closed, where, report)
+    check_no_f64(closed, where, report)
+    check_bf16_accum(closed, where, report)
+    if expected_collectives is not None:
+        check_collective_bytes(closed, expected_collectives, where, report)
+    return report
+
+
+def plan_label(plan) -> str:
+    """Stable cell label for findings, e.g.
+    ``plan[backend=xla,fused=False,partition=1d,dtype=bf16,...]``."""
+    lp = plan.layers[0]
+    return (f"plan[backend={lp.backend},fused={lp.fused},"
+            f"partition={plan.partition_kind},strategy={plan.strategy},"
+            f"overlap={plan.overlap},dtype={plan.dtype},"
+            f"reorder={plan.reorder}]")
+
+
+def plan_expected_collectives(plan) -> Dict[str, int]:
+    """Analytic per-primitive byte totals for one full forward of
+    ``plan`` -- :func:`~repro.core.distributed.schedule_wire_bytes`
+    summed over layers (halo width follows each layer's phase order:
+    din under aggregate-first, dout under combine-first)."""
+    from repro.core.distributed import schedule_wire_bytes
+    from repro.core.scheduler import AGGREGATE_FIRST
+    totals = {name: 0 for name in COLLECTIVE_PRIMS}
+    if not plan.distributed:
+        return totals
+    two_d = plan.partition_kind == "2d"
+    for lp in plan.layers:
+        flen = lp.din if lp.order == AGGREGATE_FIRST else lp.dout
+        acc = schedule_wire_bytes(
+            plan.partition, flen, strategy=plan.strategy,
+            overlap=plan.overlap, dtype=plan.dtype,
+            combine_out_len=lp.dout if two_d else None)
+        totals["ppermute"] += acc["ppermute_bytes"]
+        totals["all_gather"] += acc["all_gather_bytes"]
+        totals["reduce_scatter"] += acc["reduce_scatter_bytes"]
+        totals["psum"] += acc["psum_bytes"]
+    return totals
+
+
+def _alias_possible(in_avals: Iterable, out_avals: Iterable) -> bool:
+    """True when some output aval matches a donated input aval -- the
+    precondition for XLA to establish input/output aliasing."""
+    outs = [(tuple(a.shape), np.dtype(a.dtype)) for a in out_avals]
+    return any((tuple(a.shape), np.dtype(a.dtype)) in outs
+               for a in in_avals)
+
+
+def lint_plan(plan, *, params=None, x=None, donate: bool = False,
+              dynamic: bool = False, seed: int = 0) -> AnalysisReport:
+    """Statically verify one ``GraphExecutionPlan`` -- trace, never execute.
+
+    Traces the eager forward (``plan.run_model``) and the compiled
+    callable (``plan.compile(donate=...)._fn.trace(...)``) to closed
+    jaxprs plus lowered StableHLO, then applies the full rule registry:
+    no-callbacks, no-f64, bf16-f32-accum on both traces; donation on the
+    lowered text (``donate=True``); collective-bytes against
+    ``plan_expected_collectives`` (distributed plans); and, with
+    ``dynamic=True``, dynamic-edge-free over the dynamic dispatch trace's
+    consts.
+
+    ``params``/``x`` default to ``plan.init(PRNGKey(seed))`` and a zero
+    feature matrix -- tracing only reads shapes/dtypes, never values.
+
+    >>> # lint_plan(build_plan(g, cfg, fin, nc)).ok()   # doctest: +SKIP
+    """
+    import jax
+    import jax.numpy as jnp
+    report = AnalysisReport()
+    where = plan_label(plan)
+    if params is None:
+        params = plan.init(jax.random.PRNGKey(seed))
+    if x is None:
+        x = jnp.zeros((plan.g.num_vertices, plan.layers[0].din),
+                      jnp.float32)
+
+    eager = jax.make_jaxpr(lambda p, xx: plan.run_model(p, xx))(params, x)
+    cp = plan.compile(donate=donate)
+    traced = cp._fn.trace(params, x)
+    compiled = traced.jaxpr
+
+    expected = plan_expected_collectives(plan)
+    for tag, closed in (("eager", eager), ("compiled", compiled)):
+        w = f"{where}:{tag}"
+        check_no_callbacks(closed, w, report)
+        check_no_f64(closed, w, report)
+        check_bf16_accum(closed, w, report)
+        check_collective_bytes(closed, expected, w, report)
+
+    if donate:
+        lowered = traced.lower().as_text()
+        check_donation(lowered, donate, f"{where}:compiled", report,
+                       alias_possible=_alias_possible([x],
+                                                      compiled.out_avals))
+
+    if dynamic:
+        g = plan.g
+        cpd = plan.compile(dynamic=True)
+        traced_dyn = cpd._fn.trace(params, x, jnp.asarray(g.src),
+                                   jnp.asarray(g.dst),
+                                   jnp.asarray(g.in_deg))
+        w = f"{where}:dynamic"
+        check_no_callbacks(traced_dyn.jaxpr, w, report)
+        check_no_f64(traced_dyn.jaxpr, w, report)
+        check_dynamic_consts(traced_dyn.jaxpr, g, w, report)
+    return report

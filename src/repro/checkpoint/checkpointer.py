@@ -70,7 +70,8 @@ class Checkpointer:
         self.wait()  # surface previous failure / avoid overlapping saves
 
         def to_host(a):
-            arr = np.asarray(jax.device_get(a))
+            # checkpointing IS host materialization -- never traced
+            arr = np.asarray(jax.device_get(a))  # analysis: allow(host-in-trace)
             # numpy can't serialize ml_dtypes (bf16/f8); store as f32 --
             # bf16 embeds exactly in f32, restore casts back via the
             # abstract dtype.

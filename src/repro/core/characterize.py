@@ -27,26 +27,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-from repro.profile.machine import A100, TPU_V5E, V100, Machine
-
-# --- DEPRECATED constant shims (use Machine presets; gone next release) ----
-PEAK_FLOPS_BF16 = TPU_V5E.peak_flops
-HBM_BW = TPU_V5E.hbm_bw
-ICI_BW_PER_LINK = TPU_V5E.interconnect_bw
-ICI_LINKS = TPU_V5E.interconnect_links
-VMEM_BYTES = TPU_V5E.on_chip_bytes
-MXU_DIM = TPU_V5E.matrix_tile
-
-#: DEPRECATED: TPU_V5E.balance (FLOPs/byte at which compute == HBM time)
-MACHINE_BALANCE = TPU_V5E.balance
-
-# DEPRECATED GPU occupancy shims: these live on the A100 preset now, so
-# ``suggest_tile_m(backend="pallas-gpu")`` consumes one coherent Machine
-# instead of mixing TPU balance points with GPU tile math.
-GPU_SMEM_PER_SM = A100.on_chip_bytes
-GPU_REGFILE_PER_SM = A100.regfile_bytes
-GPU_TARGET_CTAS_PER_SM = A100.target_ctas
-GPU_WARP_ROWS = A100.row_align
+from repro.profile.machine import TPU_V5E, V100, Machine
 
 
 # ---------------------------------------------------------------------------
@@ -251,14 +232,6 @@ def roofline(cost: StepCost, chips: int, model_flops: float = 0.0,
 # ---------------------------------------------------------------------------
 # Paper Table 3: hybrid execution pattern report
 # ---------------------------------------------------------------------------
-
-
-#: DEPRECATED: V100.balance (15.7 TFLOP/s / 900 GB/s) -- the PAPER's
-#: classification point.  v5e bf16 balance is ~240: a GEMM that is
-#: compute-bound on V100 (AI ~50) is memory-bound on v5e unless
-#: batched/fused wider -- a real hardware-adaptation finding, reported
-#: alongside (DESIGN.md §2).
-V100_BALANCE = V100.balance
 
 
 def phase_report(agg_cost: dict, comb_cost: dict,

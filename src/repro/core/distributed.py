@@ -600,3 +600,83 @@ def halo_bytes_2d(p2: Partition2D, feature_len: int,
     out = halo_bytes(p2.nodes, p2.feature_block(feature_len), dtype_bytes)
     out["feat_shards"] = p2.feat_shards
     return out
+
+
+# ---------------------------------------------------------------------------
+# Schedule-exact wire accounting (the static analyzer's ground truth)
+# ---------------------------------------------------------------------------
+
+
+def wire_dtype_bytes(dtype: str) -> int:
+    """Bytes per element ACTUALLY moved by the halo collectives.
+
+    ``_reduce_wire`` casts the exchanged slab to bf16 (2 bytes) under
+    ``dtype="bf16"``; ``int8-agg`` fake-quantizes but keeps the f32
+    carrier on the wire (4 bytes -- the 1-byte width is the analytic
+    model's aspiration, not what the traced program ships), and f32
+    ships f32.  This is the itemsize a jaxpr-level byte extraction
+    (``repro.analysis.jaxpr_lint.collective_bytes``) must see.
+    """
+    return {"f32": 4, "bf16": 2, "int8-agg": 4}[dtype]
+
+
+def schedule_wire_bytes(partition, feature_len: int, *,
+                        strategy: str = "ring", overlap: str = "none",
+                        dtype: str = "f32", combine_out_len=None) -> dict:
+    """Schedule-exact per-device collective bytes of ONE distributed
+    layer's TRACED schedule, by collective primitive.
+
+    Unlike :func:`halo_bytes` (an analytic lower bound: cut edges x
+    feature width) this prices the program the trace actually emits, so
+    ``repro.analysis`` can equate it to jaxpr-extracted totals byte for
+    byte:
+
+      * single-buffered ring (``overlap="none"``): the scan body sends
+        one slab per iteration over ``num_shards`` iterations (the last
+        send is the schedule's redundant wrap-around hop), so
+        ``ppermute`` moves ``num_shards * block * flen * wire`` bytes;
+      * pipelined ring (``overlap="pipelined"``): ``num_shards - 1``
+        in-flight sends, the resident slab never moves;
+      * ``strategy="allgather"``: one tiled ``all_gather`` whose operand
+        is the local slab (``block * flen * wire`` bytes in);
+      * 2-D partitions (pass a ``Partition2D``): the halo slab narrows
+        to ``feature_block(feature_len)`` columns and every layer adds
+        one feature-axis ``psum_scatter`` (jaxpr ``reduce_scatter``)
+        whose operand is the f32 partial GEMM ``(block,
+        feat_shards * feature_block(combine_out_len))`` -- always 4
+        bytes/elt: bf16 operands accumulate to f32 via
+        ``preferred_element_type``.
+
+    Wire element width comes from :func:`wire_dtype_bytes` (NOT the
+    analytic ``DTYPE_BYTES`` -- int8-agg ships its f32 carrier).
+    Returns per-primitive byte totals plus ``total_bytes``.
+    """
+    from repro.graph.partition import Partition2D
+    two_d = isinstance(partition, Partition2D)
+    pg = partition.nodes if two_d else partition
+    if two_d and combine_out_len is None:
+        raise ValueError("2-D schedules need combine_out_len (the layer's "
+                         "dout) to price the feature-axis psum_scatter")
+    wire = wire_dtype_bytes(dtype)
+    flen = partition.feature_block(feature_len) if two_d else feature_len
+    out = {"ppermute_sends": 0, "ppermute_bytes_per_send": 0,
+           "ppermute_bytes": 0, "all_gather_bytes": 0,
+           "reduce_scatter_bytes": 0, "psum_bytes": 0,
+           "wire_dtype_bytes": wire}
+    if strategy == "ring":
+        sends = pg.num_shards if overlap == "none" \
+            else max(pg.num_shards - 1, 0)
+        per = pg.block_size * flen * wire
+        out.update(ppermute_sends=sends, ppermute_bytes_per_send=per,
+                   ppermute_bytes=sends * per)
+    elif strategy == "allgather":
+        out["all_gather_bytes"] = pg.block_size * flen * wire
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if two_d:
+        fb_out = partition.feature_block(combine_out_len)
+        out["reduce_scatter_bytes"] = \
+            pg.block_size * partition.feat_shards * fb_out * 4
+    out["total_bytes"] = (out["ppermute_bytes"] + out["all_gather_bytes"]
+                          + out["reduce_scatter_bytes"] + out["psum_bytes"])
+    return out

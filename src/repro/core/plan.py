@@ -687,8 +687,8 @@ def _reduce_in(h: jnp.ndarray, dtype: str) -> jnp.ndarray:
 def _quant_err(orig: jnp.ndarray, reduced: jnp.ndarray) -> float:
     """Max abs error a precision reduction introduced (probe-time only:
     forces a host sync, so production dispatch never calls it)."""
-    return float(jnp.max(jnp.abs(orig.astype(jnp.float32) -
-                                 reduced.astype(jnp.float32))))
+    return float(jnp.max(jnp.abs(  # analysis: allow(host-in-trace)
+        orig.astype(jnp.float32) - reduced.astype(jnp.float32))))
 
 
 def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
@@ -837,12 +837,14 @@ def clear_plan_cache(keep=None) -> int:
     ``keep=None`` wipes everything and resets the hit/miss/eviction
     counters (the test-isolation path).  ``keep=<iterable of
     GraphExecutionPlan>`` is the serving engine's eviction policy: every
-    cached plan NOT in ``keep`` is evicted (counted in ``evictions``),
-    while the kept plans -- e.g. the engine's per-bucket compiled plans --
-    and the blocked/reorder layouts of their graphs survive, so a bounded
-    bucket set keeps a bounded cache no matter how many transient
-    per-request graphs were planned.  Returns the number of plan entries
-    dropped.
+    cached plan NOT in ``keep`` is evicted, while the kept plans -- e.g.
+    the engine's per-bucket compiled plans -- and the blocked/reorder
+    layouts of their graphs survive, so a bounded bucket set keeps a
+    bounded cache no matter how many transient per-request graphs were
+    planned.  ``evictions`` counts every dropped line -- plan entries AND
+    the blocked/reorder layouts swept with them -- and the hit/miss
+    counters keep accumulating across the sweep.  Returns the number of
+    plan entries dropped.
     """
     if keep is None:
         n = len(_PLAN_CACHE)
@@ -857,11 +859,17 @@ def clear_plan_cache(keep=None) -> int:
             if id(plan) not in keep_plans]
     for k in drop:
         del _PLAN_CACHE[k]
-    for k in [k for k in _BLOCKED_CACHE if k[0] not in keep_graphs]:
+    blocked_drop = [k for k in _BLOCKED_CACHE if k[0] not in keep_graphs]
+    for k in blocked_drop:
         del _BLOCKED_CACHE[k]          # key = (graph_key, tile_m)
-    for k in [k for k in _REORDER_CACHE if k not in keep_graphs]:
+    reorder_drop = [k for k in _REORDER_CACHE if k not in keep_graphs]
+    for k in reorder_drop:
         del _REORDER_CACHE[k]          # key = graph_key
-    _PLAN_CACHE_STATS["evictions"] += len(drop)
+    # every dropped line counts -- plan entries AND the blocked/reorder
+    # layouts swept with them (the stats docstring's contract); hit/miss
+    # counters are untouched, so they survive an eviction cycle
+    _PLAN_CACHE_STATS["evictions"] += \
+        len(drop) + len(blocked_drop) + len(reorder_drop)
     return len(drop)
 
 
@@ -878,8 +886,8 @@ def _evict_oldest(cache: Dict) -> None:
     out one at a time instead of wiping hot full-graph entries wholesale."""
     while len(cache) >= _CACHE_LIMIT:
         cache.pop(next(iter(cache)))
-        if cache is _PLAN_CACHE:
-            _PLAN_CACHE_STATS["evictions"] += 1
+        # every dropped line counts, whichever cache aged it out
+        _PLAN_CACHE_STATS["evictions"] += 1
 
 
 def _blocked_for(g: Graph, tile_m: int) -> BlockedGraph:
@@ -929,13 +937,22 @@ def _cached_plan(g: Graph, spec_key, builder):
 
 def _plan_layer(g: Graph, index: int, kind: str, dims: Tuple[int, ...], *,
                 agg_op: str, ordering: str, backend: str, fused: bool,
-                include_self: bool = True, machine=None) -> LayerPlan:
+                include_self: bool = True, machine=None,
+                dtype: str = "f32") -> LayerPlan:
     """Resolve one layer's ordering / backend / fusion decisions.
 
     ``machine`` (``repro.profile.Machine``, optional) parameterizes the two
     hardware-aware decisions: the ordering cost model prices roofline time
     on it and ``suggest_tile_m`` sizes the fused tile for its memory
     hierarchy.  None keeps the tier's natural preset.
+
+    ``dtype`` is the plan's RESOLVED execution precision (never "auto"):
+    the fused tile is sized at the storage width the kernel's gathered
+    rows actually occupy, so bf16 plans get the doubled effective
+    on-chip budget ``dtype_model`` surfaces as ``tile_rows``.  int8-agg
+    sizes at 4 bytes like f32 -- its fake-quantized aggregation operand
+    is carried as f32 on device (only the analytic wire model prices the
+    1-byte width).
     """
     semantic = AGGREGATE_FIRST if len(dims) > 2 else COMBINE_FIRST
     if ordering in (COMBINE_FIRST, AGGREGATE_FIRST):
@@ -950,8 +967,9 @@ def _plan_layer(g: Graph, index: int, kind: str, dims: Tuple[int, ...], *,
     align = 32 if backend == PALLAS_GPU else 8
     if fused:
         avg_deg = g.num_edges / max(1, g.num_vertices)
-        tile_m = suggest_tile_m(dims[0], dims[1], avg_deg, backend=backend,
-                                machine=machine)
+        tile_m = suggest_tile_m(dims[0], dims[1], avg_deg,
+                                dtype_bytes=2 if dtype == "bf16" else 4,
+                                backend=backend, machine=machine)
         # a tile larger than the graph only pads; clamp to |V| rounded up,
         # keeping the tier's alignment (warp rows on GPU, sublanes on TPU)
         tile_m = max(align, min(tile_m, -(-g.num_vertices // align) * align))
@@ -1165,16 +1183,39 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
             lay_backend, lay_fused = backend, use_fused
 
         hid = cfg.hidden_dims[0]
-        layers = []
+        dims_list = []
         d = in_dim
         for i in range(cfg.num_layers):
             dout = hid if i < cfg.num_layers - 1 else num_classes
-            dims = (d, cfg.hidden_dims[-1], dout) if cfg.conv == "gin" \
-                else (d, dout)
-            layers.append(_plan_layer(
-                g_exec, i, cfg.conv, dims, agg_op=agg, ordering=req_order,
-                backend=lay_backend, fused=lay_fused, machine=machine))
+            dims_list.append((d, cfg.hidden_dims[-1], dout)
+                             if cfg.conv == "gin" else (d, dout))
             d = dout
+
+        # -- execution precision (a planned decision like ordering):
+        #    "auto" is priced HERE, from the layer dims and shard count,
+        #    BEFORE the layers are planned -- the fused tile sizing
+        #    consumes the resolved dtype's effective on-chip budget
+        dt = dtype
+        if dt == "auto":
+            from repro.profile.machine import choose_dtype, \
+                machine_for_backend
+            dec_machine = machine or machine_for_backend(
+                resolve_backend(lay_backend))
+            shards = 1
+            if partition is not None:
+                shards = getattr(partition, "num_shards", None) or \
+                    getattr(partition, "nodes", partition).num_shards
+            # price the widest layer: the one whose bytes dominate
+            widest = max(dims_list, key=lambda ds: ds[0] * ds[-1])
+            dt = choose_dtype(g_exec.num_vertices, g_exec.num_edges,
+                              widest[0], widest[-1], machine=dec_machine,
+                              num_shards=int(shards))
+
+        layers = [
+            _plan_layer(g_exec, i, cfg.conv, dims, agg_op=agg,
+                        ordering=req_order, backend=lay_backend,
+                        fused=lay_fused, machine=machine, dtype=dt)
+            for i, dims in enumerate(dims_list)]
 
         # -- halo overlap schedule (a planned decision like ordering):
         #    resolved HERE so describe()/instrument()/the cache all state
@@ -1199,24 +1240,6 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                                 machine or machine_for_backend(XLA),
                                 strategy=strategy)
 
-        # -- execution precision (a planned decision like ordering): "auto"
-        #    is priced HERE, once the layer dims and shard count are known,
-        #    so describe()/instrument()/the cache state the precision that
-        #    will actually dispatch
-        dt = dtype
-        if dt == "auto":
-            from repro.profile.machine import choose_dtype, \
-                machine_for_backend
-            dec_machine = machine or machine_for_backend(layers[0].backend)
-            shards = 1
-            if partition is not None:
-                shards = getattr(partition, "num_shards", None) or \
-                    getattr(partition, "nodes", partition).num_shards
-            # price the widest layer: the one whose bytes dominate
-            widest = max(layers, key=lambda lp: lp.din * lp.dout)
-            dt = choose_dtype(g_exec.num_vertices, g_exec.num_edges,
-                              widest.din, widest.dout, machine=dec_machine,
-                              num_shards=int(shards))
         return GraphExecutionPlan(
             g_exec, layers, interpret=_plan_interpret(interpret,
                                                       layers[0].backend),

@@ -19,6 +19,11 @@ The pure-jnp oracle is ``ref.mha_ref``; tests sweep shapes/dtypes/flags.
 
 from __future__ import annotations
 
+# analysis: allow-file(acc-dtype) -- the online-softmax running max/sum
+# and output accumulator are ALWAYS f32 regardless of the plan's dtype
+# (numerical requirement of the rescaling recurrence, outside the GCN
+# acc_dtype threading contract).
+
 import functools
 from typing import Optional
 

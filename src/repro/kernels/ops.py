@@ -31,6 +31,18 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+#: ONE remediation text shared by the ``seg_agg`` tracing ValueError and
+#: the ``host-in-trace`` AST lint rule (repro.analysis.ast_lint), so the
+#: error a user hits and the finding a reviewer reads agree verbatim on
+#: the fix: route through the trace-pure planned entry points.
+SEG_AGG_REMEDIATION = (
+    "seg_agg regroups edges on the host and cannot run inside jit/grad; "
+    "dispatch the trace-pure seg_agg_planned instead -- via a plan from "
+    "build_plan, plan_for_conv, or plan_for_phases (each owns a blocked "
+    "layout), or call seg_agg_planned directly with a "
+    "core.dataflow.block_graph layout")
+
+
 # ---------------------------------------------------------------------------
 # Segmented aggregation over a destination-sorted edge list
 # ---------------------------------------------------------------------------
@@ -67,12 +79,9 @@ def seg_agg(rows: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
         tile_e = min(tile_e, 128)  # SM-resident chunk, not a VMEM slab
     e, f = rows.shape
     if isinstance(seg_ids, jax.core.Tracer):
-        raise ValueError(
-            "seg_agg regroups edges on the host and cannot run inside "
-            "jit/grad; build a GraphExecutionPlan (its plan-owned blocked "
-            "layout dispatches the trace-pure seg_agg_planned) or call "
-            "seg_agg_planned with a core.dataflow.block_graph layout")
-    seg_np = np.asarray(jax.device_get(seg_ids))
+        raise ValueError(SEG_AGG_REMEDIATION)
+    # documented host fallback -- the Tracer guard above is the contract
+    seg_np = np.asarray(jax.device_get(seg_ids))  # analysis: allow(host-in-trace)
     nblocks = _round_up(num_segments, tile_m) // tile_m
     blk = seg_np // tile_m
     counts = np.bincount(blk, minlength=nblocks)

@@ -14,7 +14,7 @@ only computes and emits -- and ``run_specs`` executes any list of them:
   * dry-run participation (``BenchSpec.dry``): "run" specs validate their
     scenarios without timing, "skip" specs are reported and skipped.
 
-Wall-clock conventions are unchanged from the old ``benchmarks/common.py``:
+Wall-clock conventions (repo-wide):
 CPU times are correctness-shaped observables (relative effects), never
 accelerator predictions -- those come from the analytic columns and the
 dry-run roofline artifacts.

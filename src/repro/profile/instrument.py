@@ -20,7 +20,7 @@ path (``plan.compile()`` -- whole forward and per layer) and attaches the
 wall times to the report, so one call states the eager-vs-compiled speedup
 per layer alongside the per-phase breakdown.
 
-Wall times follow the repo-wide convention (benchmarks/common.py): on CPU
+Wall times follow the repo-wide convention (repro.profile.bench): on CPU
 they are correctness-shaped observables, not accelerator predictions; the
 analytic FLOP/byte columns are machine-independent and exact.
 """
@@ -93,6 +93,14 @@ class PhaseRecord:
     overlapped_collective_time: float = 0.0  # modeled s, hidden under hops
     dtype: str = "f32"      # storage precision of the dispatched operand
     quant_error: float = 0.0  # max|full - reduced| observed at probe time
+    #: schedule-exact collective bytes of the TRACED halo program
+    #: (``core.distributed.schedule_wire_bytes``): what the ppermute /
+    #: all_gather / psum_scatter eqns actually put on the wire, per
+    #: device -- the quantity ``repro.analysis.jaxpr_lint`` extracts
+    #: from the jaxpr and equates byte-for-byte.  ``collective_bytes``
+    #: stays the analytic cut-edge LOWER BOUND (min_halo_bytes); both
+    #: are 0.0 on non-distributed phases.
+    wire_collective_bytes: float = 0.0
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -110,6 +118,7 @@ class PhaseRecord:
             "overlapped_collective_time": self.overlapped_collective_time,
             "wall_time_s": self.wall_time_s, "bound": self.bound,
             "dtype": self.dtype, "quant_error": self.quant_error,
+            "wire_collective_bytes": self.wire_collective_bytes,
         }
 
 
@@ -163,7 +172,10 @@ class _Probe:
             exposed_collective_time=float(exp_s),
             overlapped_collective_time=float(ovl_s),
             dtype=rec_dtype,
-            quant_error=float(meta.get("quant_error", 0.0))))
+            quant_error=float(meta.get("quant_error", 0.0)),
+            wire_collective_bytes=(
+                self._wire_bytes(lp, flen, meta)
+                if name == "distributed" else 0.0)))
         return out
 
     # -- analytic per-phase costs (same models the scheduler prices) --------
@@ -222,6 +234,23 @@ class _Probe:
         pd = getattr(self.plan, "dtype", "f32")
         return base * DTYPE_BYTES.get(pd, 4) / 4.0
 
+    def _wire_bytes(self, lp, feature_len: int, meta) -> float:
+        """Schedule-exact per-device collective bytes of this layer's
+        traced halo program (``schedule_wire_bytes``) -- the side of the
+        accounting the static analyzer equates to jaxpr extraction."""
+        from repro.core.distributed import schedule_wire_bytes
+        kind = self.plan.partition_kind
+        if kind == "none":
+            return 0.0
+        acc = schedule_wire_bytes(
+            self.plan.partition, int(feature_len),
+            strategy=getattr(self.plan, "strategy", "ring"),
+            overlap=meta.get("overlap",
+                             getattr(self.plan, "overlap", "none")),
+            dtype=getattr(self.plan, "dtype", "f32"),
+            combine_out_len=lp.dout if kind == "2d" else None)
+        return float(acc["total_bytes"])
+
     def _overlap_times(self, feature_len: int, overlap: str):
         """(exposed_s, overlapped_s) collective wall-time split for one
         distributed layer, from the same ``overlap_model`` pricing that
@@ -259,6 +288,7 @@ _FIELD_TYPES = {
     "overlapped_collective_time": (int, float),
     "wall_time_s": (int, float), "bound": str,
     "dtype": str, "quant_error": (int, float),
+    "wire_collective_bytes": (int, float),
 }
 
 
@@ -293,7 +323,7 @@ def validate_report_dict(d: Dict[str, Any]) -> List[str]:
             problems.append(f"phases[{i}]: bad dtype {rec.get('dtype')!r}")
         for k in ("flops", "bytes", "collective_bytes", "wall_time_s",
                   "exposed_collective_time", "overlapped_collective_time",
-                  "quant_error"):
+                  "quant_error", "wire_collective_bytes"):
             if isinstance(rec.get(k), (int, float)) and rec[k] < 0:
                 problems.append(f"phases[{i}].{k}: negative")
         if rec.get("dtype") == "f32" and \
@@ -304,7 +334,8 @@ def validate_report_dict(d: Dict[str, Any]) -> List[str]:
                 "(the bitwise-golden contract forbids rounding)")
         if rec.get("phase") != "distributed":
             for k in ("exposed_collective_time",
-                      "overlapped_collective_time"):
+                      "overlapped_collective_time",
+                      "wire_collective_bytes"):
                 if isinstance(rec.get(k), (int, float)) and rec[k] != 0:
                     problems.append(
                         f"phases[{i}].{k}: nonzero on non-distributed phase")

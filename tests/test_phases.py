@@ -9,8 +9,8 @@ from tolerance import assert_allclose_dtype
 
 from repro.config import CORA, REDDIT, GraphSpec, reduced_graph
 from repro.core import phases
-from repro.core.characterize import (MACHINE_BALANCE, Roofline, StepCost,
-                                     phase_report, roofline)
+from repro.core.characterize import (Roofline, StepCost, phase_report,
+                                     roofline)
 from repro.core.dataflow import block_graph, fused_gcn_layer, suggest_tile_m
 from repro.core.scheduler import (AGGREGATE_FIRST, COMBINE_FIRST,
                                   choose_ordering, ordering_cost,
@@ -116,11 +116,46 @@ def test_fused_dataflow_matches_unfused(setup):
 
 
 def test_suggest_tile_m_fits_vmem():
-    from repro.core.characterize import VMEM_BYTES
+    from repro.profile.machine import TPU_V5E
     m = suggest_tile_m(602, 128, avg_deg=50.0)
     w = 602 * 128 * 4
     per_row = (602 + 128 + 2 * 50 * 602) * 4
-    assert w + m * per_row <= VMEM_BYTES // 2 + per_row * 8
+    assert w + m * per_row <= TPU_V5E.on_chip_bytes // 2 + per_row * 8
+
+
+def test_suggest_tile_m_dtype_aware():
+    """bf16 halves the per-row VMEM footprint, so the suggested tile for
+    the SAME layer geometry on the SAME machine must be larger than f32's
+    (roughly 2x, modulo alignment rounding)."""
+    f32 = suggest_tile_m(512, 256, avg_deg=16.0, dtype_bytes=4)
+    bf16 = suggest_tile_m(512, 256, avg_deg=16.0, dtype_bytes=2)
+    assert bf16 > f32
+    assert bf16 >= int(f32 * 1.5)
+
+
+def test_plan_tile_sizing_consumes_dtype():
+    """End to end: a bf16 fused plan gets a larger Pallas tile than the
+    f32 plan on a graph big enough that the VMEM budget (not the |V|
+    clamp or the 4096 cap) decides the tile."""
+    import dataclasses
+
+    from repro.core.plan import build_plan
+    from repro.graph.datasets import make_synthetic_graph
+    from repro.models.gcn import PAPER_MODELS
+
+    spec = dataclasses.replace(
+        CORA, num_vertices=4096, num_edges=65536, feature_len=512)
+    g = make_synthetic_graph(spec)
+    cfg = dataclasses.replace(PAPER_MODELS["gcn"], hidden_dims=(256,))
+
+    def tile(dtype):
+        plan = build_plan(g, cfg, spec.feature_len, spec.num_classes,
+                          backend="pallas-tpu", fused=True, dtype=dtype)
+        return plan.layers[0].tile_m
+
+    assert tile("bf16") > tile("f32")
+    # int8-agg carries f32 on the wire and in VMEM -> sized like f32
+    assert tile("int8-agg") == tile("f32")
 
 
 def test_phase_report_classification(setup):

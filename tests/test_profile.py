@@ -79,15 +79,13 @@ def test_machine_for_backend_mapping():
     assert default_machine("pallas-gpu") is A100
 
 
-def test_deprecated_characterize_shims_track_presets():
-    """Old constant names must keep working for one release and must be
-    DERIVED from the presets (no second copy of the numbers)."""
-    assert characterize.VMEM_BYTES == TPU_V5E.on_chip_bytes
-    assert characterize.MACHINE_BALANCE == TPU_V5E.balance
-    assert characterize.GPU_SMEM_PER_SM == A100.on_chip_bytes
-    assert characterize.GPU_TARGET_CTAS_PER_SM == A100.target_ctas
-    assert characterize.GPU_WARP_ROWS == A100.row_align
-    assert characterize.V100_BALANCE == V100.balance
+def test_deprecated_characterize_shims_removed():
+    """The PR 4 'one release' constant shims are gone: Machine presets are
+    the only copy of the hardware numbers."""
+    for name in ("VMEM_BYTES", "MACHINE_BALANCE", "GPU_SMEM_PER_SM",
+                 "GPU_TARGET_CTAS_PER_SM", "GPU_WARP_ROWS", "V100_BALANCE",
+                 "PEAK_FLOPS_BF16", "HBM_BW", "MXU_DIM"):
+        assert not hasattr(characterize, name), name
 
 
 def test_suggest_tile_m_is_machine_parameterized():

@@ -330,6 +330,41 @@ def test_plan_cache_stats_and_eviction(graph_setup):
     assert plan_cache_stats()["hits"] == 0
 
 
+def test_plan_cache_eviction_accounting(graph_setup):
+    """``clear_plan_cache(keep=...)`` counts EVERY dropped cache line --
+    plan entries plus the blocked/reorder layouts swept with them -- and
+    the hit/miss counters survive the eviction cycle."""
+    spec, g, x = graph_setup
+    clear_plan_cache()
+    p_keep = build_plan(g, PAPER_MODELS["gcn"], spec.feature_len,
+                        spec.num_classes, backend="xla", fused=False)
+    # a second graph seeds blocked (fused pallas) and reorder (degree)
+    # cache lines -- all swept together with its plan entries
+    spec2 = dataclasses.replace(spec, seed=spec.seed + 1)
+    g2 = make_synthetic_graph(spec2)
+    build_plan(g2, PAPER_MODELS["gcn"], spec.feature_len, spec.num_classes,
+               backend="pallas-tpu", fused=True)
+    build_plan(g2, PAPER_MODELS["gcn"], spec.feature_len, spec.num_classes,
+               backend="xla", fused=False, reorder="degree")
+    s0 = plan_cache_stats()
+    assert s0["blocked_size"] >= 1 and s0["reorder_size"] >= 1
+    dropped = clear_plan_cache(keep=[p_keep])
+    s1 = plan_cache_stats()
+    assert dropped == s0["size"] - 1
+    # every dropped line counted, plan entries AND swept layouts
+    assert s1["evictions"] == \
+        dropped + s0["blocked_size"] + s0["reorder_size"]
+    assert s1["size"] == 1
+    assert s1["blocked_size"] == 0 and s1["reorder_size"] == 0
+    # hit/miss counters accumulate ACROSS the sweep: the kept plan is
+    # still a cache hit afterwards
+    assert s1["hits"] == s0["hits"] and s1["misses"] == s0["misses"]
+    assert build_plan(g, PAPER_MODELS["gcn"], spec.feature_len,
+                      spec.num_classes, backend="xla", fused=False) is p_keep
+    assert plan_cache_stats()["hits"] == s0["hits"] + 1
+    clear_plan_cache()
+
+
 def test_graph_workload_report_golden_schema(drained_engine):
     eng, _, _ = drained_engine
     report = eng.workload_report()         # .validate() runs inside
