@@ -17,6 +17,7 @@ reads instead of re-parsing stdout).
   bench_overlap         overlap x strategy x partition halo-pipelining matrix
   bench_serve           serving: GraphServeEngine offered-load latency sweep
   bench_dtype           dtype x feature_len precision matrix + choose_dtype flip
+  bench_dedup           pair-redundancy elimination: dedup savings + choose_dedup flip
   roofline              deliverable (g): dry-run roofline table
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--dry-run] [module ...]
@@ -60,7 +61,7 @@ def main() -> None:
     dry = "--dry-run" in argv
     argv = [a for a in argv if a != "--dry-run"]
 
-    from benchmarks import (bench_agg_vs_pgr, bench_breakdown,
+    from benchmarks import (bench_agg_vs_pgr, bench_breakdown, bench_dedup,
                             bench_dtype, bench_feature_length,
                             bench_kernels, bench_ordering, bench_overlap,
                             bench_phase_metrics, bench_plan, bench_serve,
@@ -76,6 +77,7 @@ def main() -> None:
         "bench_overlap": bench_overlap,
         "bench_serve": bench_serve,
         "bench_dtype": bench_dtype,
+        "bench_dedup": bench_dedup,
         "roofline": roofline,
     }
     if dry:
@@ -85,10 +87,13 @@ def main() -> None:
         # pipelined==none, compiled contract, modeled-time ordering), and
         # bench_dtype's is the precision gate (f32 bitwise under compile,
         # reduced dtypes banded, choose_dtype preset flip, bf16 halo
-        # halving) -- all hard-fail the smoke check alongside the planner
-        # matrix.
+        # halving), and bench_dedup's is the redundancy-elimination gate
+        # (zero matched pairs on a fanout-regular block, an analytic
+        # aggregation-FLOP reduction under the floor, f32 drift from the
+        # naive plan, or a missing choose_dedup workload flip hard-fail)
+        # -- all hard-fail the smoke check alongside the planner matrix.
         selected = argv or ["bench_plan", "bench_overlap", "bench_serve",
-                            "bench_dtype"]
+                            "bench_dtype", "bench_dedup"]
     else:
         selected = argv or list(modules)
 

@@ -75,6 +75,24 @@ def _build_matrix():
                       reorder="degree")
     yield plan, {}
 
+    # -- dedup cells: a fanout-regular block (every dst draws two hub
+    #    in-neighbors -> guaranteed matched pairs) where the XLA cell's
+    #    trace must show the SHORTENED two-level fold (dedup-accounting)
+    #    and the Pallas cell must still pass the general rules
+    import numpy as np
+
+    from repro.graph.structure import graph_from_coo
+    rng = np.random.default_rng(0)
+    hub_pairs = np.array([(a, b) for a in range(4) for b in range(a + 1, 4)])
+    sel = hub_pairs[rng.integers(0, len(hub_pairs), spec.num_vertices)]
+    g_dd = graph_from_coo(sel.reshape(-1),
+                          np.repeat(np.arange(spec.num_vertices), 2),
+                          spec.num_vertices)
+    for backend in ("xla", "pallas-tpu"):
+        plan = build_plan(g_dd, cfg, spec.feature_len, spec.num_classes,
+                          backend=backend, dedup="pairs")
+        yield plan, {}
+
     # -- 1-D halo: strategy x overlap x dtype on an (8,) mesh
     mesh = jax.make_mesh((8,), ("data",))
     for overlap in OVERLAPS:

@@ -44,6 +44,17 @@ PUBLIC_SURFACE = {
     "repro.graph.reorder": [
         "degree_reorder", "choose_reorder", "reuse_distance_stats",
     ],
+    "repro.graph.dedup": [
+        "DedupLayout", "DedupLayout.flops_saved", "build_dedup_layout",
+        "dedup_layout_for_graph", "dedup_cost", "pad_dedup_arrays",
+        "attach_blocked",
+    ],
+    "repro.models.sage_minibatch": [
+        "PlannedSageTrainer", "PlannedSageTrainer.train",
+        "PlannedSageTrainer.step", "PlannedSageTrainer.save",
+        "PlannedSageTrainer.restore", "PlannedSageTrainer.predict",
+        "train_minibatch_planned",
+    ],
     "repro.kernels.ops": ["seg_agg", "seg_agg_planned"],
     "repro.core.backend": [
         "resolve_backend", "interpret_for", "default_interpret",
@@ -64,6 +75,7 @@ PUBLIC_SURFACE = {
         "Machine", "Machine.tile_budget", "Machine.classify",
         "Machine.hop_time", "Machine.matmul_peak", "get_machine",
         "machine_for_backend", "choose_dtype", "dtype_model",
+        "choose_dedup", "dedup_model",
     ],
     "repro.profile.instrument": [
         "InstrumentedPlan", "InstrumentedPlan.run_model", "WorkloadReport",
@@ -95,9 +107,12 @@ CONTENT_REQUIREMENTS = {
     ("repro.core.plan", "build_plan"): [">>>", "mesh", "num_shards",
                                         "reorder", "degree", "auto",
                                         "overlap", "pipelined", "dtype",
-                                        "bf16"],
+                                        "bf16", "dedup", "pairs",
+                                        "dedup_pad"],
     ("repro.profile.machine", "choose_dtype"): [
         ">>>", "bf16", "native_bf16", "halo"],
+    ("repro.profile.machine", "choose_dedup"): [
+        ">>>", "pairs", "fanout", "Machine"],
     ("repro.core.distributed", "choose_overlap"): [
         "pipelined", "hop", "Machine", ">>>"],
     ("repro.core.distributed", "overlap_model"): [
@@ -133,7 +148,11 @@ REQUIRED_FILES = {
                                    "double-buffered", "bench_overlap",
                                    "Reduced-precision execution",
                                    "choose_dtype", "int8-agg",
-                                   "bench_dtype", "quant_error"],
+                                   "bench_dtype", "quant_error",
+                                   "Redundancy-eliminated aggregation",
+                                   "choose_dedup", "dedup_model",
+                                   "DedupLayout", "two-level",
+                                   "bench_dedup", "dedup_pairs"],
     ROOT / "docs" / "characterization.md": [
         "Machine", "TPU_V5E", "TPU_V5P", "A100", "H100", "V100",
         "WorkloadReport", "to_markdown", "BenchSpec", "instrument",
@@ -146,9 +165,15 @@ REQUIRED_FILES = {
         "clear_plan_cache", "plan_cache_stats", "dynamic", "retrace",
         "p50", "p99", "throughput", "bench_serve", "two_hop_batch",
         "bit-identical", "eviction"],
+    ROOT / "docs" / "training.md": [
+        "PlannedSageTrainer", "GraphPipeline", "Checkpointer",
+        "dedup", "choose_dedup", "dedup_pad", "bucket", "retrace",
+        "plan_cache_stats", "batch_at", "deterministic", "resume",
+        "bitwise", "tolerance"],
     ROOT / "docs" / "analysis.md": [
         "no-callbacks", "no-f64", "bf16-f32-accum", "donation",
-        "collective-bytes", "dynamic-edge-free", "host-in-trace",
+        "collective-bytes", "dynamic-edge-free", "dedup-accounting",
+        "host-in-trace",
         "tracer-branch", "broadcast-div", "acc-dtype", "grid-arity",
         "allow(", "allow-file(", "--strict", "--selftest",
         "wire_collective_bytes", "schedule_wire_bytes",

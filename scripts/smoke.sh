@@ -30,7 +30,15 @@
 #      quant_error), if choose_dtype fails to flip between the V100 and
 #      TPU_V5E presets, if the instrumented bf16 halo bytes are not
 #      EXACTLY half of f32's on 8 fake devices, or if any dtype cell is
-#      skipped without a logged reason,
+#      skipped without a logged reason.  The dry run ALSO gates the
+#      pair-redundancy elimination (bench_dedup): the fanout-regular
+#      sampled block HARD-FAILS on zero matched pairs, on an analytic
+#      aggregation-FLOP reduction below the 20% floor, on any f32 bit
+#      drift between the dedup='pairs' plan (eager or compiled) and the
+#      naive plan, on instrumented aggregation records missing their
+#      dedup_pairs counts, or if choose_dedup fails to flip between the
+#      fanout-regular block ('pairs') and the sparse full-graph layer
+#      ('none') on the same machine preset,
 #   3. the docs gate (README + docs/planner.md + docs/characterization.md
 #      + docs/serving.md + docs/analysis.md exist, public
 #      planner/profile/serving/analysis symbols documented --
@@ -68,7 +76,10 @@ echo "   serving: bucketed offered-load drain, closed- and open-loop --"
 echo "   bucket misses, retraces, or empty serving stats hard-fail;"
 echo "   dtype matrix: f32 bitwise drift, band violations, a missing"
 echo "   choose_dtype preset flip, or non-halved bf16 halo bytes"
-echo "   hard-fail) =="
+echo "   hard-fail; dedup matrix: zero matched pairs on the fanout-"
+echo "   regular block, an unreduced analytic aggregation-FLOP count,"
+echo "   f32 drift from the naive plan, or a missing choose_dedup"
+echo "   workload flip hard-fail) =="
 python -m benchmarks.run --dry-run
 
 echo "== docs gate =="

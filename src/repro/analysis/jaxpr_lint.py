@@ -19,6 +19,11 @@ registry over them:
     dtype-scaled, 1-D and 2-D.
   * ``dynamic-edge-free`` -- dynamic bucket plans re-proven edge-content
     free from the jaxpr consts (not trusted from ``_check_dynamic_ok``).
+  * ``dedup-accounting``  -- a ``dedup='pairs'`` plan's trace must run
+    the SHORTENED two-level fold its :class:`DedupLayout` prices
+    (scatter over ``num_edges2`` rows, pair-partial gathers over
+    ``num_pairs``), never the naive ``num_edges`` fold -- the priced
+    FLOP/byte savings are proven against the jaxpr, not bookkeeping.
 
 :func:`lint_callable` runs the jaxpr-level rules over any traceable
 function (the self-test plants use it); :func:`collective_bytes` is the
@@ -213,6 +218,59 @@ def check_collective_bytes(closed, expected: Dict[str, int], where: str,
                        f"expected {int(expected.get(name, 0))}")
 
 
+def dedup_fold_dims(closed) -> Dict[str, list]:
+    """Leading dims of every fold in a trace: ``scatter`` collects each
+    scatter-add's updates rows (how many edge contributions the fold
+    actually sums), ``gather`` each gather's output rows.  What the
+    dedup-accounting rule compares against the layout's priced lengths."""
+    dims = {"scatter": [], "gather": []}
+    for eqn, _ in iter_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+        if name == "scatter-add" and eqn.invars:
+            shape = getattr(getattr(eqn.invars[-1], "aval", None),
+                            "shape", None)
+            if shape:
+                dims["scatter"].append(int(shape[0]))
+        elif name == "gather" and eqn.outvars:
+            shape = getattr(getattr(eqn.outvars[0], "aval", None),
+                            "shape", None)
+            if shape:
+                dims["gather"].append(int(shape[0]))
+    return dims
+
+
+def check_dedup_fold(closed, layout, where: str,
+                     report: AnalysisReport) -> None:
+    """Rule dedup-accounting: the trace must execute the two-level fold
+    the layout prices.
+
+    ``repro.graph.dedup.dedup_cost`` keys its FLOP/byte accounting on
+    ``(num_pairs, num_edges2)``; this rule proves those are the lengths
+    the traced program actually folds -- a scatter-add over the NAIVE
+    edge count means the dedup decision was priced but not executed, a
+    missing ``num_edges2`` scatter or ``num_pairs`` pair gather means
+    the two-level layout never reached the trace.
+    """
+    e, e2, p = layout.naive_edges, layout.num_edges2, layout.num_pairs
+    dims = dedup_fold_dims(closed)
+    scatter, gather = set(dims["scatter"]), set(dims["gather"])
+    if e != e2 and e in scatter:
+        report.add("dedup-accounting", "error", where,
+                   "naive-length fold inside a dedup='pairs' trace",
+                   f"scatter-add over {e} rows; the layout prices the "
+                   f"shortened {e2}-edge fold")
+    if e2 not in scatter:
+        report.add("dedup-accounting", "error", where,
+                   "two-level fold absent from the trace",
+                   f"no scatter-add over the layout's {e2} level-2 edges "
+                   f"(scatter rows seen: {sorted(scatter)})")
+    if p and p not in gather:
+        report.add("dedup-accounting", "error", where,
+                   "pair-partial gathers absent from the trace",
+                   f"no gather of the layout's {p} pair rows "
+                   f"(gather rows seen: {sorted(gather)})")
+
+
 def check_dynamic_consts(closed, graph, where: str,
                          report: AnalysisReport) -> None:
     """Rule dynamic-edge-free: a dynamic bucket plan's trace must not
@@ -334,12 +392,20 @@ def lint_plan(plan, *, params=None, x=None, donate: bool = False,
     compiled = traced.jaxpr
 
     expected = plan_expected_collectives(plan)
+    # the two-level fold is only visible as scatter/gather dims on the
+    # plain-XLA unfused path; Pallas/fused plans hide it inside kernels
+    dedup_visible = (getattr(plan, "dedup", "none") == "pairs"
+                     and plan.dedup_layout is not None
+                     and all(lp.backend == "xla" and not lp.fused
+                             for lp in plan.layers))
     for tag, closed in (("eager", eager), ("compiled", compiled)):
         w = f"{where}:{tag}"
         check_no_callbacks(closed, w, report)
         check_no_f64(closed, w, report)
         check_bf16_accum(closed, w, report)
         check_collective_bytes(closed, expected, w, report)
+        if dedup_visible:
+            check_dedup_fold(closed, plan.dedup_layout, w, report)
 
     if donate:
         lowered = traced.lower().as_text()

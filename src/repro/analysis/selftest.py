@@ -19,8 +19,8 @@ from typing import Callable, Dict, Tuple
 
 from repro.analysis.ast_lint import lint_source
 from repro.analysis.jaxpr_lint import (check_collective_bytes,
-                                       check_donation, check_dynamic_consts,
-                                       lint_callable)
+                                       check_dedup_fold, check_donation,
+                                       check_dynamic_consts, lint_callable)
 from repro.analysis.report import AnalysisReport
 
 
@@ -121,6 +121,31 @@ def plant_dynamic_edge_free() -> AnalysisReport:
     return report
 
 
+def plant_dedup_accounting() -> AnalysisReport:
+    """A dedup='pairs' pricing claim whose trace still runs the NAIVE
+    fold: the layout prices the shortened (num_pairs=1, num_edges2=4)
+    two-level aggregation, but the traced program segment-sums all 6
+    original edges -- the priced FLOP saving is bookkeeping, not work."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.graph.dedup import build_dedup_layout
+    src = np.array([3, 4, 4, 3, 2, 3], np.int32)
+    dst = np.array([0, 0, 1, 1, 2, 2], np.int32)
+    lay = build_dedup_layout(src, dst, 6)   # pair (3,4): dsts 0,1 share it
+    assert lay.num_pairs == 1 and lay.num_edges2 == 4
+    s, d = jnp.asarray(src), jnp.asarray(dst)
+
+    def fn(x):
+        return jax.ops.segment_sum(jnp.take(x, s, axis=0), d,
+                                   num_segments=6)
+
+    closed = jax.make_jaxpr(fn)(jnp.ones((6, 8)))
+    report = AnalysisReport()
+    check_dedup_fold(closed, lay, "plant:dedup-accounting", report)
+    return report
+
+
 # -- source plants ----------------------------------------------------------
 
 _SRC_PLANTS = {
@@ -164,6 +189,7 @@ PLANTS: Dict[str, Callable[[], AnalysisReport]] = {
     "donation": plant_donation,
     "collective-bytes": plant_collective_bytes,
     "dynamic-edge-free": plant_dynamic_edge_free,
+    "dedup-accounting": plant_dedup_accounting,
     **{rule: _plant_source(rule) for rule in _SRC_PLANTS},
 }
 

@@ -84,9 +84,24 @@ def block_offsets(block_ids: np.ndarray, nblocks: int
 
 def block_graph(g: Graph, tile_m: int) -> BlockedGraph:
     """Host-side regroup of a destination-sorted graph into row blocks."""
-    src = np.asarray(g.src)
-    dst = np.asarray(g.dst)
-    v = g.num_vertices
+    return block_graph_arrays(np.asarray(g.src), np.asarray(g.dst),
+                              g.num_vertices, tile_m)
+
+
+def block_graph_arrays(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+                       tile_m: int) -> BlockedGraph:
+    """``block_graph`` over raw dst-sorted arrays (no ``Graph`` container).
+
+    Exists for edge lists whose SOURCE ids live outside the destination
+    row space — the dedup two-level layout (graph/dedup.py) gathers from
+    the (V + P)-row ``[x ; partials]`` concatenation while its output rows
+    stay the original V destinations, so a ``Graph`` (which ties both
+    endpoints to one vertex count) cannot carry it.  ``num_vertices`` is
+    the DESTINATION row count only; ``src`` values are unconstrained.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    v = int(num_vertices)
     nblocks = -(-v // tile_m)
     blk = dst // tile_m
     counts, offs = block_offsets(blk, nblocks)

@@ -73,7 +73,7 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
               edge_mask: Optional[jnp.ndarray] = None,
               include_self: bool = True,
               backend: Optional[str] = None,
-              layout=None) -> jnp.ndarray:
+              layout=None, dedup=None) -> jnp.ndarray:
     """h_v = reduce_{u in N(v) (+ v)} x_u              (paper Eq. 1/2 inner term)
 
     Args:
@@ -94,6 +94,12 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
         the slow ad-hoc ``kernels.ops.seg_agg``, which regroups on the host
         per call and cannot run under jit.  Plans always pass it
         (``LayerPlan.agg_layout``).
+      dedup: plan-owned ``graph.dedup.DedupLayout`` two-level layout.
+        When given (sum/mean, unweighted/unmasked only — the planner
+        guarantees this), aggregation runs redundancy-eliminated: level 1
+        computes each matched pair's partial sum once, level 2 segment-sums
+        the shortened edge list over ``[x ; partials]``.  The f32 result is
+        bitwise-identical to the naive fold (see graph/dedup.py).
     """
     assert op in AGGREGATORS, op
     v, f = x.shape
@@ -104,6 +110,31 @@ def aggregate(g: Graph, x: jnp.ndarray, op: str = "mean",
         w = edge_mask if w is None else w * edge_mask
 
     use_pallas = backend is not None and is_pallas(backend)
+
+    if dedup is not None and dedup.num_pairs > 0 and op in ("sum", "mean") \
+            and w is None:
+        # Two-level redundancy-eliminated path (graph/dedup.py).  Cast the
+        # operand to f32 FIRST (exact for bf16/int8-agg inputs) so the pair
+        # partials are the same f32 adds the naive fold's accumulator does.
+        xf = x if x.dtype == jnp.float32 else x.astype(jnp.float32)
+        partials = jnp.take(xf, dedup.pair_left, axis=0) + \
+            jnp.take(xf, dedup.pair_right, axis=0)
+        xp = jnp.concatenate([xf, partials], axis=0)
+        if use_pallas and dedup.blocked is not None:
+            from repro.kernels import ops as kops
+            summed = kops.seg_agg_planned(dedup.blocked, xp, None,
+                                          backend=resolve_backend(backend))
+        else:
+            gathered2 = jnp.take(xp, dedup.src2, axis=0)
+            summed = jax.ops.segment_sum(gathered2, dedup.dst2,
+                                         num_segments=v)
+        if include_self:
+            summed = summed + x
+        if op == "mean":
+            denom = g.in_deg.astype(summed.dtype) + \
+                (1.0 if include_self else 0.0)
+            summed = summed * (1.0 / jnp.maximum(denom, 1.0))[:, None]
+        return summed
     if op == "max" or not use_pallas:
         gathered = jnp.take(x, g.src, axis=0)  # (E, F) -- indexSelect kernel
 

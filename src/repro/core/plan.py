@@ -128,7 +128,8 @@ class GraphExecutionPlan:
                  strategy: str = "ring", axis: str = "data",
                  axes: Tuple[str, str] = ("node", "feat"), machine=None,
                  reorder: str = "none", perm=None, overlap: str = "none",
-                 dtype: str = "f32"):
+                 dtype: str = "f32", dedup: str = "none",
+                 dedup_layout=None):
         self.g = g                   # the EXECUTION graph (renumbered when
                                      # reorder="degree")
         self.layers: Tuple[LayerPlan, ...] = tuple(layers)
@@ -144,6 +145,10 @@ class GraphExecutionPlan:
                                      # schedule; "auto" never survives build)
         self.dtype = dtype           # "f32" | "bf16" | "int8-agg" (resolved
                                      # execution precision; never "auto")
+        self.dedup = dedup           # "none" | "pairs" (resolved two-level
+                                     # redundancy elimination; never "auto",
+                                     # and never "pairs" with zero matches)
+        self.dedup_layout = dedup_layout  # graph.dedup.DedupLayout | None
         # perm[old_id] = new_id (graph.reorder.degree_reorder contract);
         # inv[new_id] = old_id.  Device constants the traced ingress/egress
         # gathers close over -- never recomputed per call.
@@ -218,7 +223,8 @@ class GraphExecutionPlan:
     # -- execution ----------------------------------------------------------
 
     def run_layer(self, params: Dict, x: jnp.ndarray, *, layer: int = 0,
-                  _probe=None, graph: Optional[Graph] = None) -> jnp.ndarray:
+                  _probe=None, graph: Optional[Graph] = None,
+                  dedup_layout=None) -> jnp.ndarray:
         """One planned layer from its conv param subtree ({"lin": ...} or
         {"mlp1": ..., "mlp2": ...}).  Operates in the plan's EXECUTION
         layout: in distributed plans ``x`` must be padded to the partition
@@ -227,15 +233,20 @@ class GraphExecutionPlan:
         overrides the plan's graph for this dispatch (the dynamic serving
         path -- see ``compile(dynamic=True)``); only valid for plain XLA
         unfused local plans, whose dispatch reads nothing but the edge
-        arrays."""
+        arrays.  ``dedup_layout`` likewise substitutes runtime dedup
+        arrays for the plan's baked two-level layout (the dynamic
+        minibatch path); the plan's own layout never applies to an
+        overridden graph."""
         lp = self.layers[layer]
         weights, bias_post = self._split_params(lp, params)
         if self.distributed:
             return self._run_distributed(lp, x, weights, bias_post,
                                          probe=_probe)
+        dedup = dedup_layout if graph is not None or dedup_layout is not None \
+            else self.dedup_layout
         return _execute_layer(self.g if graph is None else graph, lp, x,
                               weights, bias_post=bias_post, probe=_probe,
-                              dtype=self.dtype)
+                              dtype=self.dtype, dedup=dedup)
 
     def _ingress(self, x: jnp.ndarray, *, _probe=None) -> jnp.ndarray:
         """Natural (V, F) features -> the plan's execution layout: the
@@ -274,7 +285,8 @@ class GraphExecutionPlan:
 
     def run_model(self, params: Dict, x: jnp.ndarray, *,
                   _probe=None, compiled: bool = False,
-                  graph: Optional[Graph] = None) -> jnp.ndarray:
+                  graph: Optional[Graph] = None,
+                  dedup_layout=None) -> jnp.ndarray:
         """Full forward: planned layers with ReLU between them.
 
         Accepts ``x`` in the natural (V, F) layout.  Distributed plans pad
@@ -300,14 +312,21 @@ class GraphExecutionPlan:
                     "boundaries; InstrumentedPlan times the compiled "
                     "path separately (run_model(..., compiled=True))")
             if graph is not None:
-                return self.compile(dynamic=True)(params, x, graph)
+                return self.compile(dynamic=True)(params, x, graph,
+                                                  dedup=dedup_layout)
             return self.compile()(params, x)
         if graph is not None:
             self._check_dynamic_ok()
+            if self.dedup == "pairs" and dedup_layout is None:
+                raise ValueError(
+                    "this plan's dedup='pairs' layout was matched on its "
+                    "template graph; dynamic dispatch over a substitute "
+                    "graph needs that block's own layout (pass "
+                    "dedup_layout=, padded to the template's shapes)")
         h = self._ingress(x, _probe=_probe)
         for i in range(self.num_layers):
             h = self.run_layer(params[f"conv{i}"], h, layer=i, _probe=_probe,
-                               graph=graph)
+                               graph=graph, dedup_layout=dedup_layout)
             if i < self.num_layers - 1:
                 h = jax.nn.relu(h)
         return self._egress(h)
@@ -430,7 +449,7 @@ class GraphExecutionPlan:
         h = _execute_layer(self.g, self.layers[layer], x, weights,
                            edge_weight=edge_weight, activation=activation,
                            bias_post=bias_post, probe=_probe,
-                           dtype=self.dtype)
+                           dtype=self.dtype, dedup=self.dedup_layout)
         if self.perm is not None:
             h = jnp.take(h, self.perm, axis=0)
         return h
@@ -521,6 +540,7 @@ class GraphExecutionPlan:
                 "partition": self.partition_kind,
                 "overlap": self.overlap, "dtype": self.dtype,
                 "reorder": self.reorder, "compiled": compiled_ok,
+                "dedup": self.dedup,
                 "agg_bytes": oc.agg_bytes, "agg_flops": oc.agg_flops,
             })
         return out
@@ -563,11 +583,19 @@ class CompiledPlan:
                 return plan.run_model(params, x)
             return plan.run_layer(params, x, layer=layer)
 
-        def fwd_dynamic(params, x, src, dst, in_deg):
+        def fwd_dynamic(params, x, src, dst, in_deg, *ded):
             self._num_traces += 1   # runs at TRACE time only
             g = plan.g._replace(src=src, dst=dst, in_deg=in_deg,
                                 row_ptr=None)
-            return plan.run_model(params, x, graph=g)
+            lay = None
+            if ded:
+                # runtime two-level dedup arrays (shapes fixed by the
+                # plan's template layout; content varies per block)
+                pl, pr, s2, d2 = ded
+                lay = plan.dedup_layout._replace(
+                    pair_left=pl, pair_right=pr, src2=s2, dst2=d2,
+                    blocked=None)
+            return plan.run_model(params, x, graph=g, dedup_layout=lay)
 
         if dynamic:
             self._fn = jax.jit(fwd_dynamic,
@@ -604,12 +632,38 @@ class CompiledPlan:
         return (jnp.asarray(graph.src), jnp.asarray(graph.dst),
                 jnp.asarray(graph.in_deg))
 
-    def __call__(self, params, x, graph: Optional[Graph] = None):
+    def _dedup_args(self, dedup):
+        """Validate + destructure runtime dedup arrays (dynamic mode on a
+        ``dedup='pairs'`` plan).  ``dedup`` is a ``DedupLayout`` (or the
+        4-tuple of its arrays) padded to the template layout's shapes."""
+        t = self.plan.dedup_layout
+        if hasattr(dedup, "pair_left"):
+            dedup = (dedup.pair_left, dedup.pair_right,
+                     dedup.src2, dedup.dst2)
+        pl, pr, s2, d2 = (jnp.asarray(a) for a in dedup)
+        if pl.shape[0] != t.num_pairs or s2.shape[0] != t.num_edges2:
+            raise ValueError(
+                f"dynamic dedup shapes {pl.shape[0]}P/{s2.shape[0]}E2 do "
+                f"not match the bucket template {t.num_pairs}P/"
+                f"{t.num_edges2}E2 -- pad via graph.dedup.pad_dedup_arrays")
+        return (pl, pr, s2, d2)
+
+    def __call__(self, params, x, graph: Optional[Graph] = None,
+                 dedup=None):
         if self.dynamic:
             if graph is None:
                 raise ValueError("dynamic compiled plans take (params, x, "
                                  "graph)")
             args = (x,) + self._graph_args(graph)
+            if self.plan.dedup == "pairs":
+                if dedup is None:
+                    raise ValueError(
+                        "this dynamic plan was compiled with dedup='pairs'; "
+                        "pass the block's padded dedup layout (dedup=)")
+                args = args + self._dedup_args(dedup)
+            elif dedup is not None:
+                raise ValueError("dedup arrays passed to a dedup='none' "
+                                 "compiled plan")
         else:
             if graph is not None:
                 raise ValueError("this compiled plan is static; build it "
@@ -691,10 +745,24 @@ def _quant_err(orig: jnp.ndarray, reduced: jnp.ndarray) -> float:
         orig.astype(jnp.float32) - reduced.astype(jnp.float32))))
 
 
+def _dedup_fused_inputs(dedup, xa):
+    """Level-1 partials + the (V + P)-row concat for a FUSED dedup layer.
+
+    Mirrors ``phases.aggregate``'s dedup path: cast to f32 first (exact),
+    add each matched pair once, stack the partials under the features so
+    the fused kernel's gather (over ``dedup.blocked``, the level-2 edge
+    list) references them like ordinary rows.
+    """
+    xf = xa if xa.dtype == jnp.float32 else xa.astype(jnp.float32)
+    partials = jnp.take(xf, dedup.pair_left, axis=0) + \
+        jnp.take(xf, dedup.pair_right, axis=0)
+    return jnp.concatenate([xf, partials], axis=0)
+
+
 def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
                    edge_weight=None, activation: str = "relu",
                    bias_post=None, probe=None,
-                   dtype: str = "f32") -> jnp.ndarray:
+                   dtype: str = "f32", dedup=None) -> jnp.ndarray:
     """Execute one layer per its plan: fusion > ordering > backend.
 
     ``dtype`` is the plan's resolved execution precision.  ``"f32"`` takes
@@ -705,6 +773,13 @@ def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
     ``"int8-agg"`` fake-quantizes ONLY the aggregation operand (per-row
     symmetric scales via ``phases.quantize_int8``), aggregates the
     int8-representable rows in f32, and leaves combination in full f32.
+
+    ``dedup`` is the plan's two-level pair-redundancy layout
+    (``graph.dedup.DedupLayout``) or None.  Unfused paths hand it to
+    ``phases.aggregate``; the fused path swaps the layer's blocked layout
+    for the layout's level-2 blocking and feeds the kernel the
+    ``[x ; partials]`` concat.  It only applies where the planner admitted
+    it (sum/mean, no edge weights) -- anything else falls back naive.
     """
     entry_err = 0.0
     if dtype == "bf16":
@@ -727,6 +802,14 @@ def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
             xa = phases.quantize_int8(x)
             if probe is not None:
                 agg_err = _quant_err(x, xa)
+        # dedup rides the fused path by swapping in the level-2 blocking
+        # and the [x ; partials] gather source; the in-tile reduce + GEMM
+        # and the self/mean terms (which index the first V rows) are
+        # untouched.
+        fbg, fx = lp.blocked, xa
+        if dedup is not None and dedup.num_pairs > 0 \
+                and dedup.blocked is not None:
+            fbg, fx = dedup.blocked, _dedup_fused_inputs(dedup, xa)
         if len(weights) == 1:
             # Whole layer fused: aggregate(+)combine never leaves the tile.
             # An inline b0 is exact applied post-aggregation here (that is
@@ -735,7 +818,7 @@ def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
                 bias_post if b0 is None else b0 + bias_post)
             h = _phase(
                 probe, "fused_agg_combine",
-                lambda: fused_gcn_layer(lp.blocked, xa, w0, bias,
+                lambda: fused_gcn_layer(fbg, fx, w0, bias,
                                         agg_op=_fused_agg_op(lp),
                                         in_deg=g.in_deg, backend=lp.backend),
                 lp=lp, dims=fused_dims, quant_error=agg_err)
@@ -745,7 +828,7 @@ def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
         # nonlinearity only applies after that matmul.
         h = _phase(
             probe, "fused_agg_combine",
-            lambda: fused_gcn_layer(lp.blocked, xa, w0, b0,
+            lambda: fused_gcn_layer(fbg, fx, w0, b0,
                                     agg_op=_fused_agg_op(lp),
                                     in_deg=g.in_deg, backend=lp.backend),
             lp=lp, dims=fused_dims, quant_error=agg_err)
@@ -769,7 +852,7 @@ def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
                    lambda hh=ha: phases.aggregate(
                        g, hh, op=lp.agg_op, edge_weight=edge_weight,
                        include_self=lp.include_self, backend=lp.backend,
-                       layout=lp.agg_layout),
+                       layout=lp.agg_layout, dedup=dedup),
                    lp=lp, feature_len=int(h.shape[-1]), quant_error=agg_err)
         h = _round(h, dtype)
     else:
@@ -782,7 +865,7 @@ def _execute_layer(g: Graph, lp: LayerPlan, x: jnp.ndarray, weights, *,
                    lambda: phases.aggregate(
                        g, xa, op=lp.agg_op, edge_weight=edge_weight,
                        include_self=lp.include_self, backend=lp.backend,
-                       layout=lp.agg_layout),
+                       layout=lp.agg_layout, dedup=dedup),
                    lp=lp, feature_len=int(x.shape[-1]), quant_error=agg_err)
         h = _round(h, dtype)
         h = _phase(probe, "combine",
@@ -1012,8 +1095,9 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                num_shards: int = 0, strategy: str = "ring",
                axis: str = "data", interpret: Optional[bool] = None,
                machine=None, reorder: str = "none",
-               overlap: str = "none",
-               dtype: str = "f32") -> GraphExecutionPlan:
+               overlap: str = "none", dtype: str = "f32",
+               dedup: str = "none",
+               dedup_pad: Optional[tuple] = None) -> GraphExecutionPlan:
     """Plan a full model (``GCNModelConfig``) over one graph.
 
     Overrides: ``backend`` ("auto" resolves per platform -- see
@@ -1085,6 +1169,43 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
     ``describe()``, recorded per phase by ``plan.instrument()`` (with the
     measured quantization error), and part of the plan cache key.
 
+    The ``dedup=`` contract (redundancy-eliminated aggregation as a
+    planned decision -- GraphACT-style, see ``graph.dedup``):
+
+      * ``"none"`` (default): the naive per-edge fold, unchanged.
+      * ``"pairs"``: ``dedup_layout_for_graph`` runs ONCE at plan build --
+        greedy leading-pair matching over the dst-sorted edge list -- and
+        the plan aggregates two-level: matched pair partials computed once
+        (level 1), then a shortened edge list over ``[x ; partials]``
+        (level 2).  f32 results stay BITWISE-identical to the naive fold,
+        eager and under ``plan.compile()`` (the matching discipline only
+        regroups the provably exact prefix of each segment's left fold).
+        A graph with zero matchable pairs resolves back to "none".
+      * ``"auto"``: priced by ``profile.machine.choose_dedup`` against the
+        plan's ``machine`` -- modeled HBM aggregation bytes of the
+        two-level layout vs. the naive fold at the widest layer's feature
+        length; picks "pairs" only when the modeled saving is material
+        (fanout-regular sampled blocks), "none" on sparse full-graph
+        layers where few destinations share a leading pair.
+
+    Dedup applies to the sum/mean aggregation paths (XLA, both Pallas
+    tiers, and the fused executor); distributed plans and ``max``
+    aggregation coerce it to "none".  The resolved mode is stored on the
+    plan (``plan.dedup``), surfaced in ``describe()``, recorded by
+    ``plan.instrument()`` (``dedup_pairs`` / ``dedup_flops_saved``), and
+    part of the plan cache key.
+
+    ``dedup_pad=(num_pairs, num_edges2)`` pads the template layout's
+    arrays to those static CAPACITIES with sink no-ops on the last vertex
+    row (``graph.dedup.pad_dedup_arrays``) -- the bucket-plan form: a
+    ``compile(dynamic=True)`` callable built from the padded template
+    accepts any sampled block's runtime dedup arrays padded to the same
+    shapes, so ONE compiled train/serve step covers blocks whose matched
+    pair counts vary.  ``num_edges2`` is normally the bucket's full edge
+    capacity and ``num_pairs`` its ``num_edges // 4`` upper bound (a kept
+    pair needs >= 2 matched destinations x 2 edges).  Only meaningful
+    with ``dedup != "none"``.
+
     The ``mesh=`` / ``num_shards=`` contract:
 
       * ``mesh=None`` (default): a local, single-device plan;
@@ -1137,11 +1258,19 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
     if dtype not in ("f32", "bf16", "int8-agg", "auto"):
         raise ValueError(f"unknown dtype {dtype!r}; expected "
                          "'f32' | 'bf16' | 'int8-agg' | 'auto'")
+    if dedup not in ("none", "pairs", "auto"):
+        raise ValueError(f"unknown dedup {dedup!r}; expected "
+                         "'none' | 'pairs' | 'auto'")
+    if dedup_pad is not None:
+        if dedup == "none":
+            raise ValueError("dedup_pad= is only meaningful with "
+                             "dedup='pairs'/'auto'")
+        dedup_pad = (int(dedup_pad[0]), int(dedup_pad[1]))
     spec_key = (cfg.name, cfg.conv, agg, tuple(cfg.hidden_dims),
                 cfg.num_layers, int(in_dim), int(num_classes), backend,
                 use_fused, req_order, _mesh_key(mesh), num_shards, strategy,
                 axis, interpret, machine.name if machine else None, reorder,
-                overlap, dtype)
+                overlap, dtype, dedup, dedup_pad)
 
     def builder():
         # -- locality reorder decision (F4 / §5.1-1), before anything that
@@ -1217,6 +1346,53 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                         fused=lay_fused, machine=machine, dtype=dt)
             for i, dims in enumerate(dims_list)]
 
+        # -- pair-redundancy elimination (a planned decision like dtype):
+        #    the host-side matching runs ONCE here; "auto" prices the
+        #    two-level layout's modeled HBM bytes against the naive fold.
+        #    Distributed plans and max aggregation coerce to "none" (the
+        #    shard halo path folds per shard; max has no shareable adds).
+        dd, dlayout = dedup, None
+        if partition is not None or agg == "max":
+            dd = "none"
+        if dd != "none":
+            from repro.graph.dedup import attach_blocked, \
+                dedup_layout_for_graph
+            lay = dedup_layout_for_graph(g_exec)
+            if dd == "auto":
+                from repro.profile.machine import choose_dedup, \
+                    machine_for_backend
+                dec_machine = machine or machine_for_backend(
+                    resolve_backend(lay_backend))
+                widest = max(dims_list, key=lambda ds: ds[0] * ds[-1])
+                dd = choose_dedup(g_exec.num_vertices, g_exec.num_edges,
+                                  widest[0], num_pairs=lay.num_pairs,
+                                  num_edges2=lay.num_edges2,
+                                  machine=dec_machine, dtype=dt)
+            if dd == "pairs" and lay.num_pairs == 0:
+                dd = "none"                 # nothing matchable: no-op plan
+            if dd == "pairs" and dedup_pad is not None:
+                # bucket form: pad the template layout to the requested
+                # static capacities with sink no-ops (last vertex row)
+                from repro.graph.dedup import pad_dedup_arrays
+                pcap, ecap = dedup_pad
+                pl_, pr_, s2_, d2_ = pad_dedup_arrays(
+                    lay, pcap, ecap, g_exec.num_vertices - 1)
+                lay = lay._replace(
+                    pair_left=jnp.asarray(pl_), pair_right=jnp.asarray(pr_),
+                    src2=jnp.asarray(s2_), dst2=jnp.asarray(d2_),
+                    num_pairs=pcap, num_edges2=ecap)
+            if dd == "pairs":
+                if any(lp.fused and lp.blocked is not None for lp in layers) \
+                        or any(is_pallas(lp.backend) for lp in layers):
+                    tiles = [lp.blocked.tile_m for lp in layers
+                             if lp.fused and lp.blocked is not None]
+                    align = 32 if layers[0].backend == PALLAS_GPU else 8
+                    atile = tiles[0] if tiles else max(
+                        align, min(128, -(-g_exec.num_vertices // align)
+                                   * align))
+                    lay = attach_blocked(lay, atile)
+                dlayout = lay
+
         # -- halo overlap schedule (a planned decision like ordering):
         #    resolved HERE so describe()/instrument()/the cache all state
         #    the schedule dispatch will actually run; local plans have no
@@ -1245,7 +1421,7 @@ def build_plan(g: Graph, cfg, in_dim: int, num_classes: int, *,
                                                       layers[0].backend),
             mesh=mesh, partition=partition, strategy=strategy, axis=axis,
             axes=axes, machine=machine, reorder=decision, perm=perm,
-            overlap=ov, dtype=dt)
+            overlap=ov, dtype=dt, dedup=dd, dedup_layout=dlayout)
 
     return _cached_plan(g, spec_key, builder)
 

@@ -125,6 +125,13 @@ def seg_agg_planned(bg, x: jnp.ndarray, edge_weight=None, *,
     x: (V, F) vertex features; ``edge_weight``: optional (E,) per-edge
     scalar, regrouped into the blocked layout via ``bg.eidx`` (one gather).
     Returns (V, F) -- ``sum_{(u,v) in E} w_uv * x_u`` per destination v.
+
+    The gather source may carry MORE rows than the destination space: a
+    ``dedup="pairs"`` plan (``graph.dedup.DedupLayout``) passes a
+    ``(V+P, F)`` matrix -- the V inputs plus P pair partial sums -- and a
+    blocked layout whose ``src`` ids reach into the partial rows, so the
+    kernel folds the SHORTENED level-2 edge list unchanged; only the
+    first-dim bound differs, never the kernel body.
     """
     backend = resolve_backend(backend)
     if backend == PALLAS_GPU:

@@ -1,27 +1,37 @@
 """GraphSAGE mini-batch training (paper §2: "GraphSAGE only updates a batch
 of vertexes along with their 2-hop neighbors in an iteration").
 
-Couples graph/sampling.two_hop_batch with the plan-dispatched SAGE layers:
-layer 1 runs over the hop-2 block (farthest frontier -> hop-1 inputs),
-layer 2 over the hop-1 block (hop-1 inputs -> seed logits).  Each sampled
-block gets its own ``GraphExecutionPlan`` (built/cached per block graph by
-core/plan.py) — the ordering decision (Table 4) is a property of
-(in_len, out_len, |E|/|V|), which sampling changes (fanout-regular degree),
-so the demo shows the planner re-deciding per block.
+Two training paths:
+
+  * ``SageMiniBatchModel`` / ``train_minibatch_sage`` -- the per-block demo:
+    each sampled block gets its own ``GraphExecutionPlan`` (built/cached per
+    block graph by core/plan.py), showing the planner re-deciding the
+    ordering per block (the Table-4 decision depends on |E|/|V|, which
+    sampling changes).
+  * ``PlannedSageTrainer`` / ``train_minibatch_planned`` -- the production
+    loop: ONE worst-case shape bucket, ONE cached bucket plan, ONE jitted
+    train step.  Every ``data.pipeline.GraphPipeline`` block is padded into
+    the bucket (sink no-ops, exactness contract of
+    ``serve.graph_engine._pad_into``) and dispatched with the graph -- and,
+    on ``dedup="pairs"`` plans, the block's two-level pair layout
+    (graph/dedup.py) -- as RUNTIME arrays: zero retraces after step 1, and
+    checkpoint-resume is exact because the pipeline state IS the step
+    counter (every batch is a pure function of (seed, step)).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import GraphSpec
+from repro.config import GCNModelConfig, GraphSpec
 from repro.core.gcn_layers import SAGEConv
 from repro.core.plan import plan_for_conv
 from repro.graph.sampling import SampledBlock
+from repro.graph.structure import Graph, graph_from_coo
 
 
 class SageMiniBatchModel:
@@ -91,3 +101,278 @@ def train_minibatch_sage(graph, spec: GraphSpec, features, labels, *,
         params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
         losses.append(float(loss))
     return params, losses, model
+
+
+# ---------------------------------------------------------------------------
+# Bucketed, compiled, dedup-aware mini-batch training (the production loop)
+# ---------------------------------------------------------------------------
+
+
+def _bucket_template_graph(n: int, e: int, paired: bool) -> Graph:
+    """Deterministic template with a bucket's static shapes.
+
+    Edge CONTENT is replaced per call by the dynamic compiled plan; only
+    the shapes (and the plan cost model's |V|, |E|) matter.  ``paired``
+    plants one guaranteed matched leading pair (destinations 0 and 1 both
+    drawing from sources {0, 1}) so ``build_plan(dedup="pairs")`` does not
+    coerce to "none" on the template -- the pair CAPACITY the compiled
+    callable actually carries comes from ``dedup_pad``, not from the
+    template's own matches.  Filler edges are per-destination self-loops
+    (unique ``(d, d)`` candidate keys, frequency 1 -> never matched).
+    """
+    if not paired:
+        idx = np.arange(e, dtype=np.int32) % n
+        return graph_from_coo(idx, idx, n)
+    assert n >= 4 and e >= 4, "bucket too small for a paired template"
+    fill = np.arange(e - 4, dtype=np.int32) % (n - 2) + 2
+    src = np.concatenate([np.array([0, 1, 0, 1], np.int32), fill])
+    dst = np.concatenate([np.array([0, 0, 1, 1], np.int32), fill])
+    return graph_from_coo(src, dst, n)
+
+
+class PlannedSageTrainer:
+    """Steady-state mini-batch training through ONE bucketed compiled plan.
+
+    Setup (once): size the worst-case bucket for (batch_size, fanouts)
+    (``serve.graph_engine.default_buckets`` closed form), resolve the
+    ``dedup`` decision -- ``"auto"`` prices the step-0 block's measured
+    pair stats at the bucket's shapes via ``profile.machine.choose_dedup``
+    -- and build the bucket plan (``build_plan(..., dedup=, dedup_pad=)``)
+    plus its compiled forward (``plan.compile(dynamic=True, donate=)``)
+    and ONE jitted SGD train step that differentiates through the plan's
+    trace-pure dispatch.
+
+    Per step (hot loop, no planning): ``GraphPipeline.batch_at(step)``
+    samples the block (pure function of (seed, step) -- deterministic
+    resume for free), the union block is padded into the bucket with sink
+    no-ops, the block's two-level dedup layout is matched on the host and
+    padded to the plan's static capacities (``pad_dedup_arrays``), and
+    everything dispatches through the SAME compiled step.  The plan is
+    re-fetched through ``build_plan`` each step -- a plan-cache HIT
+    (``plan_cache_stats()``), never a rebuild -- and ``retraces`` stays 0
+    after the first step.
+
+    Exactness: the FORWARD (``predict``, and the loss each step computes)
+    is bitwise-identical between ``dedup="pairs"`` and ``dedup="none"`` in
+    f32 -- the leading-pair discipline of graph/dedup.py.  The BACKWARD
+    pass regroups the aggregation adjoint's scatter the same way the
+    forward regroups the fold, so gradients are mathematically equal but
+    round differently in the last ulp; training trajectories across dedup
+    modes therefore agree to f32 tolerance, not bit-for-bit
+    (tests/test_dedup.py bands this with tests/tolerance.py).
+    """
+
+    def __init__(self, graph: Graph, spec: GraphSpec, features, labels, *,
+                 hidden: int = 64, batch_size: int = 8,
+                 fanouts: Tuple[int, int] = (3, 3), lr: float = 0.1,
+                 seed: int = 0, dedup: str = "auto", donate: bool = False,
+                 machine=None):
+        from repro.data.pipeline import GraphPipeline
+        from repro.serve.graph_engine import default_buckets
+
+        self.graph, self.spec = graph, spec
+        self.features = np.asarray(features, np.float32)
+        self.labels = np.asarray(labels, np.int32)
+        self.in_dim = int(self.features.shape[1])
+        self.num_classes = int(spec.num_classes)
+        self.lr = float(lr)
+        self.pipeline = GraphPipeline(graph, spec, batch_size,
+                                      fanouts=tuple(fanouts), seed=seed)
+        self.bucket = default_buckets(
+            tuple(fanouts), seed_levels=(batch_size,),
+            max_inputs=graph.num_vertices)[0]
+        self.cfg = GCNModelConfig(
+            name=f"sage-mb-h{hidden}", conv="sage", aggregator="mean",
+            hidden_dims=(int(hidden),), ordering="auto", num_layers=2)
+        self.pair_cap = self.bucket.num_edges // 4  # >= any block's pairs
+        self.dedup_requested = dedup
+        if dedup == "auto":
+            # price the decision on a REAL block's measured pair stats at
+            # the bucket's static shapes (the template graph is synthetic,
+            # so pricing it would characterize the wrong workload)
+            from repro.profile.machine import choose_dedup, get_machine, \
+                machine_for_backend
+            lay0 = self._block_layout(
+                self._prepare(self.pipeline.batch_at(0)))
+            m = get_machine(machine) if machine is not None \
+                else machine_for_backend("xla")
+            dedup = choose_dedup(
+                self.bucket.num_inputs, self.bucket.num_edges, self.in_dim,
+                num_pairs=lay0.num_pairs, num_edges2=lay0.num_edges2,
+                machine=m)
+        self.dedup = dedup
+        self._template = _bucket_template_graph(
+            self.bucket.num_inputs, self.bucket.num_edges,
+            paired=dedup == "pairs")
+        self._plan_kwargs = dict(backend="xla", fused=False, machine=machine,
+                                 dedup=dedup)
+        if dedup == "pairs":
+            self._plan_kwargs["dedup_pad"] = (self.pair_cap,
+                                              self.bucket.num_edges)
+        plan = self._plan()
+        self.params = plan.init(jax.random.PRNGKey(seed))
+        #: compiled inference forward over the same bucket (predict path)
+        self.fwd = plan.compile(dynamic=True, donate=donate)
+        self._traces = 0
+        self._step_fn = jax.jit(self._make_step(plan))
+        self.losses: list = []
+        self.last_pairs = 0   # matched pairs of the most recent block
+
+    # ------------------------------------------------------------- planning
+
+    def _plan(self):
+        """The bucket plan, through the global plan cache (steady-state
+        steps re-resolve it here -- a cache HIT, never a rebuild)."""
+        from repro.core.plan import build_plan
+        return build_plan(self._template, self.cfg, self.in_dim,
+                          self.num_classes, **self._plan_kwargs)
+
+    def _make_step(self, plan):
+        lr = self.lr
+
+        def step_fn(params, x, src, dst, in_deg, seed_pos, y, *ded):
+            self._traces += 1   # runs at TRACE time only
+
+            def loss_fn(p):
+                g2 = plan.g._replace(src=src, dst=dst, in_deg=in_deg,
+                                     row_ptr=None)
+                lay = None
+                if ded:
+                    pl, pr, s2, d2 = ded
+                    lay = plan.dedup_layout._replace(
+                        pair_left=pl, pair_right=pr, src2=s2, dst2=d2,
+                        blocked=None)
+                logits = plan.run_model(p, x, graph=g2, dedup_layout=lay)
+                logits = jnp.take(logits, seed_pos, axis=0)
+                ll = jax.nn.log_softmax(logits, axis=-1)
+                return -jnp.take_along_axis(ll, y[:, None], axis=-1).mean()
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new, loss
+
+        return step_fn
+
+    @property
+    def retraces(self) -> int:
+        """Train-step traces beyond the expected first (0 = steady state)."""
+        return max(0, self._traces - 1)
+
+    # ---------------------------------------------------------- block prep
+
+    def _prepare(self, batch) -> Dict[str, np.ndarray]:
+        """Union the sampled hops and pad into the bucket's static shapes
+        (sink no-ops: zero feature rows, sink self-loop edges, zero
+        in-degrees -- the ``serve.graph_engine`` exactness contract)."""
+        from repro.serve.graph_engine import union_two_hop
+        frontier, ug, seed_pos = union_two_hop(batch["hop2"], batch["hop1"],
+                                               batch["seeds"])
+        b = self.bucket
+        n, e = len(frontier), ug.num_edges
+        assert b.fits(len(batch["seeds"]), n, e), \
+            "sampled block exceeds its worst-case bucket"
+        sink = b.num_inputs - 1
+        pad_e = b.num_edges - e
+        src = np.concatenate([np.asarray(ug.src, np.int32),
+                              np.full(pad_e, sink, np.int32)])
+        dst = np.concatenate([np.asarray(ug.dst, np.int32),
+                              np.full(pad_e, sink, np.int32)])
+        in_deg = np.zeros(b.num_inputs, np.int32)
+        in_deg[:n] = np.asarray(ug.in_deg, np.int32)
+        x = np.zeros((b.num_inputs, self.in_dim), np.float32)
+        x[:n] = self.features[frontier]
+        return {"x": x, "src": src, "dst": dst, "in_deg": in_deg,
+                "seed_pos": np.asarray(seed_pos, np.int32),
+                "y": self.labels[np.asarray(batch["seeds"])]}
+
+    def _block_layout(self, prep):
+        """Host-side pair matching over the PADDED block (so the virtual
+        partial-row offsets agree with the bucket's vertex count)."""
+        from repro.graph.dedup import build_dedup_layout
+        return build_dedup_layout(prep["src"], prep["dst"],
+                                  self.bucket.num_inputs)
+
+    def _dedup_args(self, prep) -> tuple:
+        if self.dedup != "pairs":
+            return ()
+        from repro.graph.dedup import pad_dedup_arrays
+        lay = self._block_layout(prep)
+        self.last_pairs = lay.num_pairs
+        return tuple(jnp.asarray(a) for a in pad_dedup_arrays(
+            lay, self.pair_cap, self.bucket.num_edges,
+            self.bucket.num_inputs - 1))
+
+    # ------------------------------------------------------------- training
+
+    def step(self) -> float:
+        """One SGD step on the pipeline's next block (hot loop)."""
+        batch = self.pipeline.batch_at(self.pipeline.step)
+        self.pipeline.step += 1
+        prep = self._prepare(batch)
+        self._plan()   # steady-state: plan-cache hit, the decision replays
+        args = tuple(jnp.asarray(prep[k]) for k in
+                     ("x", "src", "dst", "in_deg", "seed_pos", "y"))
+        self.params, loss = self._step_fn(self.params, *args,
+                                          *self._dedup_args(prep))
+        self.losses.append(float(loss))
+        return float(loss)
+
+    def train(self, steps: int, *, checkpointer=None,
+              checkpoint_every: int = 0) -> list:
+        """Run ``steps`` more minibatch steps; returns the full loss list.
+
+        With ``checkpointer`` and ``checkpoint_every=k``, saves every k
+        pipeline steps (the deterministic-resume protocol: restoring any
+        of those checkpoints and continuing reproduces this run's
+        remaining loss stream and final params bitwise)."""
+        for _ in range(int(steps)):
+            self.step()
+            if checkpointer is not None and checkpoint_every and \
+                    self.pipeline.step % checkpoint_every == 0:
+                self.save(checkpointer)
+        return self.losses
+
+    def predict(self, step: Optional[int] = None) -> np.ndarray:
+        """Seed logits for the pipeline block at ``step`` (default: the
+        next one) through the bucket's COMPILED forward
+        (``plan.compile(dynamic=True, donate=)``)."""
+        batch = self.pipeline.batch_at(
+            self.pipeline.step if step is None else int(step))
+        prep = self._prepare(batch)
+        g2 = Graph(src=jnp.asarray(prep["src"]), dst=jnp.asarray(prep["dst"]),
+                   in_deg=jnp.asarray(prep["in_deg"]),
+                   out_deg=jnp.asarray(prep["in_deg"]),
+                   num_vertices=self.bucket.num_inputs)
+        ded = self._dedup_args(prep) or None
+        out = self.fwd(self.params, jnp.asarray(prep["x"]), g2, dedup=ded)
+        return np.asarray(out)[prep["seed_pos"]]
+
+    # ---------------------------------------------------- checkpoint/resume
+
+    def save(self, checkpointer, *, blocking: bool = True) -> None:
+        """Snapshot (params, pipeline step, loss history) at the CURRENT
+        pipeline step -- the step counter is the whole pipeline state."""
+        checkpointer.save(self.pipeline.step, {"params": self.params},
+                          extra={"pipeline": self.pipeline.state_dict(),
+                                 "losses": list(self.losses)},
+                          blocking=blocking)
+
+    def restore(self, checkpointer, step: Optional[int] = None) -> int:
+        """Resume from a checkpoint: restored params + pipeline counter
+        regenerate the exact block stream a never-interrupted run sees
+        (``batch_at`` is a pure function of (seed, step))."""
+        state, at, extra = checkpointer.restore({"params": self.params},
+                                                step=step)
+        self.params = state["params"]
+        self.pipeline.load_state_dict(extra["pipeline"])
+        self.losses = list(extra.get("losses", []))
+        return at
+
+
+def train_minibatch_planned(graph, spec: GraphSpec, features, labels, *,
+                            steps: int = 20, **kw):
+    """Bucketed compiled mini-batch training; returns (params, losses,
+    trainer).  See ``PlannedSageTrainer`` for the steady-state contract."""
+    trainer = PlannedSageTrainer(graph, spec, features, labels, **kw)
+    trainer.train(steps)
+    return trainer.params, trainer.losses, trainer

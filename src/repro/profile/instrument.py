@@ -101,6 +101,15 @@ class PhaseRecord:
     #: stays the analytic cut-edge LOWER BOUND (min_halo_bytes); both
     #: are 0.0 on non-distributed phases.
     wire_collective_bytes: float = 0.0
+    #: pair-redundancy elimination (``dedup="pairs"`` plans): matched pair
+    #: count of the two-level layout this aggregation dispatched over, and
+    #: the analytic adds it eliminated vs. the naive fold at this record's
+    #: feature length (``graph.dedup.DedupLayout.flops_saved``).  Both 0
+    #: on non-aggregation phases and on ``dedup="none"`` plans; the flops/
+    #: bytes columns of a dedup record already price the TWO-LEVEL layout
+    #: (``graph.dedup.dedup_cost``), so these state the delta explicitly.
+    dedup_pairs: int = 0
+    dedup_flops_saved: float = 0.0
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -119,6 +128,8 @@ class PhaseRecord:
             "wall_time_s": self.wall_time_s, "bound": self.bound,
             "dtype": self.dtype, "quant_error": self.quant_error,
             "wire_collective_bytes": self.wire_collective_bytes,
+            "dedup_pairs": self.dedup_pairs,
+            "dedup_flops_saved": self.dedup_flops_saved,
         }
 
 
@@ -175,10 +186,36 @@ class _Probe:
             quant_error=float(meta.get("quant_error", 0.0)),
             wire_collective_bytes=(
                 self._wire_bytes(lp, flen, meta)
-                if name == "distributed" else 0.0)))
+                if name == "distributed" else 0.0),
+            dedup_pairs=self._dedup_layout(name).num_pairs
+            if self._dedup_layout(name) else 0,
+            dedup_flops_saved=float(
+                self._dedup_layout(name).flops_saved(int(flen)))
+            if self._dedup_layout(name) else 0.0))
         return out
 
+    def _dedup_layout(self, phase_name: str):
+        """The plan's two-level layout when this phase dispatched over it
+        (aggregation phases of a resolved ``dedup="pairs"`` plan)."""
+        if phase_name not in ("aggregate", "fused_agg_combine"):
+            return None
+        if getattr(self.plan, "dedup", "none") != "pairs":
+            return None
+        return getattr(self.plan, "dedup_layout", None)
+
     # -- analytic per-phase costs (same models the scheduler prices) --------
+
+    def _agg_cost(self, name, lp, flen):
+        """Aggregation-side analytic cost: the two-level ``dedup_cost``
+        when this phase dispatched over the plan's pair layout (that IS
+        the program the probe timed), ``aggregate_cost`` otherwise."""
+        from repro.core.phases import aggregate_cost
+        lay = self._dedup_layout(name)
+        if lay is not None:
+            from repro.graph.dedup import dedup_cost
+            return dedup_cost(lay, flen, include_self=lp.include_self)
+        return aggregate_cost(self.plan.g, flen,
+                              include_self=lp.include_self)
 
     def _cost(self, name, lp, meta):
         from repro.core.phases import aggregate_cost, combine_cost
@@ -186,7 +223,7 @@ class _Probe:
         v = g.num_vertices
         if name == "aggregate":
             flen = meta["feature_len"]
-            c = aggregate_cost(g, flen, include_self=lp.include_self)
+            c = self._agg_cost(name, lp, flen)
             return c["flops"], c["bytes"], 0.0, flen, 0.0, 0.0
         if name == "combine":
             dims = meta["dims"]
@@ -196,7 +233,7 @@ class _Probe:
             # aggregate + first matmul in one tile: the (V, din) intermediate
             # never round-trips HBM, so its write+read bytes are subtracted.
             din, dout = meta["dims"]
-            agg = aggregate_cost(g, din, include_self=lp.include_self)
+            agg = self._agg_cost(name, lp, din)
             comb = combine_cost(v, (din, dout))
             saved = 2 * v * din * _DTYPE_BYTES
             byt = max(agg["bytes"] + comb["bytes"] - saved, 1)
@@ -289,6 +326,7 @@ _FIELD_TYPES = {
     "wall_time_s": (int, float), "bound": str,
     "dtype": str, "quant_error": (int, float),
     "wire_collective_bytes": (int, float),
+    "dedup_pairs": int, "dedup_flops_saved": (int, float),
 }
 
 
@@ -339,6 +377,29 @@ def validate_report_dict(d: Dict[str, Any]) -> List[str]:
                 if isinstance(rec.get(k), (int, float)) and rec[k] != 0:
                     problems.append(
                         f"phases[{i}].{k}: nonzero on non-distributed phase")
+        if rec.get("phase") not in ("aggregate", "fused_agg_combine"):
+            for k in ("dedup_pairs", "dedup_flops_saved"):
+                if isinstance(rec.get(k), (int, float)) and rec[k] != 0:
+                    problems.append(
+                        f"phases[{i}].{k}: nonzero on non-aggregation phase")
+    # a plan that RESOLVED to dedup="pairs" proved matchable pairs exist at
+    # build time (zero-match graphs coerce back to "none"), so a report
+    # whose aggregation records all carry dedup_pairs == 0 means the
+    # two-level dispatch silently did not run
+    layer_descr = (d.get("plan") or {}).get("layers", [])
+    if any(ld.get("dedup") == "pairs" for ld in layer_descr
+           if isinstance(ld, dict)):
+        agg_recs = [rec for rec in phases_list
+                    if rec.get("phase") in ("aggregate",
+                                            "fused_agg_combine")]
+        if agg_recs and not any(
+                isinstance(rec.get("dedup_pairs"), int)
+                and rec["dedup_pairs"] > 0 for rec in agg_recs):
+            problems.append(
+                "dedup='pairs' plan with dedup_pairs == 0 on every "
+                "aggregation record (matching was possible -- the plan "
+                "resolved to 'pairs' -- but the two-level path did not "
+                "dispatch)")
     reduced = [rec for rec in phases_list
                if rec.get("dtype") in ("bf16", "int8-agg")]
     if reduced and not any(
@@ -526,6 +587,17 @@ class WorkloadReport:
             f"{tot['flops'] / max(1.0, tot['bytes']):.2f} |  | "
             f"{tot['collective_bytes']:.3g} | "
             f"{tot['wall_time_s'] * 1e6:.1f} | 100.0 |")
+        ded = [r for r in self.records if r.dedup_pairs > 0]
+        if ded:
+            saved = sum(r.dedup_flops_saved for r in ded)
+            naive = saved + tot["flops"]
+            lines += [
+                "",
+                f"Dedup: {ded[0].dedup_pairs} matched pairs — "
+                f"{saved:.3e} aggregation FLOPs eliminated "
+                f"({100 * saved / max(naive, 1e-12):.1f}% of the naive "
+                "fold's total)",
+            ]
         exp = sum(r.exposed_collective_time for r in self.records)
         ovl = sum(r.overlapped_collective_time for r in self.records)
         if exp or ovl:
@@ -637,6 +709,16 @@ class WorkloadReport:
             agg = [r for r in recs
                    if r.phase in ("aggregate", "fused_agg_combine",
                                   "distributed")]
+            if "dedup" in d:
+                for r in recs:
+                    if r.phase not in ("aggregate", "fused_agg_combine"):
+                        continue
+                    observed_dd = "pairs" if r.dedup_pairs > 0 else "none"
+                    if d["dedup"] != observed_dd:
+                        out.append(
+                            f"layer {d['layer']}: describe dedup="
+                            f"{d['dedup']} but {r.phase} record carries "
+                            f"dedup_pairs={r.dedup_pairs}")
             for r in agg:
                 if r.backend != d["backend"]:
                     out.append(f"layer {d['layer']}: describe backend="

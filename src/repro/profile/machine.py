@@ -327,3 +327,87 @@ def choose_dtype(num_vertices: int, num_edges: int, feature_len: int,
         return "f32"
     return "bf16" if (f32_s - bf16_s) / f32_s >= DTYPE_SAVING_THRESHOLD \
         else "f32"
+
+
+# --------------------------------------------------------------------------
+# Pair-redundancy elimination as a priced decision (build_plan(dedup="auto"))
+# --------------------------------------------------------------------------
+
+#: minimum modeled fractional aggregation-time saving before
+#: ``choose_dedup`` leaves the naive layout.  Mirrors
+#: ``DTYPE_SAVING_THRESHOLD``: below this the two-level layout's extra
+#: indirection is inside the model's noise.
+DEDUP_SAVING_THRESHOLD = 0.05
+
+
+def dedup_model(num_vertices: int, num_edges: int, feature_len: int, *,
+                num_pairs: int, num_edges2: int,
+                machine: Machine = None,
+                dtype: str = "f32") -> Dict[str, Dict[str, float]]:
+    """Model the aggregation phase naive vs. two-level dedup (graph/dedup.py).
+
+    Aggregation is memory-bound on every preset (paper Table 3), so both
+    layouts are priced as HBM slab traffic over ``machine.hbm_bw`` at the
+    plan dtype's element width:
+
+    * ``"none"``: gather ``E`` neighbor rows + read/write ``V`` rows
+      (``feature_len * B`` bytes each) + ``E`` 8-byte edge indices — the
+      same slab term ``dtype_model`` charges the phase.
+    * ``"pairs"``: gather ``E2`` shortened-list rows + read ``2 * P`` pair
+      members + write ``P`` partials (level 1) + the same ``V`` self
+      read/write, plus the shortened index traffic and the pair-id
+      indirection — the extra gather/indirection cost the eliminated edges
+      must beat.
+
+    ``num_pairs``/``num_edges2`` come from a concrete
+    ``build_dedup_layout`` run on the block (matching is host-side and
+    cheap, so ``"auto"`` prices the REAL layout, not an estimate).
+    Returns ``{"none": {...}, "pairs": {...}}`` with ``agg_bytes``,
+    ``agg_s``, ``flops`` and ``saving`` (fraction of naive time saved).
+    """
+    machine = TPU_V5E if machine is None else get_machine(machine)
+    b = float(DTYPE_BYTES.get(dtype, 4))
+    v, e, f = float(num_vertices), float(num_edges), float(feature_len)
+    p, e2 = float(num_pairs), float(num_edges2)
+    naive_bytes = (e + 2.0 * v) * f * b + e * 8.0
+    dedup_bytes = (e2 + 3.0 * p + 2.0 * v) * f * b + e2 * 8.0 + 2.0 * p * 4.0
+    naive_s = naive_bytes / machine.hbm_bw
+    dedup_s = dedup_bytes / machine.hbm_bw
+    saving = (naive_s - dedup_s) / naive_s if naive_s > 0 else 0.0
+    return {
+        "none": {"agg_bytes": naive_bytes, "agg_s": naive_s,
+                 "flops": (e + v) * f, "saving": 0.0},
+        "pairs": {"agg_bytes": dedup_bytes, "agg_s": dedup_s,
+                  "flops": (p + e2 + v) * f, "saving": saving},
+    }
+
+
+def choose_dedup(num_vertices: int, num_edges: int, feature_len: int, *,
+                 num_pairs: int, num_edges2: int,
+                 machine: Machine = None, dtype: str = "f32") -> str:
+    """Resolve ``build_plan(dedup="auto")`` to ``"none"`` or ``"pairs"``.
+
+    Prices the block's REAL matching result (``dedup_model``) against this
+    ``Machine``'s HBM bandwidth and picks ``"pairs"`` only when the modeled
+    aggregation-time saving clears ``DEDUP_SAVING_THRESHOLD``.  The
+    decision provably flips between workloads on one machine: a
+    fanout-regular sampled block (hub-heavy — many destinations share
+    their leading neighbor pair, so matching removes a large edge
+    fraction) picks ``"pairs"``, while a sparse full-graph layer (pairs
+    scarce — the shortened list barely shrinks but still pays the pair
+    gather + partial write) stays ``"none"``.
+
+    >>> choose_dedup(96, 128, 128, num_pairs=8, num_edges2=80,
+    ...              machine=TPU_V5E)
+    'pairs'
+    >>> choose_dedup(96, 128, 128, num_pairs=2, num_edges2=126,
+    ...              machine=TPU_V5E)
+    'none'
+    """
+    if num_pairs <= 0:
+        return "none"
+    model = dedup_model(num_vertices, num_edges, feature_len,
+                        num_pairs=num_pairs, num_edges2=num_edges2,
+                        machine=machine, dtype=dtype)
+    return "pairs" if model["pairs"]["saving"] >= DEDUP_SAVING_THRESHOLD \
+        else "none"
